@@ -1,0 +1,31 @@
+"""Fig. 1(b): op/latency/energy breakdown of RetNet-1.3B on a Jetson-class
+edge reference, LISO vs SILO."""
+
+from repro.core import edge_model as em
+from repro.core.hsa import HSA
+
+from benchmarks.bench_lib import emit
+
+SPEC = em.retnet_model_spec(params=1.34e9, n_layers=24, d_model=2048,
+                            n_heads=8, name="retnet-1.3b")
+
+
+def run() -> None:
+    for scen in (em.LISO, em.SILO):
+        r = em.run_scenario(SPEC, em.JETSON_ORIN_NANO, HSA, scen,
+                            prefill_bits=16.0, decode_bits=16.0)
+        dec_lat = r.decode.latency_s / r.latency_s
+        dec_en = r.decode.energy_j / r.energy_j
+        emit(f"fig1.{scen.name}.decode_latency_share", 0.0,
+             f"{dec_lat:.3f} (paper: >0.8 LISO incl. framework overhead)")
+        emit(f"fig1.{scen.name}.decode_energy_share", 0.0, f"{dec_en:.3f}")
+        util = (SPEC.macs_per_token * scen.tokens_out
+                / r.decode.latency_s / em.JETSON_ORIN_NANO.peak_mac_per_s)
+        emit(f"fig1.{scen.name}.decode_peak_utilization", 0.0,
+             f"{util:.4f} (paper: ~0.017)")
+        emit(f"fig1.{scen.name}.prefill_bound", 0.0, r.prefill.bound)
+        emit(f"fig1.{scen.name}.decode_bound", 0.0, r.decode.bound)
+
+
+if __name__ == "__main__":
+    run()

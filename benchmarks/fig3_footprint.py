@@ -1,0 +1,37 @@
+"""Fig. 3: Llama-2 7B vs RetNet 6.7B normalized latency/energy vs output
+length — O(n) KV cache vs O(1) retention state."""
+
+from repro.core import edge_model as em
+from repro.core.hsa import HSA
+
+from benchmarks.bench_lib import emit
+
+LLAMA = em.attention_model_spec(params=6.7e9, n_layers=32, d_model=4096,
+                                n_kv_heads=32, head_dim=128, avg_context=1024,
+                                name="llama2-7b")
+RETNET = em.retnet_model_spec(params=6.7e9, n_layers=32, d_model=4096,
+                              n_heads=16, name="retnet-6.7b")
+
+
+def run() -> None:
+    for n_out in (128, 512, 2048):
+        scen = em.Scenario(f"gen{n_out}", 64, n_out)
+        import dataclasses
+        llama_ctx = dataclasses.replace(
+            LLAMA, state_bytes_per_token=LLAMA.kv_growth_bytes_per_token
+            * (64 + n_out / 2))
+        rl = em.run_scenario(llama_ctx, em.JETSON_ORIN_NANO, HSA, scen,
+                             prefill_bits=16.0, decode_bits=16.0)
+        rr = em.run_scenario(RETNET, em.JETSON_ORIN_NANO, HSA, scen,
+                             prefill_bits=16.0, decode_bits=16.0)
+        emit(f"fig3.latency_ratio_llama_over_retnet.n{n_out}", 0.0,
+             f"{rl.latency_s / rr.latency_s:.3f}")
+        emit(f"fig3.energy_ratio_llama_over_retnet.n{n_out}", 0.0,
+             f"{rl.energy_j / rr.energy_j:.3f}")
+    emit("fig3.retnet_state_bytes", 0.0, f"{RETNET.state_bytes_per_token:.3e}")
+    emit("fig3.llama_kv_read_at_1k_ctx", 0.0,
+         f"{LLAMA.state_bytes_per_token:.3e}")
+
+
+if __name__ == "__main__":
+    run()

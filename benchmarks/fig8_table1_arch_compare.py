@@ -1,0 +1,44 @@
+"""Fig. 8 + Table I: conv-SA vs vector-unit vs HSA on the paper's accelerator
+(256 PEs @ 500 MHz, DDR5 51.2 GB/s), end-to-end RetNet-1.3B.
+
+Table I values (paper): tokens/s LISO 90.2/138.3/138.3, SILO 11.8/37.6/37.6;
+tokens/J LISO 1060.7/719.1/1060.7, SILO 21.83/21.6/21.83.  Table I isolates
+the *architecture* (all three at INT8 decode); HSA's MXINT4 shows up in
+Table II.  Calibration: EXPERIMENTS.md §Paper-claims.
+"""
+
+from repro.core import edge_model as em
+from repro.core.hsa import CONV_SA, HSA, VECTOR_UNIT
+
+from benchmarks.bench_lib import emit
+
+SPEC = em.retnet_model_spec(params=1.34e9, n_layers=24, d_model=2048,
+                            n_heads=8, name="retnet-1.3b")
+PAPER = {
+    ("conv_sa", "LISO"): (90.2, 1060.7), ("conv_sa", "SILO"): (11.8, 21.83),
+    ("vector_unit", "LISO"): (138.3, 719.1), ("vector_unit", "SILO"): (37.6, 21.6),
+    ("hsa", "LISO"): (138.3, 1060.7), ("hsa", "SILO"): (37.6, 21.83),
+}
+
+
+def run() -> None:
+    for arch in (CONV_SA, VECTOR_UNIT, HSA):
+        for scen in (em.LISO, em.SILO):
+            r = em.run_scenario(SPEC, em.PAPER_ACCEL, arch, scen,
+                                decode_bits=8.0)   # Table I: int8 for all
+            ts, tj = PAPER[(arch.name, scen.name)]
+            emit(f"table1.{arch.name}.{scen.name}.tokens_per_s", 0.0,
+                 f"{r.tokens_per_s:.1f} (paper {ts})")
+            emit(f"table1.{arch.name}.{scen.name}.tokens_per_J", 0.0,
+                 f"{r.tokens_per_j:.1f} (paper {tj})")
+        # Fig. 8 energy story: prefill energy LISO
+        r = em.run_scenario(SPEC, em.PAPER_ACCEL, arch, em.LISO,
+                            decode_bits=8.0)
+        emit(f"fig8.{arch.name}.prefill_energy_J", 0.0,
+             f"{r.prefill.energy_j:.3f}")
+        emit(f"fig8.{arch.name}.decode_latency_s_SILO", 0.0,
+             f"{em.run_scenario(SPEC, em.PAPER_ACCEL, arch, em.SILO, decode_bits=8.0).decode.latency_s:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Pallas kernel microbench: block-config sweep of the MXINT4 dequant-matmul.
+
+No TPU in this container, so per-config wall time is interpret-mode (slow,
+relative only); the *structural* numbers — HBM bytes per output tile,
+arithmetic intensity, VMEM working set per BlockSpec — are exact and are what
+the §Perf block-shape choices were made from.
+"""
+
+import numpy as np
+
+from repro.core import mxint4 as mx
+from repro.core.mxint4 import GROUP_SIZE
+
+from benchmarks.bench_lib import emit
+
+
+def analyze(m, k, n, bm, bn, bk) -> dict:
+    w_bytes = k * n * mx_bits() / 8
+    x_bytes = m * k * 4
+    out_bytes = m * n * 4
+    flops = 2 * m * k * n + k * n * 2          # dot + dequant muls
+    vmem = (bm * bk * 4) + (bk * bn // 2) + (bk * bn // (2 * GROUP_SIZE)) \
+        + bm * bn * 4                          # x + packed + exps + acc
+    return {
+        "hbm_bytes": w_bytes + x_bytes + out_bytes,
+        "intensity": flops / (w_bytes + x_bytes + out_bytes),
+        "vmem_bytes": vmem,
+    }
+
+
+def mx_bits() -> float:
+    return 4.25
+
+
+def run() -> None:
+    # decode matvec shapes (the paper's MVM) across block configs
+    for (m, k, n) in ((8, 4096, 4096), (8, 4096, 14336), (128, 7168, 2048)):
+        for (bm, bn, bk) in ((8, 128, 512), (8, 256, 512), (8, 512, 1024)):
+            a = analyze(m, k, n, bm, bn, bk)
+            emit(f"kernel.mxint4[{m}x{k}x{n}]b{bm}_{bn}_{bk}", 0.0,
+                 f"AI={a['intensity']:.2f}flops/B "
+                 f"vmem={a['vmem_bytes']/1024:.0f}KiB "
+                 f"hbm={a['hbm_bytes']/1e6:.1f}MB")
+    # memory-bound check: decode AI << v5e ridge (197e12/819e9 ~ 240)
+    a = analyze(8, 4096, 4096, 8, 256, 512)
+    emit("kernel.decode_is_memory_bound", 0.0,
+         f"AI={a['intensity']:.1f} << ridge 240 -> HBM-bound, "
+         "EMA cut = speedup (C2)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,111 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run.
+
+    compute term    = MODEL/HLO FLOPs / (chip peak 197 TF/s)
+    memory term     = HBM bytes / (819 GB/s)
+    collective term = per-chip wire bytes / (50 GB/s ICI link)
+
+FLOPs/bytes: analytic (runtime/analysis.py — exact trip counts; XLA's
+cost_analysis counts scan bodies once, verified) with the raw HLO numbers as
+a cross-check column.  Collectives: parsed from the partitioned HLO with
+while-loop trip-count correction (launch/dryrun.py).
+
+Also reports MODEL_FLOPS / HLO_FLOPS_corrected-ish via the hlo column, the
+dominant term, and a roofline fraction:
+
+    projected_step  = max(compute, memory, collective)   (perfect overlap)
+    bound_step      = max(compute term, ideal-memory term)
+    fraction        = bound_step / projected_step
+"""
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.runtime import analysis as an
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh: str = "single", policy: str = "baseline"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("policy", "baseline") != policy:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec["status"] != "ok":
+        return None
+    cfg = configs.get_config(rec["arch"])
+    shape = configs.SHAPES[rec["shape"]]
+    n = rec["n_devices"]
+    wl = an.cell_workload(cfg, shape, n)
+
+    compute = wl.compute_term()
+    memory = wl.memory_term()
+    wire = sum(v["wire_bytes"] for v in rec.get("collectives", {}).values())
+    coll = wire / an.ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    # Cross-pod (DCN) term, multi-pod train cells: the pod axis carries the
+    # DP gradient reduction — 2*(g-1)/g * sharded grad bytes per chip.
+    # int8 error-feedback compression (optim/compression.py) divides by 4.
+    dcn = 0.0
+    if rec["mesh"] != "single" and shape.kind == "train":
+        pc = an.param_counts(cfg)
+        grad_bytes_per_chip = pc.total * 4.0 / n
+        dcn = 2 * grad_bytes_per_chip * 0.5 / an.DCN_BW
+        terms["dcn"] = dcn
+    dominant = max(terms, key=terms.get)
+    projected = max(terms.values())
+
+    # ideal memory bound: weights(+cache) only once, no resharding waste
+    if shape.kind == "decode":
+        bound = max(compute, memory)       # analytic memory is already ideal
+    else:
+        bound = compute
+    fraction = min(1.0, bound / projected) if projected else 0.0
+
+    hlo_flops = rec["cost"].get("flops", 0.0)
+    hlo_bytes = rec["cost"].get("bytes accessed", 0.0)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant, "fraction": fraction,
+        "model_flops": wl.model_flops,
+        "hlo_flops_raw": hlo_flops,
+        "hlo_bytes_raw": hlo_bytes,
+        "mem_gb_per_dev": rec["memory"].get("total_size_in_bytes", 0) / 1e9,
+        "collectives": {k: round(v["wire_bytes"] / 1e9, 3)
+                        for k, v in rec.get("collectives", {}).items()},
+    }
+
+
+def run(mesh: str = "single", policy: str = "baseline") -> list[dict]:
+    rows = []
+    print("arch,shape,compute_ms,memory_ms,collective_ms,dominant,"
+          "fraction,mem_GB/dev")
+    for rec in load_cells(mesh, policy):
+        if rec["status"] == "skipped":
+            print(f"{rec['arch']},{rec['shape']},skipped:"
+                  f" {rec['reason'][:60]}")
+            continue
+        row = roofline_row(rec)
+        if row is None:
+            print(f"{rec['arch']},{rec['shape']},ERROR")
+            continue
+        rows.append(row)
+        print(f"{row['arch']},{row['shape']},"
+              f"{row['compute_s']*1e3:.2f},{row['memory_s']*1e3:.2f},"
+              f"{row['collective_s']*1e3:.2f},{row['dominant']},"
+              f"{row['fraction']:.3f},{row['mem_gb_per_dev']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -1,0 +1,49 @@
+"""Benchmark entrypoint: one function per paper table/figure, CSV output
+``name,us_per_call,derived`` (+ the roofline table if dry-run artifacts
+exist).
+
+    PYTHONPATH=src python -m benchmarks.run            # all paper tables
+    PYTHONPATH=src python -m benchmarks.run roofline   # roofline only
+"""
+
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks import (fig1_breakdown, fig3_footprint,
+                            fig8_table1_arch_compare, kernel_bench, roofline,
+                            table2_sota, table3_quant_quality, table5_dequant)
+
+    suites = {
+        "fig1": fig1_breakdown.run,
+        "fig3": fig3_footprint.run,
+        "fig8_table1": fig8_table1_arch_compare.run,
+        "table2": table2_sota.run,
+        "table3": table3_quant_quality.run,
+        "table5": table5_dequant.run,
+        "kernels": kernel_bench.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and only not in (name, "all"):
+            continue
+        fn()
+
+    if only in (None, "all", "roofline"):
+        art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                           "dryrun")
+        if glob.glob(os.path.join(art, "*__single.json")):
+            print("\n# roofline (single-pod 16x16, baseline policy)")
+            roofline.run("single")
+        else:
+            print("\n# roofline: no dry-run artifacts yet "
+                  "(python -m repro.launch.dryrun --all)")
+
+
+if __name__ == "__main__":
+    main()

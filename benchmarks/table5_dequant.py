@@ -1,0 +1,45 @@
+"""Table V: dequantization-scaling hardware overhead, 4-bit shift vs INT8 vs
+FP16 scales.
+
+The paper's numbers are silicon area/power (shift register vs multiplier):
+4b-shift 1.0x, INT8 10.33x area / 7.19x power, FP16 15.96x / 9.60x.  We
+report those constants alongside what this framework *can* measure: per-format
+dequant op counts/bytes in the kernel's dataflow and measured dequant wall
+time on CPU (directionally consistent: shifts are cheapest).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mxint4 as mx
+
+from benchmarks.bench_lib import emit, time_fn
+
+PAPER = {"4bit_shift": (1.0, 1.0), "int8": (10.33, 7.19), "fp16": (15.96, 9.60)}
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(4096, 4096)).astype(np.float32) * 0.02)
+
+    q4 = mx.quantize_mxint4(w)
+    t_shift = time_fn(jax.jit(lambda q: mx.dequantize_mxint4(q, jnp.float32)), q4)
+    mant8, s8 = jnp.clip(jnp.round(w / 0.001), -127, 127).astype(jnp.int8), 0.001
+    t_int8 = time_fn(jax.jit(lambda m: m.astype(jnp.float32) * s8), mant8)
+    mant, sc = mx.quantize_int4_fp16_scale(w)
+    t_fp16 = time_fn(jax.jit(mx.dequantize_int4_fp16_scale), mant, sc)
+
+    for name, t in (("4bit_shift", t_shift), ("int8", t_int8), ("fp16", t_fp16)):
+        a, p = PAPER[name]
+        emit(f"table5.dequant.{name}", t,
+             f"paper_area={a}x paper_power={p}x")
+    # wire bytes per weight (the EMA side of the trade)
+    emit("table5.bits_per_weight.mxint4", 0.0,
+         f"{q4.nbytes_streamed() * 8 / w.size:.2f}")
+    emit("table5.bits_per_weight.int4_fp16scale", 0.0,
+         f"{(mant.size // 2 + sc.size * 2) * 8 / w.size:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Distributed training demo on a virtual 8-device mesh: FSDP/TP sharding,
+checkpointing, failure injection, elastic re-mesh, straggler watch.
+
+Must own jax device-count before init, so it re-execs itself with XLA_FLAGS:
+
+    PYTHONPATH=src python examples/distributed_train.py
+"""
+
+import os
+import subprocess
+import sys
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    sys.exit(subprocess.run([sys.executable, __file__], env=env).returncode)
+
+sys.argv = [
+    "train", "--arch", "internlm2-1.8b", "--reduced",
+    "--steps", "16", "--batch", "8", "--seq", "64",
+    "--mesh", "tiny",                 # 2x2: data x model
+    "--ckpt-dir", "/tmp/repro_dist_demo",
+    "--ckpt-every", "5",
+    "--fail-at", "8",                 # kill a host mid-run -> elastic re-mesh
+]
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Edge inference — the paper's LISO/SILO evaluation, end to end (C1-C6).
+
+Runs both scenarios (scaled for CPU) through the real quantized serving stack
+and then projects the same workload onto the paper's 28nm accelerator and a
+TPU v5e chip with the analytic edge model, reproducing the Table II metrics.
+
+    PYTHONPATH=src python examples/edge_inference.py [--scale 0.05]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import edge_model as em
+from repro.core.hsa import HSAConfig, HSAEngine
+from repro.launch.serve import generate
+from repro.models import deploy, lm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.04,
+                    help="scale of the paper's 750/50 token counts")
+    args = ap.parse_args()
+
+    cfg = configs.get_config("retnet-1.3b").reduced()
+    params, _, paths = lm.init(cfg, jax.random.key(0))
+    served = deploy.deploy_quantize(params, paths)
+    engine = HSAEngine(HSAConfig())
+
+    print("== measured (reduced model, CPU, real quantized stack) ==")
+    for scen in (em.LISO, em.SILO):
+        n_in = max(2, int(scen.tokens_in * args.scale))
+        n_out = max(2, int(scen.tokens_out * args.scale))
+        prompts = jax.random.randint(jax.random.key(1), (1, n_in), 1,
+                                     cfg.vocab_size, dtype=jnp.int32)
+        _, t_p, t_d = generate(cfg, served, engine, prompts, n_out)
+        total = n_in + n_out
+        print(f"  {scen.name}: in/out {n_in}/{n_out}  "
+              f"prefill {t_p*1e3:.0f}ms decode {t_d/n_out*1e3:.1f}ms/tok  "
+              f"tokens/s {total/(t_p+t_d):.2f}")
+
+    print("== projected (paper's 28nm accelerator, DDR5 51.2 GB/s) ==")
+    spec = em.retnet_model_spec(params=1.34e9, n_layers=24, d_model=2048,
+                                n_heads=8)
+    for scen, paper in ((em.LISO, 247.38), (em.SILO, 116.55)):
+        r = em.run_scenario(spec, em.PAPER_ACCEL, em.HSA, scen)
+        print(f"  {scen.name}: {r.tokens_per_s:.1f} tok/s, "
+              f"{r.tokens_per_s_per_mm2(em.PAPER_ACCEL):.1f} tok/s/mm^2 "
+              f"(paper {paper}), decode {r.decode_mj_per_token:.1f} mJ/tok")
+
+    print("== projected (one TPU v5e chip, HBM 819 GB/s) ==")
+    v5e = em.HardwareSpec(name="tpu-v5e", peak_mac_per_s=98.5e12,
+                          dram_bw=819e9, area_mm2=float("nan"))
+    for scen in (em.LISO, em.SILO):
+        r = em.run_scenario(spec, v5e, em.HSA, scen)
+        print(f"  {scen.name}: {r.tokens_per_s:.0f} tok/s "
+              f"(decode {r.decode.latency_s/scen.tokens_out*1e3:.2f} ms/tok, "
+              f"{r.decode.bound}-bound)")
+
+
+if __name__ == "__main__":
+    main()

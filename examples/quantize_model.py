@@ -1,0 +1,89 @@
+"""Full PTQ pipeline (paper Section III): calibrate -> SmoothQuant ->
+MXINT4/INT8 deploy -> quality report.
+
+    PYTHONPATH=src python examples/quantize_model.py [--arch qwen3-8b]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import smoothquant as sq
+from repro.core.hsa import HSAConfig, HSAEngine
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.models import deploy, lm
+
+
+def calibrate_and_smooth(cfg, params, batches):
+    """Collect per-channel activation absmax at each block input and fold
+    SmoothQuant scales into (ln gamma, first-layer weights) pairs."""
+    engine = HSAEngine(HSAConfig(prefill_format="fp", decode_format="fp"))
+    absmax = None
+    for batch in batches:
+        # calibration proxy: absmax of the embedding stream (block input)
+        x = params["embed"][batch["tokens"]]
+        cur = sq.collect_act_absmax(x)
+        absmax = cur if absmax is None else sq.merge_absmax(absmax, cur)
+
+    # fold into every block's ln1 gamma + first projection (wq or in_proj)
+    n_folded = 0
+    blocks = params["blocks"]
+    first_proj = next(k for k in ("attn", "mamba", "ret")
+                      if k in blocks)
+    wkey = {"attn": "wq", "mamba": "in_proj", "ret": "wq"}[first_proj]
+    gamma = blocks["ln1"]["g"]
+    w = blocks[first_proj][wkey]["w"]
+
+    def fold_one(g, ww):
+        g2, w2, _ = sq.smooth_linear_pair(g, ww, absmax)
+        return g2, w2
+
+    g2, w2 = jax.vmap(fold_one)(gamma, w)
+    blocks["ln1"]["g"] = g2
+    blocks[first_proj][wkey]["w"] = w2
+    n_folded = g2.shape[0]
+    return params, n_folded
+
+
+def logit_kl(cfg, p_ref, p_test, engine_ref, engine_test, batch):
+    ref, _ = lm.forward_prefill(p_ref, batch, cfg, engine_ref,
+                                cache_len=batch["tokens"].shape[1] + 2)
+    tst, _ = lm.forward_prefill(p_test, batch, cfg, engine_test,
+                                cache_len=batch["tokens"].shape[1] + 2)
+    ref = jax.nn.log_softmax(ref.astype(jnp.float32), -1)
+    tst = jax.nn.log_softmax(tst.astype(jnp.float32), -1)
+    return float(jnp.mean(jnp.sum(jnp.exp(ref) * (ref - tst), axis=-1)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    args = ap.parse_args()
+    cfg = configs.get_config(args.arch).reduced()
+
+    params, _, paths = lm.init(cfg, jax.random.key(0))
+    data = SyntheticPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=48,
+                                        global_batch=4))
+    batches = [jax.tree.map(jnp.asarray, data.batch(i)) for i in range(4)]
+
+    print(f"[ptq] calibrating {cfg.name} on {len(batches)} batches")
+    params, n = calibrate_and_smooth(cfg, params, batches)
+    print(f"[ptq] SmoothQuant folded into {n} layers")
+
+    served = deploy.deploy_quantize(params, paths)
+    fp = HSAEngine(HSAConfig(prefill_format="fp", decode_format="fp"))
+    w8 = HSAEngine(HSAConfig())
+    w4 = HSAEngine(HSAConfig(prefill_format="mxint4"))
+
+    eval_batch = {"tokens": batches[0]["tokens"][:2]}
+    kl8 = logit_kl(cfg, params, served, fp, w8, eval_batch)
+    kl4 = logit_kl(cfg, params, served, fp, w4, eval_batch)
+    print(f"[ptq] logit KL vs FP: W8A8={kl8:.5f}  W4A8(MXINT4)={kl4:.5f}")
+    print("[ptq] (paper Table III: W4A8 MXINT4 tracks W8A8 closely; "
+          "naive INT4 would collapse)")
+
+
+if __name__ == "__main__":
+    main()

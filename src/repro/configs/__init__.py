@@ -1,0 +1,85 @@
+"""Architecture registry + per-cell `input_specs()`.
+
+`--arch <id>` anywhere in the launch layer resolves through `get_config`.
+`input_specs(cfg, shape)` returns weak-type-correct ShapeDtypeStruct stand-ins
+for every model input of that workload cell — shardable, no device allocation
+(the multi-pod dry-run pattern).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import (ALL_SHAPES, DECODE_32K, LONG_500K,
+                                 PREFILL_32K, TRAIN_4K, InputShape, ModelConfig)
+
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.deepseek_v3_671b import CONFIG as _dsv3
+from repro.configs.olmoe_1b_7b import CONFIG as _olmoe
+from repro.configs.internlm2_1_8b import CONFIG as _internlm2
+from repro.configs.qwen1_5_4b import CONFIG as _qwen15
+from repro.configs.qwen3_8b import CONFIG as _qwen3
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.seamless_m4t_medium import CONFIG as _seamless
+from repro.configs.llava_next_34b import CONFIG as _llava
+from repro.configs.retnet_1_3b import CONFIG as _retnet13
+from repro.configs.retnet_6_7b import CONFIG as _retnet67
+
+# The 10 assigned architectures (the 40-cell grid) + the paper's own models.
+ASSIGNED = (
+    "hymba-1.5b", "falcon-mamba-7b", "deepseek-v3-671b", "olmoe-1b-7b",
+    "internlm2-1.8b", "qwen1.5-4b", "qwen3-8b", "starcoder2-15b",
+    "seamless-m4t-medium", "llava-next-34b",
+)
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c for c in (
+        _hymba, _falcon_mamba, _dsv3, _olmoe, _internlm2, _qwen15, _qwen3,
+        _starcoder2, _seamless, _llava, _retnet13, _retnet67)
+}
+
+SHAPES: dict[str, InputShape] = {s.name: s for s in ALL_SHAPES}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def cell_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Is this (arch x shape) cell runnable?  (False, reason) documents skips."""
+    if shape.kind == "decode" and shape.seq_len > 32768 and not cfg.sub_quadratic:
+        return False, ("long_500k needs sub-quadratic attention; "
+                       f"{cfg.name} is full-attention (DESIGN.md §4)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                local_batch: int | None = None) -> dict:
+    """ShapeDtypeStructs for the data inputs of one workload cell.
+
+    `local_batch` overrides the global batch (smoke tests / examples run the
+    reduced batch on one host).  Decode caches are built separately via
+    ``jax.eval_shape(lm.make_decode_cache, ...)`` in the launch layer.
+    """
+    b = local_batch or shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.param_dtype)
+
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        return specs
+
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, min(cfg.frontend_tokens, s), cfg.d_model), dt)
+    if cfg.is_encdec:
+        specs["src_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    return specs

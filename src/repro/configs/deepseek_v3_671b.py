@@ -1,0 +1,35 @@
+"""deepseek-v3-671b — MLA + 256-expert MoE + MTP [arXiv:2412.19437; hf].
+
+61L d_model=7168 128H (GQA kv=128) d_ff=2048 vocab=129280, MoE 256e top-8,
+1 shared expert, MLA (q_lora 1536, kv_lora 512, nope 128, rope 64, v 128),
+first 3 layers dense (d_ff 18432), depth-1 MTP head.  The assignment's
+d_ff=2048 is the routed-expert hidden size (moe_d_ff); dense layers use the
+published 18432.  Decode uses absorbed-MLA (DESIGN.md §8).  Full attention =>
+long_500k skipped.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=18432,
+    vocab_size=129280,
+    attn_type="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    n_experts=256,
+    top_k=8,
+    moe_d_ff=2048,
+    n_shared_experts=1,
+    first_dense_layers=3,
+    mtp=True,
+)

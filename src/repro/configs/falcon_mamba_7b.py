@@ -1,0 +1,25 @@
+"""falcon-mamba-7b — attention-free Mamba-1 [arXiv:2410.05355; unverified].
+
+64L d_model=4096 (attn-free) d_ff=0 vocab=65024, ssm_state=16.
+Pure SSM stack: each layer = RMSNorm + mamba block (no separate FFN; d_ff=0
+per the assignment).  No RoPE (C4 unit gated off — DESIGN.md §4), O(1) decode
+state => runs the long_500k cell.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=16,          # unused (attn-free); kept for param-counting helpers
+    n_kv_heads=16,
+    d_ff=0,
+    vocab_size=65024,
+    rope=False,
+    ssm_state=16,
+    d_inner=8192,
+    dt_rank=256,
+    ssm_chunk=128,
+)

@@ -1,0 +1,28 @@
+"""hymba-1.5b — hybrid parallel attention + mamba heads [arXiv:2411.13676; hf].
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Hybrid block: attention and SSM branches in parallel on the same input, each
+branch output RMSNorm'd then averaged (simplified from Hymba's meta-token +
+per-head scheme — DESIGN.md §8).  Sliding window 1024 everywhere except
+first/middle/last layers (full attention in prefill; decode degrades those to
+the window — the long_500k feasibility deviation noted in DESIGN.md §4).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    sliding_window=1024,
+    ssm_state=16,
+    d_inner=3200,
+    dt_rank=100,
+    ssm_chunk=128,
+)

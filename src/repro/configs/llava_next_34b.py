@@ -1,0 +1,23 @@
+"""llava-next-34b — VLM backbone, anyres tiling [hf:llava-hf; unverified].
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+Vision frontend is a STUB: anyres tiling at (2x2 + base) x 576 = 2880 patch
+tokens provided as precomputed embeddings occupying the prompt head
+(`frontend_tokens`); the backbone is a dense GQA decoder.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    frontend="vision",
+    frontend_tokens=2880,
+)

@@ -1,0 +1,23 @@
+"""olmoe-1b-7b — 64 experts top-8 [arXiv:2409.02060; hf].
+
+16L d_model=2048 16H (GQA kv=16) d_ff=1024 vocab=50304, MoE 64e top-8.
+d_ff=1024 is the per-expert hidden size (1B active / 7B total).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,
+    vocab_size=50304,
+    qk_norm=True,        # OLMoE uses QK-norm
+    n_experts=64,
+    top_k=8,
+    moe_d_ff=1024,
+)

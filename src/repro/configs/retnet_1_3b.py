@@ -1,0 +1,22 @@
+"""retnet-1.3b — the HSA paper's own target LLM (RetNet [23], Sec. II).
+
+24L d_model=2048 8 retention heads (d_k 256, d_v 512) ffn 4096 vocab 32768
+~= 1.34B params — matching the paper's 1.3B setting.  Decode state is O(1)
+(h x d_k x d_v per layer), the property the paper's memory-bound decode
+dataflow exploits; q/k get the RoPE (xPos-style) rotation served by the
+online RoPE unit (C4).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="retnet-1.3b",
+    family="retnet",
+    attn_type="retention",
+    n_layers=24,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=4096,
+    vocab_size=32768,
+)

@@ -1,0 +1,15 @@
+"""retnet-6.7b — the RetNet size the paper profiles against Llama-2 7B (Fig. 3)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="retnet-6.7b",
+    family="retnet",
+    attn_type="retention",
+    n_layers=32,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=32768,
+)

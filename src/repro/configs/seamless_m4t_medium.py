@@ -1,0 +1,29 @@
+"""seamless-m4t-medium — enc-dec multimodal backbone [arXiv:2308.11596; hf].
+
+12L (encoder) + 12L (decoder) d_model=1024 16H (GQA kv=16) d_ff=4096
+vocab=256206.  Audio frontend is a STUB per the assignment: `input_specs()`
+provides precomputed frame embeddings [B, T, D]; the backbone (conformer-less
+simplification) is a standard transformer enc-dec with sinusoidal absolute
+positions and LayerNorm.  Decode shapes exercise the decoder with cross-
+attention over the (frontend_tokens)-frame encoder output.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,
+    encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    norm_type="layernorm",
+    rope=False,
+    abs_pos_embed=True,
+    frontend="audio",
+    frontend_tokens=1536,
+)

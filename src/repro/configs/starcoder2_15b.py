@@ -1,0 +1,21 @@
+"""starcoder2-15b — dense GQA, LayerNorm, RoPE [arXiv:2402.19173; hf].
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152.
+LayerNorm => the Eq. (4) fusion uses the centered variant
+(core/fused_rmsnorm.py::fused_layernorm_emit — DESIGN.md §4).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    norm_type="layernorm",
+)

@@ -1,0 +1,20 @@
+"""Core library: the HSA paper's contributions as composable JAX modules.
+
+C1 hsa.py — hybrid (phase-dependent) execution engine
+C2 mxint4.py + smoothquant.py — MXINT4 W4A8 quantization (Eq. 1)
+C3 fused_rmsnorm.py — layer-fused RMSNorm (Eq. 4)
+C4 online_rope.py — Embed/Update-mode RoPE (Eq. 5-6)
+C5 retention.py — RetNet retention forms
+C6 edge_model.py — analytic edge latency/energy/area evaluation
+"""
+
+from repro.core import (  # noqa: F401
+    edge_model,
+    fused_rmsnorm,
+    hsa,
+    mxint4,
+    online_rope,
+    quantized_linear,
+    retention,
+    smoothquant,
+)

@@ -1,0 +1,215 @@
+"""Analytic edge latency/energy/area model — contribution C6.
+
+Reproduces the paper's evaluation machinery: Fig. 1(b) (Jetson-class
+breakdown), Fig. 3 (Llama vs RetNet footprint), Fig. 8 / Table I (conv-SA vs
+vector-unit vs HSA) and Table II ("this work" row).  The paper itself evaluates
+Table II analytically under a DDR5 51.2 GB/s bandwidth bound with
+MAC = 0.5 pJ/Byte and DRAM = 32 pJ/Byte — this module implements that model
+from first principles, with every constant explicit.
+
+Model (per phase):
+  latency  = max(compute_time, memory_time)          (overlapped engine)
+  compute_time = macs / (peak_mac_rate * utilization) * ppu_overhead
+  memory_time  = bytes_streamed / dram_bw
+  energy   = macs * e_mac_per_op + dram_bytes * e_dram + sram_penalty
+
+`ppu_overhead` models the post-processing bubble the paper's fused RMSNorm
+removes (5-10 % of latency): 1.15 unfused -> 1.05 with C3+C4 enabled.
+
+Calibration note (EXPERIMENTS.md §Paper-claims): with the paper's hardware
+constants (256 PEs @ 500 MHz, 2 MAC/PE/cycle = 0.256 TOPS where 1 OP = 1 MAC,
+51.2 GB/s) and RetNet-1.3B, this model lands within ±12 % of every Table I /
+Table II entry and preserves all orderings; residuals are un-reported
+micro-architectural detail (SRAM banking, drain cycles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.hsa import ArrayArch, CONV_SA, HSA, VECTOR_UNIT  # noqa: F401
+
+PJ = 1e-12
+GB = 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_mac_per_s: float            # MACs/s at full utilization
+    dram_bw: float                   # bytes/s
+    area_mm2: float
+    e_mac: float = 1.0 * PJ          # J per MAC (2 int8 operand bytes x 0.5 pJ/B)
+    e_dram: float = 32.0 * PJ        # J per DRAM byte  [2], [18]
+    e_sram: float = 0.18 * PJ        # J per on-chip SRAM byte (refetch penalty)
+    freq_hz: float = 500e6
+    prefill_tile: int = 16           # tokens batched per weight pass (ASIC
+    #                                  activation-SRAM limit, Sec. IV-A)
+
+
+# The paper's accelerator: 256 PEs, 500 MHz, 2 MAC/PE/cycle, 0.636 mm^2, DDR5.
+# e_mac = 0.5 pJ/MAC (the paper's "MAC=0.5pJ/Byte" at one int8 operand byte);
+# prefill streams each weight from DRAM once per prompt (the 16-token tile is
+# a PE-array batching limit, not a DRAM-reload boundary) — both calibrated
+# against Table II's prefill 0.773 / decode 24.06 mJ/token (EXPERIMENTS.md
+# §Paper-claims).
+PAPER_ACCEL = HardwareSpec(
+    name="hsa_28nm", peak_mac_per_s=256 * 500e6 * 2, dram_bw=51.2 * GB,
+    area_mm2=0.636, e_mac=0.5 * PJ, prefill_tile=10**6)
+
+# Jetson Orin Nano reference (Fig. 1): 40 TOPS peak (=20e12 MACs), LPDDR5;
+# a GPU streams whole prompts through each weight pass (no 16-token tile).
+JETSON_ORIN_NANO = HardwareSpec(
+    name="jetson_orin_nano", peak_mac_per_s=20e12, dram_bw=68 * GB,
+    area_mm2=float("nan"), e_mac=1.0 * PJ, prefill_tile=10**6)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Per-token workload of one LLM (derived from a real config)."""
+
+    name: str
+    macs_per_token: float            # forward MACs per token
+    weight_bytes_int8: float         # streamed weight bytes, int8 format
+    state_bytes_per_token: float     # KV-cache/retention-state R+W per decode token
+    act_bytes_per_token: float = 0.0
+    kv_growth_bytes_per_token: float = 0.0   # KV written per token (grows for attn)
+
+    def weight_bytes(self, bits: float) -> float:
+        return self.weight_bytes_int8 * bits / 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    tokens_in: int
+    tokens_out: int
+
+    @property
+    def total_tokens(self) -> int:
+        return self.tokens_in + self.tokens_out
+
+
+LISO = Scenario("LISO", 750, 50)     # long input short output (summarize)
+SILO = Scenario("SILO", 50, 750)     # short input long output (generate)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseResult:
+    latency_s: float
+    energy_j: float
+    compute_time_s: float
+    memory_time_s: float
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_time_s >= self.memory_time_s else "memory"
+
+
+def prefill(model: ModelSpec, hw: HardwareSpec, arch: ArrayArch,
+            n_tokens: int, weight_bits: float = 8.0,
+            ppu_overhead: float = 1.05) -> PhaseResult:
+    """MMM phase: weights reloaded once per PREFILL_TILE-token tile."""
+    macs = model.macs_per_token * n_tokens
+    rate = hw.peak_mac_per_s * arch.mmm_utilization
+    t_compute = macs / rate * ppu_overhead
+    tile = hw.prefill_tile
+    n_tiles = max(1, -(-n_tokens // tile))
+    dram_bytes = model.weight_bytes(weight_bits) * n_tiles \
+        + model.act_bytes_per_token * n_tokens
+    t_mem = dram_bytes / hw.dram_bw
+    energy = macs * hw.e_mac + dram_bytes * hw.e_dram
+    if not arch.weight_reuse_prefill:
+        # Vector unit refetches weights from SRAM per output element row:
+        # each weight byte is read ~tile times instead of once.
+        energy += model.weight_bytes(weight_bits) * n_tiles \
+            * (min(tile, n_tokens) - 1) * hw.e_sram
+    return PhaseResult(max(t_compute, t_mem), energy, t_compute, t_mem)
+
+
+def decode(model: ModelSpec, hw: HardwareSpec, arch: ArrayArch,
+           n_tokens: int, weight_bits: float | None = None,
+           ppu_overhead: float = 1.05) -> PhaseResult:
+    """MVM phase: every weight streamed from DRAM for every token."""
+    bits = arch.decode_weight_bits if weight_bits is None else weight_bits
+    macs = model.macs_per_token * n_tokens
+    rate = hw.peak_mac_per_s * arch.mvm_utilization
+    t_compute = macs / rate * ppu_overhead
+    dram_per_tok = (model.weight_bytes(bits) + model.state_bytes_per_token
+                    + model.act_bytes_per_token + model.kv_growth_bytes_per_token)
+    t_mem = dram_per_tok * n_tokens / hw.dram_bw
+    energy = macs * hw.e_mac + dram_per_tok * n_tokens * hw.e_dram
+    return PhaseResult(max(t_compute, t_mem), energy, t_compute, t_mem)
+
+
+@dataclasses.dataclass(frozen=True)
+class EndToEnd:
+    scenario: Scenario
+    prefill: PhaseResult
+    decode: PhaseResult
+
+    @property
+    def latency_s(self) -> float:
+        return self.prefill.latency_s + self.decode.latency_s
+
+    @property
+    def energy_j(self) -> float:
+        return self.prefill.energy_j + self.decode.energy_j
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Paper convention: 'token' = prompt + output tokens (Sec. V-A)."""
+        return self.scenario.total_tokens / self.latency_s
+
+    @property
+    def tokens_per_j(self) -> float:
+        return self.scenario.total_tokens / self.energy_j
+
+    def tokens_per_s_per_mm2(self, hw: HardwareSpec) -> float:
+        return self.tokens_per_s / hw.area_mm2
+
+    @property
+    def prefill_mj_per_token(self) -> float:
+        return self.prefill.energy_j / max(1, self.scenario.tokens_in) * 1e3
+
+    @property
+    def decode_mj_per_token(self) -> float:
+        return self.decode.energy_j / max(1, self.scenario.tokens_out) * 1e3
+
+
+def run_scenario(model: ModelSpec, hw: HardwareSpec, arch: ArrayArch,
+                 scenario: Scenario, prefill_bits: float = 8.0,
+                 decode_bits: float | None = None,
+                 ppu_overhead: float = 1.05) -> EndToEnd:
+    return EndToEnd(
+        scenario,
+        prefill(model, hw, arch, scenario.tokens_in, prefill_bits, ppu_overhead),
+        decode(model, hw, arch, scenario.tokens_out, decode_bits, ppu_overhead),
+    )
+
+
+def retnet_model_spec(params: float, n_layers: int, d_model: int,
+                      n_heads: int, name: str = "retnet") -> ModelSpec:
+    """RetNet: O(1) recurrent state (Sec. II) — dk x dv per head per layer."""
+    dk = d_model // n_heads
+    dv = 2 * d_model // n_heads
+    state = n_layers * n_heads * dk * dv          # int8 elements
+    return ModelSpec(
+        name=name, macs_per_token=params,          # 1 MAC per param per token
+        weight_bytes_int8=params,
+        state_bytes_per_token=2 * state,           # read + write each token
+        act_bytes_per_token=2 * n_layers * d_model,
+        kv_growth_bytes_per_token=0.0)
+
+
+def attention_model_spec(params: float, n_layers: int, d_model: int,
+                         n_kv_heads: int, head_dim: int, avg_context: float,
+                         name: str = "llama") -> ModelSpec:
+    """Softmax-attention LLM: KV cache grows; decode reads the whole cache."""
+    kv_per_tok = 2 * n_layers * n_kv_heads * head_dim   # int8 bytes appended
+    return ModelSpec(
+        name=name, macs_per_token=params,
+        weight_bytes_int8=params,
+        state_bytes_per_token=kv_per_tok * avg_context,  # read full cache
+        act_bytes_per_token=2 * n_layers * d_model,
+        kv_growth_bytes_per_token=kv_per_tok)

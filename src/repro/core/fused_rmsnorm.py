@@ -1,0 +1,107 @@
+"""Layer-fused RMSNorm — Section IV-B1, Eq. (4) of the HSA paper.
+
+Instead of fully normalizing ``Y_n`` before layer ``n+1``:
+
+    X_{n+1} = RMSNorm(Y_n) = Y_n * sigma^{-1} * gamma + beta
+    Y_{n+1} = (X_{n+1} @ W_{n+1}) * S_{n+1}
+
+the paper applies only ``* gamma`` in layer ``n`` and folds ``sigma^{-1}`` and
+``beta`` into layer ``n+1``'s quantization scale and bias:
+
+    Y_{n+1} = (Y_n^* @ W_{n+1}) * S_{n+1}^*  +  B_{n+1}
+      where  Y_n^*     = Y_n * gamma                (emitted by layer n)
+             S_{n+1}^* = sigma_{Y_n}^{-1} * S_{n+1} (a per-ROW output scale)
+             B_{n+1}   = beta @ W_{n+1} * S_{n+1}   (precomputed offline)
+
+On the ASIC this removes a 32 kB normalization buffer and a 5-10 % latency
+bubble by pipelining the sigma^{-1} reduction with the next layer's MAC.  On
+TPU the same algebra removes one full memory-bound elementwise pass over the
+activation tensor (an HBM round-trip): the matmul kernel applies
+``row_scale = sigma^{-1}`` in its epilogue (see kernels/mxint4_matmul.py).
+
+Note ``sigma^{-1}`` is a *per-token scalar* so it commutes with the matmul's
+contraction — the fusion is exact, which `tests/test_fused_rmsnorm.py`
+verifies bit-tightly in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_sigma_inv(y: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """The sigma^{-1} reduction (square-accumulate + rsqrt), per token.
+
+    Input ``[..., D]`` -> output ``[...]``.  This is the only part of RMSNorm
+    the fused pipeline still computes — the paper keeps this unit ("(b)
+    calculation of sigma^{-1} remains the same") and overlaps it with the MAC.
+    """
+    y32 = y.astype(jnp.float32)
+    return jax.lax.rsqrt(jnp.mean(y32 * y32, axis=-1) + eps)
+
+
+def rmsnorm(y: jax.Array, gamma: jax.Array, beta: jax.Array | None = None,
+            eps: float = 1e-6) -> jax.Array:
+    """Unfused reference RMSNorm (Eq. 3) — the baseline path."""
+    out = y.astype(jnp.float32) * rms_sigma_inv(y, eps)[..., None] * gamma.astype(jnp.float32)
+    if beta is not None:
+        out = out + beta.astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def fused_rmsnorm_emit(y: jax.Array, gamma: jax.Array, eps: float = 1e-6
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Layer-n side of Eq. (4): emit ``Y* = Y * gamma`` and ``sigma^{-1}``.
+
+    ``Y*`` flows to the next matmul unnormalized; ``sigma^{-1}`` rides along as
+    a per-token row scale to be applied in that matmul's epilogue.
+    """
+    y_star = (y.astype(jnp.float32) * gamma.astype(jnp.float32)).astype(y.dtype)
+    return y_star, rms_sigma_inv(y, eps)
+
+
+def fused_bias(beta: jax.Array, w: jax.Array, out_scale: jax.Array | float = 1.0
+               ) -> jax.Array:
+    """Precompute ``B_{n+1} = (beta @ W_{n+1}) * S_{n+1}`` offline (Eq. 4).
+
+    beta is usually absent in modern LLMs (the paper notes this); included for
+    generality and for the LayerNorm archs (starcoder2, seamless-m4t).
+    """
+    return (beta.astype(jnp.float32) @ w.astype(jnp.float32)) * out_scale
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm extension (DESIGN.md §4): starcoder2 / seamless-m4t use LayerNorm.
+# LN(y) = (y - mu) * sigma_c^{-1} * gamma + beta.  The (y - mu) centering stays
+# online (cheap vector subtract); the gamma/sigma^{-1} factorization then fuses
+# exactly like RMSNorm.
+# ---------------------------------------------------------------------------
+
+
+def layernorm_stats(y: jax.Array, eps: float = 1e-6) -> tuple[jax.Array, jax.Array]:
+    """Return (mu, sigma^{-1}) for centered LayerNorm fusion."""
+    y32 = y.astype(jnp.float32)
+    mu = jnp.mean(y32, axis=-1)
+    var = jnp.mean(jnp.square(y32 - mu[..., None]), axis=-1)
+    return mu, jax.lax.rsqrt(var + eps)
+
+
+def fused_layernorm_emit(y: jax.Array, gamma: jax.Array, eps: float = 1e-6
+                         ) -> tuple[jax.Array, jax.Array]:
+    """LN variant of `fused_rmsnorm_emit`: emit ``(y - mu) * gamma`` + sigma^{-1}."""
+    y32 = y.astype(jnp.float32)
+    mu, sig_inv = layernorm_stats(y, eps)
+    y_star = ((y32 - mu[..., None]) * gamma.astype(jnp.float32)).astype(y.dtype)
+    return y_star, sig_inv
+
+
+def layernorm(y: jax.Array, gamma: jax.Array, beta: jax.Array | None = None,
+              eps: float = 1e-6) -> jax.Array:
+    """Unfused reference LayerNorm."""
+    y32 = y.astype(jnp.float32)
+    mu, sig_inv = layernorm_stats(y, eps)
+    out = (y32 - mu[..., None]) * sig_inv[..., None] * gamma.astype(jnp.float32)
+    if beta is not None:
+        out = out + beta.astype(jnp.float32)
+    return out.astype(y.dtype)

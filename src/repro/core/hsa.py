@@ -1,0 +1,139 @@
+"""HSA execution engine — the software realization of contribution C1.
+
+The paper's Hybrid Systolic Array is one physical PE array with two dataflows,
+selected per inference phase:
+
+  * prefill  -> MMM dataflow (Fig. 4b): output-stationary systolic, W8A8,
+                weight + activation reuse, compute-bound.
+  * decode   -> MVM dataflow (Fig. 4c): 4 independent PE clusters, MXINT4
+                weights dequantized in-array, memory-bound, 100 % utilization
+                at batch 1.
+
+On TPU the "array" is the MXU and the two dataflows become two compiled
+execution paths over the *same* stored weights.  `HSAEngine` is the single
+place that choice is made: models call ``engine.linear(...)`` and the engine
+selects format + kernel from the phase, exactly like the accelerator's
+sequencer reconfigures the PE array.  It also owns the utilization model that
+quantifies why the hybrid beats either pure architecture (Fig. 2 / Table I).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantized_linear as ql
+
+PHASES = ("train", "prefill", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class HSAConfig:
+    """Phase -> numeric format policy (the paper's default = W8A8 / W4A8)."""
+
+    prefill_format: str = "w8a8"        # 'w8a8' | 'fp'
+    decode_format: str = "mxint4"       # 'mxint4' | 'w8a8' | 'fp'
+    fuse_rmsnorm: bool = True           # C3: Eq. (4) epilogue fusion
+    online_rope: bool = True            # C4: identity-update RoPE in decode
+    out_dtype: str = "float32"
+    kernel_impl: str = "auto"           # 'auto' | 'pallas' | 'ref'
+
+
+class HSAEngine:
+    """Phase-dependent linear-layer dispatcher (one per model instance).
+
+    Accepts the model zoo's plain param dicts: any subset of
+    ``{'w', 'b', 'w8_vals', 'w8_scale', 'mx_packed', 'mx_exps'}`` (the latter
+    four attached by models/deploy.py).  Falls back gracefully: a format the
+    config requests but deployment didn't produce degrades to the best
+    available one — so training params (master-only) always run.
+    """
+
+    def __init__(self, config: HSAConfig | None = None):
+        self.config = config or HSAConfig()
+
+    def linear(
+        self,
+        p: dict,
+        x: jax.Array,
+        phase: str,
+        *,
+        row_scale: jax.Array | None = None,
+        out_scale: jax.Array | float | None = None,
+    ) -> jax.Array:
+        assert phase in PHASES, phase
+        cfg = self.config
+        fmt = {"train": "fp", "prefill": cfg.prefill_format,
+               "decode": cfg.decode_format}[phase]
+        if fmt == "mxint4" and "mx_packed" not in p:
+            fmt = "w8a8"
+        if fmt == "w8a8" and "w8_vals" not in p:
+            fmt = "fp"
+
+        if not cfg.fuse_rmsnorm:
+            # Unfused ablation: caller already normalized; drop the epilogue.
+            row_scale = None
+
+        mxw = None
+        if fmt == "mxint4":
+            packed = p["mx_packed"]
+            mxw = ql.mx.MXINT4Weight(
+                packed=packed, exps_packed=p["mx_exps"],
+                shape=(packed.shape[0], packed.shape[1] * 2))
+        params = ql.QuantizedLinearParams(
+            w=p.get("w"),
+            w8=(ql.mx.Int8Weight(p["w8_vals"], p["w8_scale"])
+                if fmt == "w8a8" else None),
+            mx=mxw,
+            bias=p.get("b"),
+        )
+        eff_phase = {"fp": "train", "w8a8": "prefill", "mxint4": "decode"}[fmt]
+        return ql.apply(
+            params, x, eff_phase, row_scale=row_scale, out_scale=out_scale,
+            impl=cfg.kernel_impl, out_dtype=jnp.dtype(cfg.out_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Utilization model (Fig. 2 / Fig. 8 / Table I) — how busy is the PE array?
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayArch:
+    """An abstract MAC-array architecture for the triple comparison."""
+
+    name: str
+    pe_rows: int = 16
+    pe_cols: int = 16
+    mvm_utilization: float = 1.0     # fraction of PEs busy at batch=1 decode
+    mmm_utilization: float = 1.0
+    weight_reuse_prefill: bool = True   # SA-style reuse (vs vector-unit SRAM refetch)
+    decode_weight_bits: float = 8.0     # effective bits/weight streamed in decode
+
+
+# Paper's three contenders (Fig. 2).  Conventional SA cannot keep its columns
+# busy on MVM (one activation vector, no batching): only one PE row's worth of
+# work per cycle reaches the array => utilization ~ 1/rows.  The vector unit is
+# fully utilized both phases but re-fetches weights from SRAM during prefill
+# (no systolic reuse, 36 % more energy per Fig. 8).  The HSA gets both.
+CONV_SA = ArrayArch("conv_sa", mvm_utilization=1.0 / 16.0,
+                    weight_reuse_prefill=True, decode_weight_bits=8.0)
+VECTOR_UNIT = ArrayArch("vector_unit", mvm_utilization=1.0,
+                        weight_reuse_prefill=False, decode_weight_bits=8.0)
+HSA = ArrayArch("hsa", mvm_utilization=1.0, weight_reuse_prefill=True,
+                decode_weight_bits=4.25)  # MXINT4: 4b mantissa + 4b/16 shift
+
+
+def mvm_effective_macs_per_s(arch: ArrayArch, freq_hz: float,
+                             macs_per_pe_cycle: float = 2.0) -> float:
+    """Decode-phase effective MAC rate (utilization-discounted)."""
+    pes = arch.pe_rows * arch.pe_cols
+    return pes * freq_hz * macs_per_pe_cycle * arch.mvm_utilization
+
+
+def mmm_effective_macs_per_s(arch: ArrayArch, freq_hz: float,
+                             macs_per_pe_cycle: float = 2.0) -> float:
+    pes = arch.pe_rows * arch.pe_cols
+    return pes * freq_hz * macs_per_pe_cycle * arch.mmm_utilization

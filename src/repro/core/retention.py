@@ -1,0 +1,136 @@
+"""Multi-scale retention (RetNet) — the paper's target model family (Sec. II).
+
+RetNet replaces softmax attention with a *decaying causal mask* D:
+
+    parallel  :  Y = (Q K^T  .*  D) V,          D[n, m] = gamma^(n-m)  (n >= m)
+    recurrent :  S_n = gamma * S_{n-1} + k_n^T v_n ;   y_n = q_n S_n
+    chunkwise :  cross-chunk via the state S, intra-chunk via the parallel form
+
+The three forms are mathematically identical (a property test asserts this),
+which is exactly why the paper picked RetNet for edge inference: prefill runs
+the compute-friendly parallel/chunkwise form (MMM on the systolic array) while
+decode runs the O(1)-state recurrent form (MVM) — no KV cache growth, no
+softmax unit.
+
+Per-head decay (multi-scale): ``gamma_h = 1 - 2^(-5-h)``, h = 0..H-1.
+
+Shapes: q, k ``[B, H, S, dk]``; v ``[B, H, S, dv]``; state ``[B, H, dk, dv]``.
+The 1/sqrt(dk) scale is folded into q by the caller (models/retnet.py).
+These pure-jnp forms are the oracles for kernels/retention_kernel.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def head_decays(num_heads: int) -> jax.Array:
+    """gamma_h = 1 - 2^(-5-h) — RetNet's multi-scale decay schedule."""
+    h = jnp.arange(num_heads, dtype=jnp.float32)
+    return 1.0 - jnp.exp2(-5.0 - h)
+
+
+def decay_mask(seq_len: int, gamma: jax.Array) -> jax.Array:
+    """D[h, n, m] = gamma_h^(n-m) for n >= m else 0  (computed in log space)."""
+    n = jnp.arange(seq_len, dtype=jnp.float32)
+    diff = n[:, None] - n[None, :]                      # [S, S]
+    log_g = jnp.log(gamma)[:, None, None]               # [H, 1, 1]
+    mask = diff >= 0
+    d = jnp.exp(jnp.where(mask, diff * log_g, -jnp.inf))
+    return jnp.where(mask, d, 0.0)                      # [H, S, S]
+
+
+def retention_parallel(q: jax.Array, k: jax.Array, v: jax.Array,
+                       gamma: jax.Array) -> jax.Array:
+    """Parallel form (prefill / training): ``(QK^T .* D) V``."""
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    scores = jnp.einsum("bhnd,bhmd->bhnm", qf, kf)
+    d = decay_mask(q.shape[2], gamma)                    # [H, S, S]
+    return jnp.einsum("bhnm,bhmv->bhnv", scores * d[None], vf).astype(v.dtype)
+
+
+def retention_recurrent_step(q_t: jax.Array, k_t: jax.Array, v_t: jax.Array,
+                             state: jax.Array, gamma: jax.Array
+                             ) -> tuple[jax.Array, jax.Array]:
+    """One decode step.  q_t/k_t ``[B, H, dk]``, v_t ``[B, H, dv]``,
+    state ``[B, H, dk, dv]`` -> (y_t ``[B, H, dv]``, new state).
+
+    This is the O(1)-memory MVM workload the HSA decode dataflow targets.
+    """
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q_t, k_t, v_t))
+    new_state = gamma[None, :, None, None] * state + kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", qf, new_state)
+    return y.astype(v_t.dtype), new_state
+
+
+def retention_recurrent(q: jax.Array, k: jax.Array, v: jax.Array,
+                        gamma: jax.Array,
+                        state: jax.Array | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Scan the recurrent form over a sequence (oracle for equivalence tests)."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(st, qkv):
+        q_t, k_t, v_t = qkv
+        y, st = retention_recurrent_step(q_t, k_t, v_t, st, gamma)
+        return st, y
+
+    qs, ks, vs = (jnp.moveaxis(t, 2, 0) for t in (q, k, v))
+    state, ys = jax.lax.scan(step, state, (qs, ks, vs))
+    return jnp.moveaxis(ys, 0, 2), state
+
+
+def retention_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                        gamma: jax.Array, chunk: int = 128,
+                        state: jax.Array | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Chunkwise form: O(S * c) memory, matmul-dense — the long-context path.
+
+    Per chunk of length c (positions m = 1..c inside the chunk, state carried
+    from previous chunks):
+        inner  = (Q K^T .* D) V                          (parallel, in-chunk)
+        cross  = (Q .* gamma^m) @ S_prev                 (contribution of past)
+        S_new  = gamma^c * S_prev + sum_m gamma^(c-m) k_m^T v_m
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    nchunks = s // chunk
+    qc = q.reshape(b, h, nchunks, chunk, dk).astype(jnp.float32)
+    kc = k.reshape(b, h, nchunks, chunk, dk).astype(jnp.float32)
+    vc = v.reshape(b, h, nchunks, chunk, dv).astype(jnp.float32)
+
+    m = jnp.arange(1, chunk + 1, dtype=jnp.float32)
+    log_g = jnp.log(gamma)                                   # [H]
+    in_decay = jnp.exp(m[None, :] * log_g[:, None])          # gamma^m    [H, c]
+    out_decay = jnp.exp((chunk - m)[None, :] * log_g[:, None])  # gamma^(c-m)
+    chunk_decay = jnp.exp(chunk * log_g)                     # gamma^c    [H]
+    d = decay_mask(chunk, gamma)                             # [H, c, c]
+
+    def step(st, qkv):
+        qi, ki, vi = qkv                                     # [B, H, c, d*]
+        scores = jnp.einsum("bhnd,bhmd->bhnm", qi, ki) * d[None]
+        inner = jnp.einsum("bhnm,bhmv->bhnv", scores, vi)
+        cross = jnp.einsum("bhnd,bhdv->bhnv", qi * in_decay[None, :, :, None], st)
+        kv = jnp.einsum("bhmd,bhmv->bhdv", ki * out_decay[None, :, :, None], vi)
+        st = chunk_decay[None, :, None, None] * st + kv
+        return st, inner + cross
+
+    qs, ks, vs = (jnp.moveaxis(t, 2, 0) for t in (qc, kc, vc))
+    state, ys = jax.lax.scan(step, state, (qs, ks, vs))
+    y = jnp.moveaxis(ys, 0, 2).reshape(b, h, s, dv)
+    return y.astype(v.dtype), state
+
+
+def group_norm_heads(y: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RetNet's per-head GroupNorm (scale-free), applied after retention."""
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps)).astype(y.dtype)

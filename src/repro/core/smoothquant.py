@@ -1,0 +1,75 @@
+"""SmoothQuant activation smoothing (Section III: "We first adopt SmoothQuant
+and compress the activation precision down to INT8").
+
+SmoothQuant migrates activation outliers into the weights with a per-input-
+channel scale
+
+    s_j = max|X_j|^alpha / max|W_j|^(1 - alpha)
+
+so that ``(X / s) @ (s * W) == X @ W`` exactly, but ``X / s`` now quantizes to
+INT8 with far less clipping error.  The division by ``s`` is folded into the
+*producer* of X (the previous layer's output projection or the preceding
+norm's gamma), so smoothing is free at inference — exactly how the paper's
+accelerator consumes it (activations arrive already-smoothed, INT8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CalibStats:
+    """Per-input-channel absolute maxima collected from calibration batches."""
+
+    act_absmax: jax.Array  # f32 [K]
+    weight_absmax: jax.Array  # f32 [K]
+
+
+def collect_act_absmax(x: jax.Array) -> jax.Array:
+    """Reduce a batch of activations ``[..., K]`` to per-channel abs-max."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=tuple(range(x.ndim - 1)))
+
+
+def merge_absmax(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Running-max merge across calibration batches (the PTQ loop)."""
+    return jnp.maximum(a, b)
+
+
+def smoothing_scales(stats: CalibStats, alpha: float = 0.5, eps: float = 1e-6) -> jax.Array:
+    """Compute s_j; clamped away from zero so the fold stays invertible."""
+    a = jnp.maximum(stats.act_absmax, eps)
+    w = jnp.maximum(stats.weight_absmax, eps)
+    s = jnp.power(a, alpha) / jnp.power(w, 1.0 - alpha)
+    # Normalize so the geometric mean is 1 — keeps both tensors in range.
+    s = s / jnp.exp(jnp.mean(jnp.log(s)))
+    return jnp.maximum(s, eps)
+
+
+def apply_smoothing(w: jax.Array, s: jax.Array) -> jax.Array:
+    """Scale weights by s along the input-channel (K) axis: ``W[K,N] * s[K,None]``."""
+    return w * s[:, None].astype(w.dtype)
+
+
+def fold_into_producer_gamma(gamma: jax.Array, s: jax.Array) -> jax.Array:
+    """Fold ``1/s`` into the preceding RMSNorm/LayerNorm gamma (free smoothing)."""
+    return gamma / s.astype(gamma.dtype)
+
+
+def smooth_linear_pair(
+    gamma: jax.Array, w: jax.Array, act_absmax: jax.Array, alpha: float = 0.5
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-shot PTQ transform for a (norm -> linear) pair.
+
+    Returns (gamma', W', s) with ``rmsnorm(x; gamma') @ W' == rmsnorm(x; gamma) @ W``.
+    """
+    stats = CalibStats(
+        act_absmax=act_absmax.astype(jnp.float32),
+        weight_absmax=jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1),
+    )
+    s = smoothing_scales(stats, alpha=alpha)
+    return fold_into_producer_gamma(gamma, s), apply_smoothing(w, s), s

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+mxint4_matmul.py   — C2: dequant-fused W4A8 matmul (the HSA MVM dataflow)
+retention_kernel.py — C5: chunkwise retention (the HSA MMM prefill workload)
+rmsnorm_stats.py   — C3: fused sigma^{-1} reduction
+ops.py             — jit'd public wrappers (impl='auto'|'pallas'|'ref')
+ref.py             — pure-jnp oracles (the definition of correctness)
+
+All kernels are written for TPU (BlockSpec VMEM tiling, MXU-aligned shapes)
+and validated on CPU with ``interpret=True`` against ref.py.
+"""

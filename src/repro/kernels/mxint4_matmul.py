@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: MXINT4 dequant-fused matmul — the HSA MVM dataflow (C2).
+
+This is the TPU realization of the paper's decode dataflow (Fig. 4c): packed
+int4 mantissas and 4-bit group-shift exponents stream HBM -> VMEM (4.25
+bits/weight instead of 8/16), dequantization (`m * 2^(S_g-2)`) happens in VMEM
+immediately before the MXU dot — the analogue of "dequantize on idle PEs" —
+and the Eq. (4) fused-RMSNorm epilogue (`* out_scale * row_scale + bias`) is
+applied in-register on the final K step, so the normalized activation tensor
+never makes an extra HBM round-trip.
+
+Tiling: grid ``(M/bm, N/bn, K/bk)``, K innermost/sequential with an fp32 VMEM
+accumulator (output-stationary — the same dataflow class as the paper's PE
+array).  ``bn`` is a multiple of 128 (MXU lane) and of the quant group (16);
+``bk`` a multiple of 128.  Weight VMEM footprint per step is
+``bk * bn * 0.53`` bytes — e.g. (512, 256) blocks = 69 kB packed, well inside
+VMEM, leaving room for double-buffered pipelining.
+
+The ASIC splits the shift into 2 LSBs (pre-shift) + 2 MSBs (accumulation-row
+gating) because full shifters per PE are expensive in silicon; a VPU is not, so
+we apply the whole exponent as one exact `exp2` multiply (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.mxint4 import EXP_BIAS, GROUP_SIZE, MANT_SHIFT
+
+
+def _kernel(x_ref, packed_ref, exps_ref, oscale_ref, rscale_ref, bias_ref,
+            out_ref, acc_ref, *, n_k: int, out_dtype):
+    """One (bm, bn) output tile; K iterated sequentially via the grid."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- dequantize the (bk, bn) weight tile in VMEM ----------------------
+    packed = packed_ref[...]                                # int8 [bk, bn//2]
+    lo = ((packed << 4) >> 4).astype(jnp.int8)              # sign-extend low nibble
+    hi = (packed >> 4).astype(jnp.int8)                     # arithmetic shift
+    # Interleave nibbles back to logical channel order: [bk, bn//2, 2] -> [bk, bn]
+    mant = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    ep = exps_ref[...]                                      # uint8 [bk, bn//32]
+    codes = jnp.stack([ep & jnp.uint8(0x0F), (ep >> 4) & jnp.uint8(0x0F)],
+                      axis=-1).reshape(packed.shape[0], -1)  # [bk, bn//16]
+    scale = jnp.exp2(codes.astype(jnp.float32) - (EXP_BIAS + MANT_SHIFT))
+    w = (mant.astype(jnp.float32)
+         .reshape(packed.shape[0], -1, GROUP_SIZE) * scale[..., None]
+         ).reshape(packed.shape[0], -1)                     # f32 [bk, bn]
+
+    # ---- MXU dot, fp32 accumulate (output-stationary) ---------------------
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # ---- Eq. (4) epilogue on the last K step ------------------------------
+    @pl.when(kk == n_k - 1)
+    def _epilogue():
+        y = acc_ref[...] * oscale_ref[...] * rscale_ref[...] + bias_ref[...]
+        out_ref[...] = y.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def mxint4_matmul_pallas(
+    x: jax.Array,            # [M, K] bf16/f32 (or int8 activations pre-scaled)
+    packed: jax.Array,       # int8 [K, N//2]
+    exps_packed: jax.Array,  # uint8 [K, N//(2*GROUP_SIZE)] — biased nibble codes
+    out_scale: jax.Array,    # f32 [N]
+    row_scale: jax.Array,    # f32 [M]
+    bias: jax.Array,         # f32 [N]
+    *,
+    block_m: int = 8,
+    block_n: int = 256,
+    block_k: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    n = packed.shape[1] * 2
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert bn % (2 * GROUP_SIZE) == 0
+    n_k = k // bk
+
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),             # x
+            pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (kk, j)),        # packed
+            pl.BlockSpec((bk, bn // (2 * GROUP_SIZE)),
+                         lambda i, j, kk: (kk, j)),                       # exps
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),               # out_scale
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),               # row_scale
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),               # bias
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, packed, exps_packed, out_scale.reshape(1, n), row_scale.reshape(m, 1),
+      bias.reshape(1, n))

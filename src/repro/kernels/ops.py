@@ -1,0 +1,173 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Implementation selection (`impl`):
+  'pallas'  — the TPU kernel (pass ``interpret=True`` on CPU; used by tests)
+  'ref'     — the pure-jnp oracle from ref.py
+  'auto'    — 'pallas' on a real TPU backend, 'ref' otherwise.  The ref path
+              streams the identical packed-int4 + exponent buffers, so dry-run
+              roofline byte counts match what the TPU kernel would move.
+
+These wrappers own shape plumbing: M-padding to the block size, optional
+epilogue operands defaulted to identities, and flattening of leading batch
+dims.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mxint4 import MXINT4Weight
+from repro.kernels import ref as _ref
+from repro.kernels.mxint4_matmul import mxint4_matmul_pallas
+from repro.kernels.retention_kernel import retention_chunkwise_pallas
+from repro.kernels.rmsnorm_stats import rmsnorm_stats_pallas
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    m = x.shape[0]
+    pad = (-m) % multiple
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def mxint4_matmul(
+    x: jax.Array,
+    q: MXINT4Weight,
+    out_scale: jax.Array | None = None,
+    row_scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    *,
+    out_dtype=jnp.float32,
+    impl: str = "auto",
+    interpret: bool = False,
+    block_m: int = 8,
+    block_n: int = 256,
+    block_k: int = 512,
+) -> jax.Array:
+    """Decode-path quantized matmul with the Eq. (4) fused epilogue.
+
+    ``x`` may have leading batch dims; they are flattened into M.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = q.shape[1]
+    x2 = x.reshape(-1, k)
+    rs = None if row_scale is None else row_scale.reshape(-1)
+
+    impl = _resolve(impl)
+    if impl == "ref":
+        y = _ref.mxint4_matmul_ref(x2, q, out_scale, rs, bias, out_dtype)
+        return y.reshape(*lead, n)
+
+    x2p, m = _pad_rows(x2, block_m)
+    os = jnp.ones((n,), jnp.float32) if out_scale is None else jnp.broadcast_to(
+        jnp.asarray(out_scale, jnp.float32), (n,))
+    bs = jnp.zeros((n,), jnp.float32) if bias is None else jnp.asarray(bias, jnp.float32)
+    if rs is None:
+        rsp = jnp.ones((x2p.shape[0],), jnp.float32)
+    else:
+        rsp = jnp.pad(rs.astype(jnp.float32), (0, x2p.shape[0] - m),
+                      constant_values=1.0)
+    y = mxint4_matmul_pallas(
+        x2p, q.packed, q.exps_packed, os, rsp, bs,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    return y[:m].reshape(*lead, n)
+
+
+def w8a8_matmul(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    combined_scale: jax.Array,
+    row_scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    *,
+    out_dtype=jnp.float32,
+    impl: str = "auto",
+    interpret: bool = False,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+) -> jax.Array:
+    """Prefill MMM path (int8 MXU dot with the Eq. (4) drain epilogue).
+
+    'auto' uses the jnp path (XLA maps int8 dots to the MXU natively);
+    'pallas' runs the explicit output-stationary kernel
+    (kernels/w8a8_matmul.py) — same dataflow, same results."""
+    lead = x_q.shape[:-1]
+    k = x_q.shape[-1]
+    n = w_q.shape[1]
+    x2 = x_q.reshape(-1, k)
+    rs = None if row_scale is None else row_scale.reshape(-1)
+
+    if _resolve(impl) == "ref":
+        y = _ref.w8a8_matmul_ref(x2, w_q, combined_scale, rs, bias, out_dtype)
+        return y.reshape(*lead, n)
+
+    from repro.kernels.w8a8_matmul import w8a8_matmul_pallas
+    x2p, m = _pad_rows(x2, block_m)
+    os = jnp.broadcast_to(jnp.asarray(combined_scale, jnp.float32), (n,))
+    bs = jnp.zeros((n,), jnp.float32) if bias is None \
+        else jnp.asarray(bias, jnp.float32)
+    if rs is None:
+        rsp = jnp.ones((x2p.shape[0],), jnp.float32)
+    else:
+        rsp = jnp.pad(rs.astype(jnp.float32), (0, x2p.shape[0] - m),
+                      constant_values=1.0)
+    y = w8a8_matmul_pallas(x2p, w_q, os, rsp, bs, block_m=block_m,
+                           block_n=block_n, block_k=block_k,
+                           out_dtype=out_dtype, interpret=interpret)
+    return y[:m].reshape(*lead, n)
+
+
+def retention_chunkwise(
+    q: jax.Array,          # [B, H, S, dk]
+    k: jax.Array,
+    v: jax.Array,          # [B, H, S, dv]
+    gamma: jax.Array,      # [H]
+    *,
+    chunk: int = 128,
+    state: jax.Array | None = None,
+    impl: str = "auto",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    impl = _resolve(impl)
+    if impl == "ref" or state is not None:
+        # The kernel owns zero-initialized state; warm-state callers (decode
+        # chunk continuation) use the oracle path.
+        return _ref.retention_chunkwise_ref(q, k, v, gamma, chunk=chunk, state=state)
+
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    log_g = jnp.broadcast_to(jnp.log(gamma.astype(jnp.float32))[None, :, None],
+                             (b, h, 1)).reshape(b * h, 1)
+    y, st = retention_chunkwise_pallas(
+        q.reshape(b * h, s, dk), k.reshape(b * h, s, dk), v.reshape(b * h, s, dv),
+        log_g, chunk=chunk, out_dtype=jnp.float32, interpret=interpret,
+    )
+    return (y.reshape(b, h, s, dv).astype(v.dtype),
+            st.reshape(b, h, dk, dv))
+
+
+def rmsnorm_stats(
+    y: jax.Array, *, eps: float = 1e-6, impl: str = "auto", interpret: bool = False
+) -> jax.Array:
+    """sigma^{-1} over the last axis; leading dims preserved."""
+    lead = y.shape[:-1]
+    y2 = y.reshape(-1, y.shape[-1])
+    if _resolve(impl) == "ref":
+        return _ref.rmsnorm_stats_ref(y2, eps).reshape(lead)
+    y2p, m = _pad_rows(y2, 8)
+    out = rmsnorm_stats_pallas(y2p, block_m=min(256, y2p.shape[0]),
+                               block_d=min(512, y2.shape[1]), eps=eps,
+                               interpret=interpret)
+    return out[:m, 0].reshape(lead)

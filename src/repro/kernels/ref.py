@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *definition of correctness* for the corresponding kernel:
+kernel tests sweep shapes/dtypes and `assert_allclose` against these.  They are
+also the CPU execution path (`impl='ref'` in ops.py) used by smoke tests and by
+the dry-run lowering (Pallas TPU kernels cannot lower on the CPU backend; the
+ref path streams the same 4.25-bit weight buffers, so roofline byte counts are
+representative).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mxint4 as mx
+from repro.core import retention as ret
+
+
+def mxint4_matmul_ref(
+    x: jax.Array,
+    q: mx.MXINT4Weight,
+    out_scale: jax.Array | None = None,   # [N] or scalar — S_{n+1} (Eq. 4)
+    row_scale: jax.Array | None = None,   # [M] — sigma^{-1} from fused RMSNorm
+    bias: jax.Array | None = None,        # [N] — B_{n+1} (Eq. 4)
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """y = (x @ dequant(q)) * out_scale * row_scale + bias  — the MVM dataflow."""
+    w = mx.dequantize_mxint4(q, dtype=jnp.float32)
+    y = x.astype(jnp.float32) @ w
+    if out_scale is not None:
+        y = y * out_scale
+    if row_scale is not None:
+        y = y * row_scale[:, None]
+    if bias is not None:
+        y = y + bias
+    return y.astype(out_dtype)
+
+
+def w8a8_matmul_ref(
+    x_q: jax.Array,        # int8 [M, K]
+    w_q: jax.Array,        # int8 [K, N]
+    combined_scale: jax.Array,   # f32 scalar or [N] — act_scale * w_scale * S
+    row_scale: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Prefill MMM dataflow: int8 x int8 -> int32 accumulate, scale epilogue."""
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    ).astype(jnp.float32)
+    y = acc * combined_scale
+    if row_scale is not None:
+        y = y * row_scale[:, None]
+    if bias is not None:
+        y = y + bias
+    return y.astype(out_dtype)
+
+
+def retention_chunkwise_ref(q, k, v, gamma, chunk=128, state=None):
+    """Oracle for the chunkwise retention kernel (identical math)."""
+    return ret.retention_chunkwise(q, k, v, gamma, chunk=chunk, state=state)
+
+
+def rmsnorm_stats_ref(y: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """sigma^{-1} per row of ``[M, D]`` (the fused-RMSNorm producer)."""
+    y32 = y.astype(jnp.float32)
+    return jax.lax.rsqrt(jnp.mean(y32 * y32, axis=-1) + eps)

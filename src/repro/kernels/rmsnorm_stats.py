@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: fused sigma^{-1} reduction (the fused-RMSNorm producer).
+
+The only RMSNorm arithmetic the fused pipeline (Eq. 4) still needs is the
+square-accumulate + rsqrt per token — the paper keeps this unit and overlaps it
+with the next layer's MAC.  This kernel computes it as a blocked reduction:
+grid ``(M/bm, D/bd)`` with the D axis sequential, partial sums held in a VMEM
+scratch, rsqrt applied on the last D step.  It never materializes y^2 in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(y_ref, out_ref, acc_ref, *, n_d: int, d_total: int, eps: float):
+    dd = pl.program_id(1)
+
+    @pl.when(dd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    y = y_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.sum(y * y, axis=1, keepdims=True)
+
+    @pl.when(dd == n_d - 1)
+    def _final():
+        out_ref[...] = jax.lax.rsqrt(acc_ref[...] / d_total + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_d", "eps", "interpret"))
+def rmsnorm_stats_pallas(
+    y: jax.Array,                 # [M, D]
+    *,
+    block_m: int = 256,
+    block_d: int = 512,
+    eps: float = 1e-6,
+    interpret: bool = False,
+) -> jax.Array:                   # f32 [M, 1]
+    m, d = y.shape
+    bm, bd = min(block_m, m), min(block_d, d)
+    assert m % bm == 0 and d % bd == 0, (m, d, bm, bd)
+    n_d = d // bd
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_d=n_d, d_total=d, eps=eps),
+        grid=(m // bm, n_d),
+        in_specs=[pl.BlockSpec((bm, bd), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(y)

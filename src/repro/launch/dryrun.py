@@ -1,0 +1,363 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the scale proof without hardware: 512 virtual host devices stand in
+for 2 TPU pods, `jax.jit(step).lower(...).compile()` must succeed for every
+cell, `memory_analysis()` proves the per-device footprint fits, and
+`cost_analysis()` + the partitioned HLO text feed the §Roofline terms
+(FLOPs, bytes, per-collective wire traffic).
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>[__policy].json``
+— benchmarks/roofline.py consumes them.  Already-present artifacts are
+skipped unless --force (the grid is resumable).
+
+Usage:
+    python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh single,multi
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_mesh_by_name
+from repro.models import lm
+from repro.models.config import InputShape, ModelConfig
+from repro.optim import adamw
+from repro.runtime import serve_step, sharding as shd, train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_DT_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+             "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+             "s8": 1, "u8": 1, "pred": 1}
+for _k in ("f8e4m3fn", "f8e5m2", "f8e4m3", "f8e3m4", "f8e8m0fnu"):
+    _DT_BYTES[_k] = 1
+
+
+def _result_bytes(line: str) -> int:
+    """Size of the op's result tuple/array from the lhs of the HLO line."""
+    lhs = line.split(" = ", 1)[0] if " = " in line else line
+    # result types actually appear after '=': `%x = (f32[..], ..) all-reduce(...`
+    rhs = line.split(" = ", 1)[1] if " = " in line else line
+    head = rhs.split("(", 2)  # result type may itself be a tuple
+    # take everything up to the op name occurrence
+    m = _COLL_RE.search(rhs)
+    type_str = rhs[: m.start()] if m else rhs
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return n_devices
+
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> tuple[dict[str, list[str]], str]:
+    """Map computation name -> its lines; returns (comps, entry_name)."""
+    comps: dict[str, list[str]] = {}
+    entry = ""
+    cur: list[str] | None = None
+    name = ""
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line.strip()) if line and not line.startswith(" ") \
+            else None
+        if m:
+            name = m.group(2).lstrip("%")
+            cur = []
+            comps[name] = cur
+            if m.group(1):
+                entry = name
+        elif line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            cur.append(line)
+    return comps, entry
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Per-op-type wire bytes per chip (ring model) from partitioned HLO,
+    **trip-count corrected**: XLA's cost analysis counts a while (lax.scan)
+    body once, so we walk the call graph — each while's condition computation
+    carries the trip count as its comparison constant — and multiply the
+    body's collectives by the product of enclosing trip counts.  (Verified:
+    EXPERIMENTS.md §Dry-run methodology.)
+    """
+    comps, entry = _split_computations(hlo_text)
+    if not entry:
+        comps, entry = {"": hlo_text.splitlines()}, ""
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, ())
+                  for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    stats: dict[str, dict] = {}
+
+    def visit(comp: str, mult: float) -> None:
+        # HLO call graphs are DAGs (no recursion); multiple call sites of one
+        # body are legitimately counted once per site.
+        for line in comps.get(comp, ()):
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                visit(body, mult * trip_count(cond))
+                continue
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            op = m.group(1)
+            size = _result_bytes(line)
+            g = _group_size(line, n_devices)
+            if g <= 1:
+                continue
+            ring = (g - 1) / g
+            if op == "all-reduce":
+                wire = 2 * size * ring
+            elif op == "collective-permute":
+                wire = size
+            else:                  # all-gather / reduce-scatter / all-to-all
+                wire = size * ring
+            s = stats.setdefault(op, {"count": 0.0, "bytes": 0.0,
+                                      "wire_bytes": 0.0})
+            s["count"] += mult
+            s["bytes"] += size * mult
+            s["wire_bytes"] += wire * mult
+    visit(entry, 1.0)
+    return stats
+
+
+def _memory_dict(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        out["total_size_in_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    except Exception as e:          # noqa: BLE001
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:          # noqa: BLE001
+        return {"error": repr(e)}
+
+
+# §Perf hillclimb variants: named deltas on top of the baseline.
+#   bf16act       — engine out_dtype bfloat16 (activation collectives halve)
+#   serve_repl    — serving weights replicated over the DP axes (no per-step
+#                   FSDP all-gather of quantized weights during decode)
+#   kv8           — int8 KV cache (serve_repl +) halves cache HBM reads
+#   micro8        — 8 grad-accumulation microbatches (train)
+VARIANTS = ("baseline", "bf16act", "serve_repl", "kv8", "micro8", "micro2")
+
+
+def lower_cell(cfg: ModelConfig, shape: InputShape, mesh,
+               policy: shd.ShardingPolicy, variant: str = "baseline"):
+    """Build + lower one cell.  Returns (lowered, extra_info)."""
+    import jax.numpy as _jnp
+
+    from repro.core.hsa import HSAConfig, HSAEngine
+
+    specs = configs.input_specs(cfg, shape)
+    engine = None
+    if variant == "bf16act":
+        engine = HSAEngine(HSAConfig(out_dtype="bfloat16"))
+    if variant in ("serve_repl", "kv8") and shape.kind != "train":
+        policy = policy.with_rule("embed", ())     # no FSDP on serve params
+    cache_dtype = _jnp.int8 if variant == "kv8" else _jnp.bfloat16
+
+    if shape.kind == "train":
+        # Per-scale training overrides: 100B+ models use bf16 moments and
+        # gradient accumulation (activation working set / microbatches).
+        big = cfg.d_model >= 7000
+        opt_cfg = adamw.AdamWConfig(
+            moment_dtype="bfloat16" if big else "float32")
+        micro = {"micro8": 8, "micro2": 2}.get(variant, 4 if big else 1)
+        opts = train_step.TrainOptions(microbatches=micro)
+        built = train_step.build_train_step(cfg, mesh, policy=policy,
+                                            opt_cfg=opt_cfg, opts=opts,
+                                            engine=engine)
+        batch_sh = built["batch_shardings"](specs)
+        jit_step = jax.jit(built["step"],
+                           in_shardings=(built["state_shardings"], batch_sh),
+                           out_shardings=(built["state_shardings"], None),
+                           donate_argnums=(0,))
+        with shd.sharding_ctx(mesh, policy):
+            lowered = jit_step.lower(built["state_shapes"], specs)
+        return lowered
+
+    built = serve_step.build_serve(cfg, mesh, shape, policy=policy,
+                                   cache_dtype=cache_dtype)
+    if shape.kind == "prefill":
+        batch_sh = shd.shardings_from_specs(
+            shd.batch_specs(specs, mesh, policy), mesh)
+        jit_fn = jax.jit(built["prefill"],
+                         in_shardings=(built["param_shardings"], batch_sh),
+                         out_shardings=(None, built["cache_shardings"]))
+        with shd.sharding_ctx(mesh, policy):
+            return jit_fn.lower(built["param_shapes"], specs)
+
+    # decode
+    tok_sh = shd.shardings_from_specs(
+        shd.batch_specs(specs, mesh, policy), mesh)["tokens"]
+    jit_fn = jax.jit(built["decode"],
+                     in_shardings=(built["param_shardings"], tok_sh,
+                                   built["cache_shardings"]),
+                     out_shardings=(None, built["cache_shardings"]),
+                     donate_argnums=(2,))
+    with shd.sharding_ctx(mesh, policy):
+        return jit_fn.lower(built["param_shapes"], specs["tokens"],
+                            built["cache_shapes"])
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             policy: shd.ShardingPolicy | None = None,
+             variant: str = "baseline", out_dir: str = ARTIFACT_DIR,
+             force: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (
+        f"__{variant}" if variant != "baseline" else "")
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = configs.get_config(arch)
+    shape = configs.SHAPES[shape_name]
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "policy": variant}
+
+    ok, reason = configs.cell_supported(cfg, shape)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        if verbose:
+            print(f"[dryrun] SKIP {tag}: {reason}")
+        return record
+
+    mesh = make_mesh_by_name(mesh_name)
+    policy = policy or shd.ShardingPolicy()
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape, mesh, policy, variant=variant)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _memory_dict(compiled)
+        cost = _cost_dict(compiled)
+        print(f"[dryrun] {tag}: memory_analysis: {mem}")
+        print(f"[dryrun] {tag}: cost_analysis: "
+              f"flops={cost.get('flops')} bytes={cost.get('bytes accessed')}")
+        try:
+            hlo = compiled.as_text()
+        except Exception:            # noqa: BLE001
+            hlo = lowered.as_text()
+        colls = parse_collectives(hlo, mesh.size)
+        record.update(
+            status="ok", n_devices=int(mesh.size),
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=mem, cost=cost, collectives=colls,
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:           # noqa: BLE001
+        record.update(status="error", error=repr(e),
+                      traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] ERROR {tag}: {e}")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    if verbose and record["status"] == "ok":
+        per_dev = record["memory"].get("total_size_in_bytes", 0) / 1e9
+        print(f"[dryrun] OK {tag}: {per_dev:.2f} GB/device, "
+              f"lower {record['lower_s']}s compile {record['compile_s']}s")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=VARIANTS)
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+
+    meshes = args.mesh.split(",")
+    if args.all:
+        cells = [(a, s.name) for a in configs.ASSIGNED
+                 for s in configs.ALL_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for mesh_name in meshes:
+        for arch, shape_name in cells:
+            rec = run_cell(arch, shape_name, mesh_name, out_dir=args.out,
+                           variant=args.variant, force=args.force)
+            if rec["status"] == "error":
+                failures.append((arch, shape_name, mesh_name))
+    if failures:
+        print("FAILED cells:", failures)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

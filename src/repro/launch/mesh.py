@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS before *any* jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mesh(shape, axes):
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    single-pod: 16 x 16 = 256 chips  (axes: data, model)
+    multi-pod : 2 x 16 x 16 = 512 chips (axes: pod, data, model);
+                the 'pod' axis crosses the DCN.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_tiny_mesh(*, multi_pod: bool = False):
+    """4/8-device mesh for CI-scale subprocess tests of the same code path."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_mesh_by_name(name: str):
+    return {
+        "single": lambda: make_production_mesh(multi_pod=False),
+        "multi": lambda: make_production_mesh(multi_pod=True),
+        # 8-pod scale-out (2048 chips) — the ds-v3 feasibility point (§Perf A)
+        "pod8": lambda: _mesh((8, 16, 16), ("pod", "data", "model")),
+        "tiny": lambda: make_tiny_mesh(multi_pod=False),
+        "tiny_multi": lambda: make_tiny_mesh(multi_pod=True),
+    }[name]()

@@ -1,0 +1,3 @@
+"""Model zoo substrate: every assigned architecture family, built on the core
+library (HSA engine for all linears, fused RMSNorm, online RoPE, retention).
+"""

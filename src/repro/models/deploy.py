@@ -1,0 +1,172 @@
+"""Deployment PTQ pass — Section III applied to a whole model.
+
+`deploy_quantize` walks the linear paths recorded at init time and attaches
+the serving formats to each weight:
+
+    {'w': W[, 'b': b]}  ->  {'w8_vals', 'w8_scale',          # prefill W8A8
+                             'mx_packed', 'mx_exps'[, 'b']}  # decode  W4A8
+                            [+ 'w' kept where structurally needed]
+
+plus MXINT4 for 3-D stacked expert tensors (MoE decode EMA).  The pass is pure
+jnp, so `jax.eval_shape(deploy_quantize, ...)` yields the serving param
+*structure* for dry-run lowering without ever allocating the full model.
+
+SmoothQuant (core/smoothquant.py) runs *before* this pass in the PTQ pipeline
+(examples/quantize_model.py): calibration absmax -> fold 1/s into producer
+gammas, s into weights -> then quantize here.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mxint4 as mx
+
+Params = dict[str, Any]
+
+# Linears whose master weight must survive deployment because the math uses
+# the matrix itself (MLA absorbed-decode einsums), not an x @ W matmul.
+KEEP_MASTER = re.compile(r"(wk_b|wv_b)$")
+
+
+def _mx_ok(w: jax.Array) -> bool:
+    """MXINT4 packing needs N % 32 == 0 (2 nibbles x group 16).  The few
+    non-conforming linears (e.g. hymba's x_proj, N = dt_rank + 2*state = 132)
+    stay INT8 — the HSA engine falls back per-layer; EMA impact is <0.1 % of
+    weight bytes for every assigned arch (DESIGN.md §8)."""
+    return w.shape[-1] % (2 * mx.GROUP_SIZE) == 0
+
+
+def _quantize_linear(sub: Params, keep_master: bool) -> Params:
+    w = sub["w"]
+    q8 = mx.quantize_int8_tensor(w)
+    out = {"w8_vals": q8.values, "w8_scale": q8.scale}
+    if _mx_ok(w):
+        q4 = mx.quantize_mxint4(w)
+        out["mx_packed"] = q4.packed
+        out["mx_exps"] = q4.exps_packed
+    if keep_master:
+        out["w"] = w
+    if "b" in sub:
+        out["b"] = sub["b"]
+    return out
+
+
+def quantize_stacked(stacked: jax.Array) -> Params:
+    """MXINT4 for [E, K, N] expert stacks (vmapped Eq. 1)."""
+    q = jax.vmap(mx.quantize_mxint4)(stacked)
+    return {"packed": q.packed, "exps": q.exps_packed}
+
+
+def dequantize_stacked(pe: Params, name: str) -> jax.Array:
+    """Inverse used by mlp._expert_weight during deployed MoE decode."""
+    packed, exps = pe[f"{name}_mx"]["packed"], pe[f"{name}_mx"]["exps"]
+    k, n_half = packed.shape[-2], packed.shape[-1]
+
+    def one(pk, ex):
+        return mx.dequantize_mxint4(
+            mx.MXINT4Weight(packed=pk, exps_packed=ex, shape=(k, n_half * 2)),
+            dtype=jnp.float32)
+
+    return jax.vmap(one)(packed, exps)
+
+
+def deploy_quantize(params: Params, linear_paths: list[tuple[str, ...]],
+                    keep_all_masters: bool = False) -> Params:
+    """Return the serving param tree (pure; eval_shape-compatible)."""
+    out = jax.tree.map(lambda x: x, params)  # shallow-ish copy via rebuild
+
+    def set_path(tree: Params, path: tuple[str, ...], value: Any) -> None:
+        for pp in path[:-1]:
+            tree = tree[pp]
+        tree[path[-1]] = value
+
+    def get_path(tree: Params, path: tuple[str, ...]) -> Any:
+        for pp in path:
+            tree = tree[pp]
+        return tree
+
+    for path in linear_paths:
+        sub = get_path(out, path)
+        if "w" not in sub:        # already transformed (shared subtree)
+            continue
+        keep = keep_all_masters or bool(KEEP_MASTER.search(path[-1]))
+        # Stacked (scanned) layers carry a leading [L] dim: vmap the PTQ.
+        w = sub["w"]
+        if w.ndim == 2:
+            set_path(out, path, _quantize_linear(sub, keep))
+        else:
+            q8 = jax.vmap(mx.quantize_int8_tensor)(w)
+            new = {"w8_vals": q8.values, "w8_scale": q8.scale}
+            if _mx_ok(w):
+                q4 = jax.vmap(mx.quantize_mxint4)(w)
+                new["mx_packed"] = q4.packed
+                new["mx_exps"] = q4.exps_packed
+            if keep:
+                new["w"] = w
+            if "b" in sub:
+                new["b"] = sub["b"]
+            set_path(out, path, new)
+
+    # MoE expert stacks ([L, E, K, N] or [E, K, N]): quantize in place.
+    def quantize_experts(tree: Params) -> None:
+        for key, val in list(tree.items()):
+            if isinstance(val, dict):
+                if key == "experts":
+                    for wname in ("wg", "wi", "wo"):
+                        if wname in val:
+                            w = val.pop(wname)
+                            flat = w.reshape((-1,) + w.shape[-2:])
+                            q = jax.vmap(mx.quantize_mxint4)(flat)
+                            val[f"{wname}_mx"] = {
+                                "packed": q.packed.reshape(
+                                    w.shape[:-2] + q.packed.shape[-2:]),
+                                "exps": q.exps_packed.reshape(
+                                    w.shape[:-2] + q.exps_packed.shape[-2:]),
+                            }
+                else:
+                    quantize_experts(val)
+
+    quantize_experts(out)
+    return out
+
+
+def deployed_axes(axes: Params, linear_paths: list[tuple[str, ...]]) -> Params:
+    """Mirror the axes tree through the deployment transform."""
+    out = jax.tree.map(lambda a: a, axes,
+                       is_leaf=lambda x: isinstance(x, tuple))
+
+    def get_path(tree, path):
+        for pp in path:
+            tree = tree[pp]
+        return tree
+
+    for path in linear_paths:
+        parent = get_path(out, path[:-1]) if len(path) > 1 else out
+        sub = parent[path[-1]]
+        if "w" not in sub:
+            continue
+        wa = sub["w"]
+        new = {"w8_vals": wa, "w8_scale": wa[:-2] if len(wa) > 2 else (),
+               "mx_packed": wa, "mx_exps": wa, "w": wa}
+        if "b" in sub:
+            new["b"] = sub["b"]
+        parent[path[-1]] = new
+
+    def fix_experts(tree):
+        for key, val in list(tree.items()):
+            if isinstance(val, dict):
+                if key == "experts":
+                    for wname in ("wg", "wi", "wo"):
+                        if wname in val:
+                            wa = val.pop(wname)
+                            val[f"{wname}_mx"] = {"packed": wa, "exps": wa}
+                else:
+                    fix_experts(val)
+
+    fix_experts(out)
+    return out

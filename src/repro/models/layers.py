@@ -1,0 +1,534 @@
+"""Shared layers: fused norms, RoPE plumbing, flash attention, GQA and MLA.
+
+Every matmul goes through the HSA engine (core/hsa.py) so the phase decides
+the dataflow/format (C1/C2), and every pre-matmul norm uses the Eq. (4)
+fused emission (C3): the norm returns ``(x*, sigma^{-1})`` and sigma^{-1}
+rides into the consuming linears' epilogues as `row_scale`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fused_rmsnorm as fr
+from repro.core import online_rope as orp
+from repro.core.hsa import HSAEngine
+from repro.models.config import ModelConfig
+from repro.models.modules import ParamBuilder
+from repro.runtime.sharding import constrain
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Norms (fused emission — C3)
+# ---------------------------------------------------------------------------
+
+
+def norm_init(b: ParamBuilder, name: str, dim: int, cfg: ModelConfig) -> None:
+    sub = b.child(name)
+    sub.param("g", (dim,), (None,), init="ones")
+    if cfg.norm_type == "layernorm":
+        sub.param("b", (dim,), (None,), init="zeros")
+
+
+def norm_emit(p: Params, x: jax.Array, engine: HSAEngine, cfg: ModelConfig
+              ) -> tuple[jax.Array, jax.Array | None]:
+    """Return (x*, sigma_inv) fused, or (normalized x, None) unfused."""
+    if engine.config.fuse_rmsnorm:
+        if cfg.norm_type == "layernorm":
+            return fr.fused_layernorm_emit(x, p["g"])
+        return fr.fused_rmsnorm_emit(x, p["g"])
+    if cfg.norm_type == "layernorm":
+        return fr.layernorm(x, p["g"], p.get("b")), None
+    return fr.rmsnorm(x, p["g"]), None
+
+
+def norm_full(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Always-normalized variant (final norm before the LM head)."""
+    if cfg.norm_type == "layernorm":
+        return fr.layernorm(x, p["g"], p.get("b"))
+    return fr.rmsnorm(x, p["g"])
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (pure-JAX online-softmax; memory-efficient for 32k prefill)
+# ---------------------------------------------------------------------------
+
+
+def _flash_mask(q_pos, k_pos, sk_orig, causal, windowed, window):
+    mask = jnp.broadcast_to(k_pos[None, :] < sk_orig,
+                            (q_pos.shape[0], k_pos.shape[0]))
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if windowed:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    return mask
+
+
+def _flash_fwd_impl(cfg, q, k, v, window):
+    """Forward online-softmax scan.  q is pre-scaled f32 [B,Sq,KV,G,hd].
+
+    Returns (out [B,Sq,KV,G,dv] f32, lse [B,KV,G,Sq] f32).
+    """
+    (causal, windowed, q_chunk, kv_chunk, sk_orig, q_offset) = cfg
+    b, sq, kv_h, g, hd = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+
+    kf = k.reshape(b, sk // kv_chunk, kv_chunk, kv_h, hd)
+    vf = v.reshape(b, sk // kv_chunk, kv_chunk, kv_h, dv)
+    qf = q.reshape(b, sq // q_chunk, q_chunk, kv_h, g, hd)
+
+    def one_q_chunk(args):
+        qi, q_blk = args
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inp
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk)
+            mask = _flash_mask(q_pos, k_pos, sk_orig, causal, windowed, window)
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # All-masked rows: keep m finite so exp() stays well-defined.
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kv_h, g, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((b, kv_h, g, q_chunk), jnp.float32),
+            jnp.zeros((b, kv_h, g, q_chunk, dv), jnp.float32),
+        )
+        ks = jnp.arange(sk // kv_chunk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (ks, jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        lse = m_safe + jnp.log(jnp.maximum(l, 1e-30))
+        return jnp.moveaxis(out, 3, 1), lse     # [B,qc,KV,G,dv], [B,KV,G,qc]
+
+    outs, lses = jax.lax.map(one_q_chunk,
+                             (jnp.arange(sq // q_chunk),
+                              jnp.moveaxis(qf, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kv_h, g, dv)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, kv_h, g, sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg, q, k, v, window):
+    out, _ = _flash_fwd_impl(cfg, q, k, v, window)
+    return out
+
+
+def _flash_fwd(cfg, q, k, v, window):
+    out, lse = _flash_fwd_impl(cfg, q, k, v, window)
+    return out, (q, k, v, window, out, lse)
+
+
+def _flash_bwd(cfg, res, dout):
+    """Real flash-attention backward: recompute P per (q,kv) tile from
+    (q,k,v,lse) instead of letting autodiff save per-step score/mask tensors
+    (which made large train cells exceed HBM — see EXPERIMENTS.md §Dry-run).
+    """
+    (causal, windowed, q_chunk, kv_chunk, sk_orig, q_offset) = cfg
+    q, k, v, window, out, lse = res
+    b, sq, kv_h, g, hd = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+
+    dout = dout.astype(jnp.float32)
+    # D_i = rowsum(dout * out), per query position
+    delta = jnp.einsum("bqhgd,bqhgd->bhgq", dout, out)
+
+    kf = k.reshape(b, sk // kv_chunk, kv_chunk, kv_h, hd)
+    vf = v.reshape(b, sk // kv_chunk, kv_chunk, kv_h, dv)
+    qf = q.reshape(b, sq // q_chunk, q_chunk, kv_h, g, hd)
+    do_f = dout.reshape(b, sq // q_chunk, q_chunk, kv_h, g, dv)
+    lse_f = lse.reshape(b, kv_h, g, sq // q_chunk, q_chunk)
+    dl_f = delta.reshape(b, kv_h, g, sq // q_chunk, q_chunk)
+
+    def one_q_chunk(carry, args):
+        dk_acc, dv_acc = carry                   # [B, Sk, KV, hd/dv] f32
+        qi, q_blk, do_blk, lse_blk, dl_blk = args
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry2, inp):
+            dq_blk, dk_a, dv_a = carry2
+            ki, k_blk, v_blk = inp
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk)
+            mask = _flash_mask(q_pos, k_pos, sk_orig, causal, windowed, window)
+            p = jnp.where(mask, jnp.exp(s - lse_blk[..., None]), 0.0)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_blk, v_blk)
+            ds = p * (dp - dl_blk[..., None])
+            dq_blk = dq_blk + jnp.einsum("bhgqk,bkhd->bqhgd", ds, k_blk)
+            dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, q_blk)
+            dv_c = jnp.einsum("bhgqk,bqhgd->bkhd", p, do_blk)
+            start = ki * kv_chunk
+            dk_a = jax.lax.dynamic_update_slice(
+                dk_a, jax.lax.dynamic_slice(
+                    dk_a, (0, start, 0, 0), (b, kv_chunk, kv_h, hd)) + dk_c,
+                (0, start, 0, 0))
+            dv_a = jax.lax.dynamic_update_slice(
+                dv_a, jax.lax.dynamic_slice(
+                    dv_a, (0, start, 0, 0), (b, kv_chunk, kv_h, dv)) + dv_c,
+                (0, start, 0, 0))
+            return (dq_blk, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((b, q_chunk, kv_h, g, hd), jnp.float32)
+        ks = jnp.arange(sk // kv_chunk)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc),
+            (ks, jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0)))
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros((b, sk, kv_h, hd), jnp.float32)
+    dv0 = jnp.zeros((b, sk, kv_h, dv), jnp.float32)
+    (dk, dv_), dqs = jax.lax.scan(
+        one_q_chunk, (dk0, dv0),
+        (jnp.arange(sq // q_chunk), jnp.moveaxis(qf, 1, 0),
+         jnp.moveaxis(do_f, 1, 0), jnp.moveaxis(lse_f, 3, 0),
+         jnp.moveaxis(dl_f, 3, 0)))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, sq, kv_h, g, hd)
+    dwin = None if window is None else jnp.zeros_like(window)
+    return dq, dk, dv_, dwin
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,              # [B, Sq, KV, G, hd]  (G = q-heads per kv head)
+    k: jax.Array,              # [B, Sk, KV, hd]
+    v: jax.Array,              # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    window: int | jax.Array = 0,   # >0: sliding window; may be traced (hybrid)
+    q_offset: int = 0,         # absolute position of q[0] (cross-chunk decode)
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash attention (pure JAX, custom VJP): never materializes [Sq, Sk].
+
+    Forward: online-softmax over KV chunks.  Backward: the flash backward
+    (recompute P from q,k,v,lse per tile) — O(chunk^2) transients only.
+    Handles causal, sliding-window (possibly traced, for hybrid layer flags)
+    and bidirectional (cross/encoder) masking via position arithmetic.
+    """
+    b, sq, kv_h, g, hd = q.shape
+    sk = k.shape[1]
+    windowed = not (isinstance(window, int) and window == 0)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    # Pad to chunk multiples; padded K positions are masked out, padded Q
+    # rows sliced off on return.
+    sq_orig, sk_orig = sq, sk
+    pq, pk = (-sq) % q_chunk, (-sk) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq)) + ((0, 0),) * 3)
+        sq += pq
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk)) + ((0, 0),) * 2)
+        v = jnp.pad(v, ((0, 0), (0, pk)) + ((0, 0),) * 2)
+        sk += pk
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qs = q.astype(jnp.float32) * scale
+    # window rides as an f32 array arg (may be traced); custom_vjp returns a
+    # zero cotangent for it.
+    win = jnp.asarray(window, jnp.float32) if windowed else jnp.float32(0)
+    cfg = (causal, windowed, q_chunk, kv_chunk, sk_orig, q_offset)
+    out = _flash(cfg, qs, k.astype(jnp.float32), v.astype(jnp.float32), win)
+    return out[:, :sq_orig].astype(v.dtype)
+
+
+# int8 KV-cache (beyond-paper, consistent with the paper's A8 activations):
+# symmetric fixed-point with a static scale; halves decode cache HBM reads.
+KV8_SCALE = 32.0
+
+
+def to_cache_dtype(x: jax.Array, dtype) -> jax.Array:
+    if jnp.dtype(dtype) == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * KV8_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def from_cache_dtype(c: jax.Array) -> jax.Array:
+    if c.dtype == jnp.int8:
+        return c.astype(jnp.float32) / KV8_SCALE
+    return c.astype(jnp.float32)
+
+
+def attend_one_step(
+    q: jax.Array,              # [B, KV, G, hd] — one new token
+    k_cache: jax.Array,        # [B, C, KV, hd]
+    v_cache: jax.Array,
+    valid_mask: jax.Array,     # bool [B, C]
+) -> jax.Array:
+    """Decode-phase attention over the cache (the MVM-shaped workload)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bhgd,bchd->bhgc", q.astype(jnp.float32),
+                   from_cache_dtype(k_cache)) / jnp.sqrt(jnp.float32(hd))
+    s = jnp.where(valid_mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgc,bchd->bhgd", p, from_cache_dtype(v_cache))
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (dense / moe / hybrid / vlm / encdec self-attn)
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(b: ParamBuilder, cfg: ModelConfig, d_in: int | None = None) -> None:
+    d = d_in or cfg.d_model
+    hd, h, kv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    b.linear("wq", d, h * hd, "embed", "heads", bias=cfg.qkv_bias)
+    b.linear("wk", d, kv * hd, "embed", "kv", bias=cfg.qkv_bias)
+    b.linear("wv", d, kv * hd, "embed", "kv", bias=cfg.qkv_bias)
+    b.linear("wo", h * hd, d, "heads", "embed")
+    if cfg.qk_norm:
+        norm_init(b, "qnorm", hd, cfg)
+        norm_init(b, "knorm", hd, cfg)
+
+
+def _qk_head_norm(p: Params, q: jax.Array, k: jax.Array, cfg: ModelConfig):
+    if not cfg.qk_norm:
+        return q, k
+    return (fr.rmsnorm(q, p["qnorm"]["g"]), fr.rmsnorm(k, p["knorm"]["g"]))
+
+
+def _project_qkv(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
+                 phase: str, cfg: ModelConfig):
+    b, s, _ = x_star.shape
+    hd, h, kv = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads
+    q = engine.linear(p["wq"], x_star, phase, row_scale=sig_inv)
+    k = engine.linear(p["wk"], x_star, phase, row_scale=sig_inv)
+    v = engine.linear(p["wv"], x_star, phase, row_scale=sig_inv)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    return _qk_head_norm(p, q, k, cfg) + (v,)
+
+
+def gqa_apply(
+    p: Params,
+    x_star: jax.Array,          # [B, S, D] — gamma-scaled (fused) or normalized
+    sig_inv: jax.Array | None,  # [B, S] — sigma^{-1} (fused mode)
+    engine: HSAEngine,
+    phase: str,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: int | jax.Array = 0,
+    rope_sin: jax.Array | None = None,   # [S, hd/2] precomputed (prefill/train)
+    rope_cos: jax.Array | None = None,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,  # cross-attention
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention.  Returns (out [B,S,D], (k, v) for caching)."""
+    b, s, _ = x_star.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q, k, v = _project_qkv(p, x_star, sig_inv, engine, phase, cfg)
+    if kv_override is not None:
+        k, v = kv_override
+    elif rope_sin is not None:
+        q = orp.apply_rope(q, rope_sin[None, :, None, :], rope_cos[None, :, None, :])
+        k = orp.apply_rope(k, rope_sin[None, :, None, :], rope_cos[None, :, None, :])
+    # Head-parallel region: the sequence-parallel residual sharding must not
+    # leak into flash's seq-splitting reshapes (GSPMD would replicate the
+    # whole [B,S,H,hd] tensor) — reshard to batch+heads here.
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv", None))
+    v = constrain(v, ("batch", None, "kv", None))
+    g = h // kv
+    out = flash_attention(q.reshape(b, s, kv, g, hd), k, v,
+                          causal=causal, window=window)
+    out = engine.linear(p["wo"], out.reshape(b, s, h * hd), phase)
+    return out, (k, v)
+
+
+def gqa_decode(
+    p: Params,
+    x_star: jax.Array,          # [B, 1, D]
+    sig_inv: jax.Array | None,
+    engine: HSAEngine,
+    cfg: ModelConfig,
+    cache: Params,              # {'k','v'} [B, C, KV, hd] ring/linear buffer
+    pos: jax.Array,             # i32 scalar — absolute position of this token
+    *,
+    window: int = 0,
+    rope_sin: jax.Array | None = None,   # [hd/2] — from the online RoPE unit
+    rope_cos: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """One decode step: project, rotate (online RoPE), cache-update, attend."""
+    b = x_star.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q, k, v = _project_qkv(p, x_star, sig_inv, engine, "decode", cfg)
+    if rope_sin is not None:
+        q = orp.apply_rope(q, rope_sin, rope_cos)
+        k = orp.apply_rope(k, rope_sin, rope_cos)
+    q = q[:, 0].reshape(b, kv, h // kv, hd)
+
+    c = cache["k"].shape[1]
+    # Sliding-window caches are ring buffers; linear caches clamp at capacity.
+    slot = (pos % c) if window else jnp.minimum(pos, c - 1)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], to_cache_dtype(k, cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], to_cache_dtype(v, cache["v"].dtype), (0, slot, 0, 0))
+    n_valid = jnp.minimum(pos + 1, c)
+    valid = jnp.broadcast_to(jnp.arange(c)[None, :] < n_valid, (b, c))
+    out = attend_one_step(q, k_cache, v_cache, valid)
+    out = engine.linear(p["wo"], out.reshape(b, 1, h * hd), "decode")
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def gqa_make_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                   dtype=jnp.bfloat16) -> Params:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    c = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    return {
+        "k": jnp.zeros((batch, c, kv, hd), dtype),
+        "v": jnp.zeros((batch, c, kv, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v3)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(b: ParamBuilder, cfg: ModelConfig) -> None:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    b.linear("wq_a", d, qr, "embed", None)             # q down-projection
+    norm_init(b, "q_norm", qr, cfg)
+    b.linear("wq_b", qr, h * (dn + dr), None, "heads")  # q up-projection
+    b.linear("wkv_a", d, kvr + dr, "embed", None)       # c_kv + shared k_rope
+    norm_init(b, "kv_norm", kvr, cfg)
+    b.linear("wk_b", kvr, h * dn, None, "heads")        # k up (nope part)
+    b.linear("wv_b", kvr, h * dv, None, "heads")        # v up
+    b.linear("wo", h * dv, d, "heads", "embed")
+
+
+def _mla_q(p, x_star, sig_inv, engine, phase, cfg):
+    b, s, _ = x_star.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_lat = engine.linear(p["wq_a"], x_star, phase, row_scale=sig_inv)
+    q_lat, q_sig = norm_emit(p["q_norm"], q_lat, engine, cfg)
+    q = engine.linear(p["wq_b"], q_lat, phase, row_scale=q_sig)
+    q = q.reshape(b, s, h, dn + dr)
+    return q[..., :dn], q[..., dn:]                    # (q_nope, q_rope)
+
+
+def mla_apply(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
+              cfg: ModelConfig, *, rope_sin=None, rope_cos=None
+              ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Prefill/train MLA: materialize per-head k/v (compute-rich MMM phase).
+
+    Returns (out, (c_kv, k_rope)) — the *compressed* tensors are what gets
+    cached (MLA's memory win: kv_lora_rank + qk_rope_head_dim per token).
+    """
+    b, s, _ = x_star.shape
+    h = cfg.n_heads
+    kvr, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+                       cfg.qk_rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope = _mla_q(p, x_star, sig_inv, engine, phase, cfg)
+
+    kv_a = engine.linear(p["wkv_a"], x_star, phase, row_scale=sig_inv)
+    c_kv, k_rope = kv_a[..., :kvr], kv_a[..., kvr:]
+    c_kv = norm_full(p["kv_norm"], c_kv, cfg)
+    if rope_sin is not None:
+        q_rope = orp.apply_rope(q_rope, rope_sin[None, :, None, :],
+                                rope_cos[None, :, None, :])
+        k_rope = orp.apply_rope(k_rope[:, :, None, :], rope_sin[None, :, None, :],
+                                rope_cos[None, :, None, :])[:, :, 0]
+    k_nope = engine.linear(p["wk_b"], c_kv, phase).reshape(b, s, h, dn)
+    v = engine.linear(p["wv_b"], c_kv, phase).reshape(b, s, h, dv)
+
+    # Pack rope part alongside nope so one flash call handles both terms:
+    # scores = q_nope.k_nope + q_rope.k_rope (k_rope shared across heads).
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1)
+    # Head-parallel region (see gqa_apply): keep flash inputs off the
+    # sequence-parallel sharding so its seq reshapes stay shardable.
+    q_full = constrain(q_full, ("batch", None, "heads", None))
+    k_full = constrain(k_full, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    out = flash_attention(q_full[:, :, :, None, :].reshape(b, s, h, 1, dn + dr),
+                          k_full, v, causal=True)
+    out = engine.linear(p["wo"], out.reshape(b, s, h * dv), phase)
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p: Params, x_star, sig_inv, engine: HSAEngine, cfg: ModelConfig,
+               cache: Params, pos: jax.Array, *, rope_sin=None, rope_cos=None
+               ) -> tuple[jax.Array, Params]:
+    """Decode MLA with *absorbed* projections: attention runs directly in the
+    compressed latent space, so per-step work is O(S * kv_lora_rank) and the
+    cache stays compressed.  (Required for 671B decode feasibility —
+    DESIGN.md §8; materializing per-head K at 32k context would be ~TBs.)
+    """
+    b = x_star.shape[0]
+    h = cfg.n_heads
+    kvr, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+                       cfg.qk_rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope = _mla_q(p, x_star, sig_inv, engine, "decode", cfg)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]        # [B, H, dn], [B, H, dr]
+
+    kv_a = engine.linear(p["wkv_a"], x_star, "decode", row_scale=sig_inv)
+    c_kv_new, k_rope_new = kv_a[..., :kvr], kv_a[..., kvr:]
+    c_kv_new = norm_full(p["kv_norm"], c_kv_new, cfg)
+    if rope_sin is not None:
+        q_rope = orp.apply_rope(q_rope, rope_sin, rope_cos)
+        k_rope_new = orp.apply_rope(k_rope_new, rope_sin, rope_cos)
+
+    c = cache["c_kv"].shape[1]
+    slot = jnp.minimum(pos, c - 1)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], to_cache_dtype(c_kv_new, cache["c_kv"].dtype),
+        (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], to_cache_dtype(k_rope_new, cache["k_rope"].dtype),
+        (0, slot, 0))
+
+    # Absorb W_uk into q: q_abs[b,h,r] = sum_n q_nope[b,h,n] * Wk_b[r, h, n]
+    wk_b = p["wk_b"]["w"].reshape(kvr, h, dn).astype(jnp.float32)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32), wk_b)
+    s_lat = jnp.einsum("bhr,bcr->bhc", q_abs, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,bcr->bhc", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
+    scores = (s_lat + s_rope) * scale
+    valid = (jnp.arange(c)[None, :] < jnp.minimum(pos + 1, c))
+    scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
+    attn = jax.nn.softmax(scores, axis=-1)
+
+    # Attend in latent space, then absorb W_uv on the way out.
+    lat_out = jnp.einsum("bhc,bcr->bhr", attn, c_kv.astype(jnp.float32))
+    wv_b = p["wv_b"]["w"].reshape(kvr, h, dv).astype(jnp.float32)
+    out_heads = jnp.einsum("bhr,rhv->bhv", lat_out, wv_b)
+    out = engine.linear(p["wo"], out_heads.reshape(b, 1, h * dv), "decode")
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_make_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                   dtype=jnp.bfloat16) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+    }

@@ -1,0 +1,590 @@
+"""Decoder LM / encoder-decoder assembly for every assigned architecture.
+
+One generic stack with per-family blocks, scanned over layers (compact HLO,
+fast multi-pod compiles), with three entry points matching the workload cells:
+
+    forward_train   — full-sequence teacher forcing, loss (train_4k)
+    forward_prefill — full-sequence, returns last-token logits + warm caches
+                      (prefill_32k; also the LISO prompt phase)
+    forward_decode  — one token with warm caches (decode_32k / long_500k;
+                      the SILO generation phase)
+
+The HSA engine (C1) routes every matmul; norms use fused emission (C3); the
+decode path drives a single model-level online-RoPE unit (C4) shared by all
+layers, exactly like the paper's PPU owns one RoPE unit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import online_rope as orp
+from repro.core.hsa import HSAEngine
+from repro.models import layers as L
+from repro.models import mlp as M
+from repro.models import retnet as R
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.modules import ParamBuilder, stack_layers
+from repro.runtime.sharding import constrain
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer groups: homogeneous runs of blocks that can share one lax.scan.
+# ---------------------------------------------------------------------------
+
+
+def layer_groups(cfg: ModelConfig) -> list[tuple[str, int, str]]:
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        return [("dense_head", cfg.first_dense_layers, "dense"),
+                ("blocks", cfg.n_layers - cfg.first_dense_layers, "moe")]
+    kind = {"dense": "dense", "moe": "moe", "ssm": "ssm", "hybrid": "hybrid",
+            "retnet": "retnet", "vlm": "dense", "audio": "dense"}.get(cfg.family)
+    if cfg.is_encdec:
+        return [("enc_blocks", cfg.encoder_layers, "enc"),
+                ("blocks", cfg.n_layers, "dec")]
+    return [("blocks", cfg.n_layers, kind)]
+
+
+def hybrid_full_attn_flags(cfg: ModelConfig, count: int) -> jax.Array:
+    """Hymba: full attention on first/middle/last layer, SWA elsewhere."""
+    idx = jnp.arange(count)
+    full = (idx == 0) | (idx == count // 2) | (idx == count - 1)
+    return full
+
+
+# ---------------------------------------------------------------------------
+# Block init/apply per kind
+# ---------------------------------------------------------------------------
+
+
+def _block_init(b: ParamBuilder, cfg: ModelConfig, kind: str) -> None:
+    L.norm_init(b, "ln1", cfg.d_model, cfg)
+    if kind == "ssm":
+        S.mamba_init(b.child("mamba"), cfg)
+        return
+    if kind == "retnet":
+        R.retention_init(b.child("ret"), cfg)
+        L.norm_init(b, "ln2", cfg.d_model, cfg)
+        M.mlp_init(b.child("mlp"), cfg, gated=False)
+        return
+    if kind == "hybrid":
+        L.gqa_init(b.child("attn"), cfg)
+        S.mamba_init(b.child("mamba"), cfg)
+        L.norm_init(b, "attn_norm", cfg.d_model, cfg)
+        L.norm_init(b, "mamba_norm", cfg.d_model, cfg)
+        L.norm_init(b, "ln2", cfg.d_model, cfg)
+        M.mlp_init(b.child("mlp"), cfg)
+        return
+    # attention families
+    if cfg.attn_type == "mla":
+        L.mla_init(b.child("attn"), cfg)
+    else:
+        L.gqa_init(b.child("attn"), cfg)
+    if kind == "dec":
+        L.norm_init(b, "ln_cross", cfg.d_model, cfg)
+        L.gqa_init(b.child("cross"), cfg)
+    L.norm_init(b, "ln2", cfg.d_model, cfg)
+    if kind == "moe":
+        M.moe_init(b.child("moe"), cfg)
+    else:
+        M.mlp_init(b.child("mlp"), cfg, gated=cfg.norm_type == "rmsnorm")
+
+
+def _block_apply(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
+                 phase: str, kind: str, *, rope=None, full_attn=None,
+                 enc_kv=None, cache_len: int = 0
+                 ) -> tuple[jax.Array, Params | None, jax.Array]:
+    """Full-sequence block.  Returns (x_out, cache_seed, aux_loss)."""
+    sin, cos = rope if rope is not None else (None, None)
+    aux = jnp.float32(0.0)
+    xs, sig = L.norm_emit(p["ln1"], x, engine, cfg)
+
+    if kind == "ssm":
+        y, cache = S.mamba_apply(p["mamba"], xs, sig, engine, phase, cfg)
+        return x + y, cache, aux
+
+    if kind == "retnet":
+        y, cache = R.retention_apply(p["ret"], xs, sig, engine, phase, cfg,
+                                     rope_sin=sin, rope_cos=cos)
+        x = x + y
+        xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+        x = x + M.mlp_apply(p["mlp"], xs2, sig2, engine, phase)
+        return x, cache, aux
+
+    if kind == "hybrid":
+        s = x.shape[1]
+        window = jnp.where(full_attn, jnp.int32(s), jnp.int32(cfg.sliding_window))
+        a_out, (k, v) = L.gqa_apply(p["attn"], xs, sig, engine, phase, cfg,
+                                    causal=True, window=window,
+                                    rope_sin=sin, rope_cos=cos)
+        m_out, m_cache = S.mamba_apply(p["mamba"], xs, sig, engine, phase, cfg)
+        y = 0.5 * (L.norm_full(p["attn_norm"], a_out, cfg)
+                   + L.norm_full(p["mamba_norm"], m_out, cfg))
+        x = x + y
+        xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+        x = x + M.mlp_apply(p["mlp"], xs2, sig2, engine, phase)
+        cache = {"attn": _seed_attn_cache(cfg, k, v, cache_len),
+                 "mamba": m_cache}
+        return x, cache, aux
+
+    # attention families (dense / moe / enc / dec)
+    causal = kind != "enc"
+    if cfg.attn_type == "mla":
+        a_out, (c_kv, k_rope) = L.mla_apply(p["attn"], xs, sig, engine, phase,
+                                            cfg, rope_sin=sin, rope_cos=cos)
+        if cache_len > c_kv.shape[1]:
+            pad = ((0, 0), (0, cache_len - c_kv.shape[1]), (0, 0))
+            c_kv, k_rope = jnp.pad(c_kv, pad), jnp.pad(k_rope, pad)
+        cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        a_out, (k, v) = L.gqa_apply(p["attn"], xs, sig, engine, phase, cfg,
+                                    causal=causal,
+                                    window=cfg.sliding_window,
+                                    rope_sin=sin, rope_cos=cos)
+        cache = _seed_attn_cache(cfg, k, v, cache_len) if causal else None
+    x = x + a_out
+
+    if kind == "dec":
+        assert enc_kv is not None, "decoder blocks need encoder output"
+        xc, sigc = L.norm_emit(p["ln_cross"], x, engine, cfg)
+        c_out, (ck, cv) = _cross_from_enc(p["cross"], xc, sigc, engine, phase,
+                                          cfg, enc_kv)
+        x = x + c_out
+        cache = {"self": cache, "cross_k": ck, "cross_v": cv}
+
+    xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+    if kind == "moe":
+        y, aux = M.moe_apply(p["moe"], xs2, sig2, engine, phase, cfg)
+    else:
+        y = M.mlp_apply(p["mlp"], xs2, sig2, engine, phase)
+    return x + y, cache, aux
+
+
+def _cross_from_enc(p, xc, sigc, engine, phase, cfg, enc_out):
+    """Cross-attention: q from decoder, k/v projected from encoder output."""
+    b, s_src, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    k = engine.linear(p["wk"], enc_out, phase).reshape(b, s_src, kv, hd)
+    v = engine.linear(p["wv"], enc_out, phase).reshape(b, s_src, kv, hd)
+    out, _ = L.gqa_apply(p, xc, sigc, engine, phase, cfg, causal=False,
+                         kv_override=(k, v))
+    return out, (k, v)
+
+
+def _seed_attn_cache(cfg: ModelConfig, k: jax.Array, v: jax.Array,
+                     cache_len: int = 0) -> Params:
+    """Convert prefill K/V into the decode cache layout.
+
+    Sliding-window caches are ring buffers keyed by ``pos % window``: the last
+    `window` entries are rolled so each position p lands in slot p %% window.
+    Linear caches are right-padded to `cache_len` so generation can continue.
+    """
+    s = k.shape[1]
+    if cfg.sliding_window:
+        w = cfg.sliding_window
+        if s <= w:
+            pad = [(0, 0), (0, w - s)] + [(0, 0)] * (k.ndim - 2)
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)   # slot i = position i
+        else:
+            k, v = k[:, -w:], v[:, -w:]               # positions s-w .. s-1
+            shift = s % w                             # slot of position p = p % w
+            k, v = jnp.roll(k, shift, axis=1), jnp.roll(v, shift, axis=1)
+    elif cache_len > s:
+        pad = [(0, 0), (0, cache_len - s)] + [(0, 0)] * (k.ndim - 2)
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    return {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Decode-step block
+# ---------------------------------------------------------------------------
+
+
+def _block_decode(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
+                  kind: str, cache: Params, pos: jax.Array, *,
+                  rope=None) -> tuple[jax.Array, Params]:
+    sin, cos = rope if rope is not None else (None, None)
+    xs, sig = L.norm_emit(p["ln1"], x, engine, cfg)
+
+    if kind == "ssm":
+        y, cache = S.mamba_decode(p["mamba"], xs, sig, engine, cfg, cache)
+        return x + y, cache
+
+    if kind == "retnet":
+        y, cache = R.retention_decode(p["ret"], xs, sig, engine, cfg, cache,
+                                      rope_sin=sin, rope_cos=cos)
+        x = x + y
+        xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+        return x + M.mlp_apply(p["mlp"], xs2, sig2, engine, "decode"), cache
+
+    if kind == "hybrid":
+        a_out, a_cache = L.gqa_decode(p["attn"], xs, sig, engine, cfg,
+                                      cache["attn"], pos,
+                                      window=cfg.sliding_window,
+                                      rope_sin=sin, rope_cos=cos)
+        m_out, m_cache = S.mamba_decode(p["mamba"], xs, sig, engine, cfg,
+                                        cache["mamba"])
+        y = 0.5 * (L.norm_full(p["attn_norm"], a_out, cfg)
+                   + L.norm_full(p["mamba_norm"], m_out, cfg))
+        x = x + y
+        xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+        x = x + M.mlp_apply(p["mlp"], xs2, sig2, engine, "decode")
+        return x, {"attn": a_cache, "mamba": m_cache}
+
+    if cfg.attn_type == "mla":
+        a_out, new_cache = L.mla_decode(p["attn"], xs, sig, engine, cfg,
+                                        cache if kind != "dec" else cache["self"],
+                                        pos, rope_sin=sin, rope_cos=cos)
+    else:
+        self_cache = cache if kind != "dec" else cache["self"]
+        a_out, new_cache = L.gqa_decode(p["attn"], xs, sig, engine, cfg,
+                                        self_cache, pos,
+                                        window=cfg.sliding_window,
+                                        rope_sin=sin, rope_cos=cos)
+    x = x + a_out
+
+    if kind == "dec":
+        xc, sigc = L.norm_emit(p["ln_cross"], x, engine, cfg)
+        b = x.shape[0]
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        q = engine.linear(p["cross"]["wq"], xc, "decode", row_scale=sigc)
+        q = q.reshape(b, h, hd).reshape(b, kv, h // kv, hd)
+        valid = jnp.ones(cache["cross_k"].shape[:2], bool)
+        c_out = L.attend_one_step(q, cache["cross_k"], cache["cross_v"], valid)
+        c_out = engine.linear(p["cross"]["wo"], c_out.reshape(b, 1, h * hd),
+                              "decode")
+        x = x + c_out
+        new_cache = {"self": new_cache, "cross_k": cache["cross_k"],
+                     "cross_v": cache["cross_v"]}
+
+    xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+    if kind == "moe":
+        y, _ = M.moe_apply(p["moe"], xs2, sig2, engine, "decode", cfg)
+    else:
+        y = M.mlp_apply(p["mlp"], xs2, sig2, engine, "decode")
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init(cfg: ModelConfig, key: jax.Array, abstract: bool = False):
+    """Returns (params, axes, linear_paths).
+
+    ``abstract=True`` records ShapeDtypeStructs instead of sampling — the
+    dry-run path: full-model structure with zero allocation.
+    """
+    dtype = jnp.dtype(cfg.param_dtype)
+    b = ParamBuilder(key=key, dtype=dtype, abstract=abstract)
+    b.param("embed", (cfg.padded_vocab, cfg.d_model), (None, "embed_tp"),
+            scale=0.02)
+    all_paths: list[tuple[str, ...]] = []
+
+    for gname, count, kind in layer_groups(cfg):
+        stacked, axes_g, paths = stack_layers(
+            b._next_key(), count,
+            functools.partial(_block_init, cfg=cfg, kind=kind), dtype=dtype,
+            abstract=abstract)
+        b.params[gname] = stacked
+        b.axes[gname] = axes_g
+        all_paths += [(gname,) + p for p in paths]
+
+    L.norm_init(b, "final_norm", cfg.d_model, cfg)
+    if cfg.is_encdec:
+        L.norm_init(b, "enc_final_norm", cfg.d_model, cfg)
+    b.linear("lm_head", cfg.d_model, cfg.padded_vocab, "embed", "vocab",
+             scale=0.02)
+    if cfg.mtp:
+        mtp = b.child("mtp")
+        mtp.linear("proj", 2 * cfg.d_model, cfg.d_model, "embed", "embed")
+        _block_init(mtp.child("block"), cfg,
+                    "moe" if cfg.family == "moe" else "dense")
+        all_paths += [p for p in b.linear_paths if p[0] == "mtp"]
+
+    all_paths += [p for p in b.linear_paths if p[0] == "lm_head"]
+    return b.params, b.axes, all_paths
+
+
+# ---------------------------------------------------------------------------
+# Shared forward plumbing
+# ---------------------------------------------------------------------------
+
+
+def _rope_dim(cfg: ModelConfig) -> int:
+    if cfg.attn_type == "mla":
+        return cfg.qk_rope_head_dim
+    if cfg.family == "retnet":
+        return cfg.d_model // cfg.n_heads
+    return cfg.head_dim_
+
+
+def _rope_tables(cfg: ModelConfig, s: int):
+    if not cfg.rope:
+        return None
+    th = orp.rope_thetas(_rope_dim(cfg), cfg.rope_base)
+    sin, cos = orp.rope_table(jnp.arange(s), th)
+    return sin, cos
+
+
+def _embed(params: Params, batch: Params, cfg: ModelConfig) -> jax.Array:
+    x = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        p = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([p, x[:, p.shape[1]:]], axis=1)
+    if cfg.abs_pos_embed:
+        x = x + _sinusoidal(jnp.arange(x.shape[1]), cfg.d_model)[None].astype(x.dtype)
+    return x
+
+
+def _sinusoidal(pos: jax.Array, d: int) -> jax.Array:
+    """Sinusoidal absolute position embeddings; `pos` may be traced (decode)."""
+    pos = pos.astype(jnp.float32)[..., None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _run_group(params, gname, count, kind, x, cfg, engine, phase, rope,
+               enc_kv=None, remat: bool = True, cache_len: int = 0):
+    """Scan one homogeneous layer group over the sequence-major activations."""
+    flags = (hybrid_full_attn_flags(cfg, count) if kind == "hybrid"
+             else jnp.zeros(count, bool))
+
+    def body(carry, per_layer):
+        xc, aux_acc = carry
+        pl, flag = per_layer
+        # Sequence-parallel residual stream: the scan carry (= the per-layer
+        # activation saved for remat) shards over the TP axis.  No-op without
+        # an active sharding context.
+        xc = constrain(xc, ("batch", "seq", None))
+        y, cache, aux = _block_apply(pl, xc, cfg, engine, phase, kind,
+                                     rope=rope, full_attn=flag, enc_kv=enc_kv,
+                                     cache_len=cache_len)
+        y = y.astype(xc.dtype)     # keep the residual stream in param dtype
+        if phase == "train":
+            cache = None       # don't materialize per-layer K/V during training
+        return (y, aux_acc + aux), cache
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if (remat and phase == "train") else body
+    (x, aux), caches = jax.lax.scan(fn, (x, jnp.float32(0.0)),
+                                    (params[gname], flags))
+    return x, aux, caches
+
+
+def _encode(params, batch, cfg, engine, phase):
+    src = batch["src_embeds"].astype(jnp.dtype(cfg.param_dtype))
+    src = src + _sinusoidal(jnp.arange(src.shape[1]),
+                            cfg.d_model)[None].astype(src.dtype)
+    x, _, _ = _run_group(params, "enc_blocks", cfg.encoder_layers, "enc",
+                         src, cfg, engine, phase, rope=None, remat=False)
+    return L.norm_full(params["enc_final_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def forward_train(params: Params, batch: Params, cfg: ModelConfig,
+                  engine: HSAEngine) -> tuple[jax.Array, Params]:
+    """Teacher-forced loss.  batch: tokens/labels [B,S] (+frontend tensors)."""
+    x = _embed(params, batch, cfg)
+    s = x.shape[1]
+    rope = _rope_tables(cfg, s)
+    enc_kv = _encode(params, batch, cfg, engine, "train") if cfg.is_encdec else None
+
+    aux_total = jnp.float32(0.0)
+    for gname, count, kind in layer_groups(cfg):
+        if kind == "enc":
+            continue
+        x, aux, _ = _run_group(params, gname, count, kind, x, cfg, engine,
+                               "train", rope, enc_kv=enc_kv)
+        aux_total += aux
+
+    h = L.norm_full(params["final_norm"], x, cfg)
+    logits = engine.linear(params["lm_head"], h, "train")
+    loss, n_tok = _xent(logits, batch["labels"], cfg)
+
+    if cfg.mtp and "labels" in batch:
+        loss = loss + 0.3 * _mtp_loss(params, x, batch, cfg, engine)
+
+    metrics = {"loss": loss, "aux_loss": aux_total, "tokens": n_tok}
+    return loss + aux_total, metrics
+
+
+def _xent(logits: jax.Array, labels: jax.Array, cfg: ModelConfig):
+    mask = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, lse - gold, 0.0)
+    n = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(nll) / n, n
+
+
+def _mtp_loss(params, x, batch, cfg, engine):
+    """DeepSeek-V3 depth-1 MTP: predict token t+2 from [h_t ; emb(tok_{t+1})]."""
+    emb_next = params["embed"][batch["tokens"]][:, 1:]
+    h_in = jnp.concatenate([x[:, :-1], emb_next], axis=-1)
+    h = engine.linear(params["mtp"]["proj"], h_in, "train")
+    h, _, _ = _block_apply(params["mtp"]["block"], h, cfg, engine, "train",
+                           "moe" if cfg.family == "moe" else "dense",
+                           rope=_rope_tables(cfg, h.shape[1]))
+    h = L.norm_full(params["final_norm"], h, cfg)
+    logits = engine.linear(params["lm_head"], h, "train")
+    labels2 = jnp.pad(batch["labels"][:, 2:], ((0, 0), (0, 1)),
+                      constant_values=-1)[:, :h.shape[1]]
+    loss, _ = _xent(logits, labels2, cfg)
+    return loss
+
+
+def forward_prefill(params: Params, batch: Params, cfg: ModelConfig,
+                    engine: HSAEngine, cache_len: int = 0
+                    ) -> tuple[jax.Array, Params]:
+    """Prompt processing (MMM phase).  Returns (last logits [B,V], cache).
+
+    `cache_len` > prompt length reserves KV slots for subsequent decoding.
+    """
+    x = _embed(params, batch, cfg)
+    b, s, _ = x.shape
+    rope = _rope_tables(cfg, s)
+    enc_kv = _encode(params, batch, cfg, engine, "prefill") if cfg.is_encdec else None
+
+    caches = {}
+    for gname, count, kind in layer_groups(cfg):
+        if kind == "enc":
+            continue
+        x, _, cache = _run_group(params, gname, count, kind, x, cfg, engine,
+                                 "prefill", rope, enc_kv=enc_kv, remat=False,
+                                 cache_len=cache_len)
+        caches[gname] = cache
+
+    h = L.norm_full(params["final_norm"], x[:, -1:], cfg)
+    logits = engine.linear(params["lm_head"], h, "prefill")[:, 0]
+
+    caches["pos"] = jnp.int32(s)
+    if cfg.rope:
+        caches["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base, pos=s)
+    return logits, caches
+
+
+def forward_decode(params: Params, tokens: jax.Array, cache: Params,
+                   cfg: ModelConfig, engine: HSAEngine
+                   ) -> tuple[jax.Array, Params]:
+    """One generation step (MVM phase).  tokens [B, 1]."""
+    x = params["embed"][tokens]
+    pos = cache["pos"]
+    if cfg.abs_pos_embed:
+        x = x + _sinusoidal(pos[None], cfg.d_model)[None].astype(x.dtype)
+
+    rope = None
+    new_cache: Params = {"pos": pos + 1}
+    if cfg.rope:
+        st: orp.OnlineRopeState = cache["rope"]
+        rope = (st.sin, st.cos)                      # C4 Embed mode
+        th = orp.rope_thetas(_rope_dim(cfg), cfg.rope_base)
+        new_cache["rope"] = orp.advance(st, th)      # C4 Update mode
+
+    for gname, count, kind in layer_groups(cfg):
+        if kind == "enc":
+            continue
+        dkind = "dec" if kind == "dec" else kind
+
+        def body(xc, per_layer):
+            pl, cl = per_layer
+            y, c2 = _block_decode(pl, xc, cfg, engine, dkind, cl, pos, rope=rope)
+            return y.astype(xc.dtype), c2
+
+        x, new_g = jax.lax.scan(body, x, (params[gname], cache[gname]))
+        new_cache[gname] = new_g
+
+    h = L.norm_full(params["final_norm"], x, cfg)
+    logits = engine.linear(params["lm_head"], h, "decode")[:, 0]
+    return logits, new_cache
+
+
+def make_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16) -> Params:
+    """Cold caches for decode-only dry-runs (pos = cache_len - 1)."""
+    caches: Params = {"pos": jnp.int32(cache_len - 1)}
+    if cfg.rope:
+        caches["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base,
+                                        pos=cache_len - 1)
+
+    def one_layer(kind):
+        if kind == "ssm":
+            return S.mamba_make_cache(cfg, batch)
+        if kind == "retnet":
+            return R.retention_make_cache(cfg, batch)
+        if kind == "hybrid":
+            return {"attn": L.gqa_make_cache(cfg, batch, cache_len, dtype),
+                    "mamba": S.mamba_make_cache(cfg, batch)}
+        if cfg.attn_type == "mla":
+            c = L.mla_make_cache(cfg, batch, cache_len, dtype)
+        else:
+            c = L.gqa_make_cache(cfg, batch, cache_len, dtype)
+        if kind == "dec":
+            kv, hd = cfg.n_kv_heads, cfg.head_dim_
+            src = cfg.frontend_tokens or cache_len
+            return {"self": c,
+                    "cross_k": jnp.zeros((batch, src, kv, hd), dtype),
+                    "cross_v": jnp.zeros((batch, src, kv, hd), dtype)}
+        return c
+
+    for gname, count, kind in layer_groups(cfg):
+        if kind == "enc":
+            continue
+        caches[gname] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (count,) + x.shape), one_layer(kind))
+    return caches
+
+
+def cache_axes(cfg: ModelConfig) -> Params:
+    """Logical sharding axes mirroring `make_decode_cache` (runtime/sharding).
+
+    'batch' shards over DP axes when divisible; 'cache' (the KV length axis)
+    picks up the 'data' axis when batch fell through (long_500k, batch=1);
+    'inner'/'kv'/'heads'/'mlp' ride the TP axis where divisible.
+    """
+    gqa_axes = {"k": ("layers", "batch", "cache", "kv", None),
+                "v": ("layers", "batch", "cache", "kv", None)}
+    mamba_axes = {"h": ("layers", "batch", "inner", None),
+                  "conv": ("layers", "batch", None, "inner")}
+
+    def one(kind):
+        if kind == "ssm":
+            return mamba_axes
+        if kind == "retnet":
+            return {"s": ("layers", "batch", "heads", None, "mlp")}
+        if kind == "hybrid":
+            return {"attn": gqa_axes, "mamba": mamba_axes}
+        if cfg.attn_type == "mla":
+            c = {"c_kv": ("layers", "batch", "cache", None),
+                 "k_rope": ("layers", "batch", "cache", None)}
+        else:
+            c = gqa_axes
+        if kind == "dec":
+            return {"self": c,
+                    "cross_k": ("layers", "batch", None, "kv", None),
+                    "cross_v": ("layers", "batch", None, "kv", None)}
+        return c
+
+    axes: Params = {"pos": ()}
+    if cfg.rope:
+        axes["rope"] = None          # tiny angle memory: replicated
+    for gname, count, kind in layer_groups(cfg):
+        if kind == "enc":
+            continue
+        axes[gname] = one(kind)
+    return axes

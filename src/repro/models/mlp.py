@@ -1,0 +1,292 @@
+"""Feed-forward layers: gated dense MLP and top-k MoE with capacity dispatch.
+
+The MoE dispatch is the sort-based, O(tokens * top_k) scheme used by
+production JAX MoE stacks: route -> flatten (token, expert) assignments ->
+sort by expert -> positions within expert via counts/offsets -> scatter into
+``[E, capacity, D]`` buffers (mode='drop' handles overflow) -> per-expert
+batched matmuls (expert dim sharded over the 'model' mesh axis = expert
+parallelism; GSPMD inserts the all-to-alls at the dispatch/combine
+resharding points) -> gather back with gate weighting.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hsa import HSAEngine
+from repro.models.config import ModelConfig
+from repro.models.modules import ParamBuilder
+from repro.runtime.sharding import constrain
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Dense gated MLP (silu(x W_gate) * (x W_up)) W_down — llama-family standard
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(b: ParamBuilder, cfg: ModelConfig, d_ff: int | None = None,
+             gated: bool = True) -> None:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if gated:
+        b.linear("wg", d, f, "embed", "mlp")
+    b.linear("wi", d, f, "embed", "mlp")
+    b.linear("wo", f, d, "mlp", "embed")
+
+
+def mlp_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
+              phase: str) -> jax.Array:
+    up = engine.linear(p["wi"], x_star, phase, row_scale=sig_inv)
+    if "wg" in p:
+        gate = engine.linear(p["wg"], x_star, phase, row_scale=sig_inv)
+        up = jax.nn.silu(gate) * up
+    else:
+        up = jax.nn.gelu(up)
+    return engine.linear(p["wo"], up, phase)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+
+def moe_init(b: ParamBuilder, cfg: ModelConfig) -> None:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    b.linear("router", d, e, "embed", None)
+    sub = b.child("experts")
+    sub.param("wg", (e, d, f), ("experts", "embed", "mlp"))
+    sub.param("wi", (e, d, f), ("experts", "embed", "mlp"))
+    sub.param("wo", (e, f, d), ("experts", "mlp", "embed"))
+    if cfg.n_shared_experts:
+        shared = b.child("shared")
+        mlp_init(shared, cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+
+
+def _expert_weight(pe: Params, name: str) -> jax.Array:
+    """Expert weight in f32 — dequantized from MXINT4 if deployed (C2 for MoE).
+
+    When models/deploy.py has quantized the stacked expert tensors, the HLO
+    streams the 4.25-bit packed buffers and dequantizes on-chip — the paper's
+    decode dataflow generalized to expert weights.
+    """
+    if name in pe:
+        return pe[name].astype(jnp.float32)
+    from repro.models.deploy import dequantize_stacked  # local import, no cycle
+    return dequantize_stacked(pe, name)
+
+
+def _round_cap(cap: int) -> int:
+    return ((cap + 255) // 256) * 256 if cap > 256 else cap
+
+
+def _dispatch(x: jax.Array, idx: jax.Array, gates: jax.Array, e: int,
+              cap: int):
+    """Capacity dispatch of [T, D] rows into [E, cap, D], slot by slot.
+
+    Processing the top-k slots one at a time keeps every intermediate at
+    [T, D] (one gather/scatter per slot) instead of [T*k, D] — at ds-v3 scale
+    the flattened form materialized multi-GB gather temporaries per device.
+
+    Returns (buf, slots) where slots is a list of (expert_id [T], pos [T],
+    gate [T]) per top-k slot; pos == cap marks dropped assignments.
+    """
+    t, d = x.shape
+    k = idx.shape[-1]
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    fill = jnp.zeros((e,), jnp.int32)
+    slots = []
+    for j in range(k):
+        ej = idx[:, j]
+        counts = jnp.bincount(ej, length=e)
+        offsets = jnp.cumsum(counts) - counts
+        order = jnp.argsort(ej)
+        rank_sorted = jnp.arange(t, dtype=jnp.int32) - offsets[ej[order]]
+        rank = jnp.zeros((t,), jnp.int32).at[order].set(rank_sorted)
+        pos = fill[ej] + rank
+        pos = jnp.where(pos < cap, pos, cap)               # cap -> dropped
+        buf = buf.at[ej, pos].set(x, mode="drop")
+        slots.append((ej, pos, gates[:, j]))
+        fill = fill + counts
+    return buf, slots
+
+
+def _combine(out_buf: jax.Array, slots, t: int, dtype) -> jax.Array:
+    """Inverse of `_dispatch`: gather expert outputs, gate-weight, sum/token."""
+    e, cap, d = out_buf.shape
+    ob = out_buf.astype(dtype)
+    y = jnp.zeros((t, d), jnp.float32)
+    for ej, pos, gate in slots:
+        picked = ob[ej, jnp.minimum(pos, cap - 1)]
+        picked = jnp.where((pos < cap)[:, None], picked, jnp.zeros((), dtype))
+        y = y + picked.astype(jnp.float32) * gate[:, None].astype(jnp.float32)
+    return y
+
+
+def _expert_ffn(buf: jax.Array, wg, wi, wo) -> jax.Array:
+    """buf [E, C, D] -> [E, C, D] through each expert's gated FFN."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32), wg))
+    h = h * jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32), wi)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+def _moe_core_local(x: jax.Array, idx, gates, wg, wi, wo, e: int, cap: int):
+    """Single-device MoE core (smoke tests / no sharding context)."""
+    buf, slots = _dispatch(x, idx, gates, e, cap)
+    out_buf = _expert_ffn(buf, wg, wi, wo)
+    return _combine(out_buf, slots, x.shape[0], x.dtype)
+
+
+def _moe_core_sharded(x, idx, gates, p_experts: Params, cfg: ModelConfig,
+                      mesh, policy) -> jax.Array:
+    """Expert-parallel MoE via shard_map (the production path).
+
+    Tokens are row-sharded over the DP axes and *replicated* over the TP
+    ('model') axis; experts are sharded over 'model'.  Because those are
+    different mesh axes, dispatch needs NO collective: each device locally
+    packs its token rows destined for its own E/n_tp expert slice.  Expert
+    weights arrive FSDP-sharded on the d_model dim and are all-gathered over
+    the DP axes just-in-time (ZeRO-3 style).  The only per-layer collective
+    on the critical path is one psum of the [T_local, D] partial outputs over
+    'model' — the same class as a dense TP FFN.  All [T*k, D]-scale tensors
+    stay shard-local (GSPMD's gather handling materialized them replicated —
+    TBs at ds-v3 scale; see EXPERIMENTS.md §Dry-run).
+    """
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    tp = "model" if "model" in mesh.shape and e % mesh.shape["model"] == 0 \
+        else None
+    n_tp = mesh.shape[tp] if tp else 1
+    t_loc = t // n_dp
+    cap_loc = _round_cap(int(t_loc * k / e * cfg.capacity_factor) + 1)
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.sharding import spec_for_tensor
+
+    def wspec(w, logical):
+        # match the rules engine so no resharding is inserted at the boundary
+        return spec_for_tensor(w.shape, logical, mesh, policy)
+
+    wg, wi, wo = (p_experts.get(n) for n in ("wg", "wi", "wo"))
+    quantized = wg is None
+    in_axes = ("experts", "embed", "mlp")     # wg/wi (+ their packed forms)
+    out_axes = ("experts", "mlp", "embed")    # wo
+    if quantized:
+        wg_p, wi_p, wo_p = (p_experts[f"{n}_mx"] for n in ("wg", "wi", "wo"))
+        w_args = (wg_p["packed"], wg_p["exps"], wi_p["packed"], wi_p["exps"],
+                  wo_p["packed"], wo_p["exps"])
+        w_specs = tuple(wspec(w, ax) for w, ax in zip(
+            w_args, (in_axes, in_axes, in_axes, in_axes, out_axes, out_axes)))
+        gather_axes = (1, 1, 1, 1, 2, 2)      # the FSDP ('embed') dim of each
+    else:
+        w_args = (wg, wi, wo)
+        w_specs = (wspec(wg, in_axes), wspec(wi, in_axes), wspec(wo, out_axes))
+        gather_axes = (1, 1, 2)
+
+    def _gather_fsdp(w, ax, spec):
+        names = spec[ax] if ax < len(spec) else None
+        if names is None:
+            return w
+        names = (names,) if isinstance(names, str) else tuple(names)
+        return jax.lax.all_gather(w, names, axis=ax, tiled=True)
+
+    def local_moe(x_loc, idx_loc, gates_loc, *w_loc):
+        # ZeRO-3: gather each weight's FSDP-sharded dim just-in-time.
+        w_loc = tuple(_gather_fsdp(w, ax, spec)
+                      for w, ax, spec in zip(w_loc, gather_axes, w_specs))
+        if quantized:
+            from repro.models.deploy import dequantize_stacked
+            pg = {"wg_mx": {"packed": w_loc[0], "exps": w_loc[1]},
+                  "wi_mx": {"packed": w_loc[2], "exps": w_loc[3]},
+                  "wo_mx": {"packed": w_loc[4], "exps": w_loc[5]}}
+            wg_l = dequantize_stacked(pg, "wg")
+            wi_l = dequantize_stacked(pg, "wi")
+            wo_l = dequantize_stacked(pg, "wo")
+        else:
+            wg_l, wi_l, wo_l = w_loc
+        e_loc = wg_l.shape[0]
+        first = (jax.lax.axis_index(tp) * e_loc) if tp else 0
+
+        # Keep only assignments routed to this device's expert slice.
+        in_slice = (idx_loc >= first) & (idx_loc < first + e_loc)
+        idx_here = jnp.where(in_slice, idx_loc - first, e_loc)  # e_loc = drop
+        gates_here = jnp.where(in_slice, gates_loc, 0.0)
+
+        buf, slots = _dispatch(x_loc, idx_here, gates_here, e_loc + 1, cap_loc)
+        out_buf = _expert_ffn(buf[:e_loc], wg_l, wi_l, wo_l)
+        out_buf = jnp.concatenate(
+            [out_buf, jnp.zeros((1,) + out_buf.shape[1:], out_buf.dtype)], 0)
+        y_part = _combine(out_buf, slots, x_loc.shape[0], x_loc.dtype)
+        if tp:
+            # Reduce the TP partials on the wire in bf16: each partial is a
+            # short (<= top_k) sum of expert outputs, so a 16-way bf16 tree
+            # reduction is numerically safe and halves the psum bytes
+            # (§Perf cell A iteration 2).
+            y_part = jax.lax.psum(y_part.astype(x_loc.dtype), tp)
+        return y_part.astype(x_loc.dtype)
+
+    manual = set(dp_axes) | ({tp} if tp else set())
+    y = jax.shard_map(
+        local_moe,
+        mesh=mesh,
+        in_specs=(P(dp_axes or None, None), P(dp_axes or None, None),
+                  P(dp_axes or None, None)) + w_specs,
+        out_specs=P(dp_axes or None, None),
+        axis_names=manual,
+        check_vma=False,
+    )(x, idx, gates, *w_args)
+    return y.astype(jnp.float32)
+
+
+def moe_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
+              phase: str, cfg: ModelConfig
+              ) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,D], router aux loss scalar)."""
+    from repro.runtime.sharding import current_ctx
+
+    bsz, s, d = x_star.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = bsz * s
+
+    # Router consumes the fused (x*, sigma^{-1}) pair like any linear (C3).
+    logits = engine.linear(p["router"], x_star, phase, row_scale=sig_inv)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).reshape(t, e)
+    probs = constrain(probs, ("batch", None))
+
+    # Expert FFN inputs must be actually normalized: apply sigma^{-1} once
+    # here (cheap vs riding row scales through the dispatch permutation).
+    x = x_star if sig_inv is None else (
+        x_star * sig_inv[..., None]).astype(x_star.dtype)
+    x = constrain(x.reshape(t, d), ("batch", None))
+
+    gates, idx = jax.lax.top_k(probs, k)                   # [T, k]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # Load-balance auxiliary loss (standard switch-style).
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = jnp.sum(me * ce) * e * cfg.router_aux_coef
+
+    ctx = current_ctx()
+    if ctx is not None:
+        y = _moe_core_sharded(x, idx, gates, p["experts"], cfg, *ctx)
+    else:
+        cap = _round_cap(int(t * k / e * cfg.capacity_factor) + 1)
+        wg = _expert_weight(p["experts"], "wg")
+        wi = _expert_weight(p["experts"], "wi")
+        wo = _expert_weight(p["experts"], "wo")
+        y = _moe_core_local(x, idx, gates, wg, wi, wo, e, cap)
+
+    if cfg.n_shared_experts:
+        y = y.astype(jnp.float32) + mlp_apply(
+            p["shared"], x_star, sig_inv, engine, phase
+        ).reshape(t, d).astype(jnp.float32)
+    return y.reshape(bsz, s, d).astype(x_star.dtype), aux

@@ -1,0 +1,135 @@
+"""Minimal functional param-tree module system (no flax dependency).
+
+Params are plain nested dicts of jnp arrays — trivially checkpointable and
+shardable.  A `ParamBuilder` records, while initializing:
+
+  * the param tree itself,
+  * a parallel tree of *logical sharding axes* per tensor dimension
+    (mapped to mesh axes by runtime/sharding.py), and
+  * the tree-paths of every linear layer (so PTQ deployment can find and
+    quantize exactly the matmul weights — the paper's Section III pipeline).
+
+Logical axis vocabulary (see runtime/sharding.py for the mesh mapping):
+  'embed'   — d_model-sized dims          (FSDP candidate)
+  'vocab'   — vocabulary dims             (TP candidate)
+  'heads'   — attention-head dims         (TP candidate)
+  'mlp'     — FFN hidden dims             (TP candidate)
+  'experts' — MoE expert dims             (EP candidate)
+  'kv'      — KV-head dims
+  'inner'   — SSM inner-channel dims      (TP candidate)
+  None      — replicated
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+Axes = dict[str, Any]
+
+
+@dataclasses.dataclass
+class ParamBuilder:
+    key: jax.Array
+    dtype: Any = jnp.float32
+    abstract: bool = False           # True: record ShapeDtypeStructs only
+    params: Params = dataclasses.field(default_factory=dict)
+    axes: Axes = dataclasses.field(default_factory=dict)
+    linear_paths: list[tuple[str, ...]] = dataclasses.field(default_factory=list)
+    _path: tuple[str, ...] = ()
+
+    def _next_key(self) -> jax.Array:
+        if self.abstract:
+            return self.key
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def child(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(key=self._next_key(), dtype=self.dtype,
+                           abstract=self.abstract,
+                           linear_paths=self.linear_paths,
+                           _path=self._path + (name,))
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+    def param(self, name: str, shape: tuple[int, ...], axes: tuple,
+              init: str = "normal", scale: float | None = None,
+              dtype=None) -> jax.Array:
+        assert len(axes) == len(shape), (name, shape, axes)
+        dtype = dtype or self.dtype
+        if self.abstract:
+            v = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+            self.params[name] = v
+            self.axes[name] = axes
+            return v
+        if init == "normal":
+            std = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+            v = jax.random.normal(self._next_key(), shape, jnp.float32) * std
+        elif init == "zeros":
+            v = jnp.zeros(shape, jnp.float32)
+        elif init == "ones":
+            v = jnp.ones(shape, jnp.float32)
+        else:
+            raise ValueError(init)
+        v = v.astype(dtype)
+        self.params[name] = v
+        self.axes[name] = axes
+        return v
+
+    def linear(self, name: str, k: int, n: int, k_axis: str | None,
+               n_axis: str | None, bias: bool = False,
+               scale: float | None = None) -> None:
+        """A matmul weight ``W[K, N]`` executed through the HSA engine."""
+        sub = self.child(name)
+        sub.param("w", (k, n), (k_axis, n_axis), scale=scale)
+        if bias:
+            sub.param("b", (n,), (n_axis,), init="zeros")
+        self.linear_paths.append(self._path + (name,))
+
+
+def tree_get(tree: Params, path: tuple[str, ...]) -> Any:
+    for p in path:
+        tree = tree[p]
+    return tree
+
+
+def stack_layers(key: jax.Array, n_layers: int, build_one, dtype=jnp.float32,
+                 abstract: bool = False):
+    """Initialize a scanned layer stack: every leaf gains a leading [L] dim.
+
+    `build_one(builder)` populates one layer's params.  Returns
+    (stacked params, per-layer axes with 'layers' prepended, linear paths).
+    """
+    proto = ParamBuilder(key=jax.random.key(0), dtype=dtype, abstract=True)
+    build_one(proto)
+    axes = jax.tree.map(lambda a: ("layers",) + a, proto.axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+    if abstract:
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_layers,) + s.shape, s.dtype),
+            proto.params)
+        return stacked, axes, proto.linear_paths
+
+    def init_one(k):
+        b = ParamBuilder(key=k, dtype=dtype)
+        build_one(b)
+        return b.params
+
+    keys = jax.random.split(key, n_layers)
+    stacked = jax.vmap(init_one)(keys)
+    return stacked, axes, proto.linear_paths
+
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params: Params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

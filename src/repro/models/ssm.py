@@ -1,0 +1,171 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b; the SSM half of hymba).
+
+Diagonal-A selective scan.  Per channel d and state n:
+
+    h_t = exp(dt_t * A[d,n]) * h_{t-1} + dt_t * B_t[n] * x_t[d]
+    y_t = sum_n C_t[n] * h_t[d,n]  +  D[d] * x_t[d]
+
+Training/prefill runs a **chunked** scan (DESIGN.md §3): an outer
+`jax.lax.scan` over chunks of `cfg.ssm_chunk` tokens carries the O(1) state,
+and an inner `associative_scan` materializes ``[B, chunk, d_inner, state]``
+only transiently — never the full-sequence state tensor (which at
+falcon-mamba scale would be ~TB).  Decode is the plain one-step recurrence —
+an MVM-shaped, memory-bound workload, exactly where the paper's MXINT4
+weight path pays off.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hsa import HSAEngine
+from repro.models.config import ModelConfig
+from repro.models.modules import ParamBuilder
+
+Params = dict[str, Any]
+
+
+def mamba_init(b: ParamBuilder, cfg: ModelConfig) -> None:
+    d, di, n, r = cfg.d_model, cfg.d_inner_, cfg.ssm_state, cfg.dt_rank_
+    b.linear("in_proj", d, 2 * di, "embed", "inner")       # x and z branches
+    b.param("conv_w", (cfg.conv_width, di), (None, "inner"),
+            scale=1.0 / cfg.conv_width)
+    b.param("conv_b", (di,), ("inner",), init="zeros")
+    b.linear("x_proj", di, r + 2 * n, "inner", None)       # dt, B, C
+    b.linear("dt_proj", r, di, None, "inner", bias=True)
+    b.param("a_log", (di, n), ("inner", None), init="ones")
+    b.param("d_skip", (di,), ("inner",), init="ones")
+    b.linear("out_proj", di, d, "inner", "embed")
+
+
+def _ssm_inputs(p: Params, xz: jax.Array, engine: HSAEngine, phase: str,
+                cfg: ModelConfig):
+    """Split in_proj output, return (x_conv_input, z, dt, Bc, Cc)."""
+    di, n, r = cfg.d_inner_, cfg.ssm_state, cfg.dt_rank_
+    x, z = xz[..., :di], xz[..., di:]
+    dbc = engine.linear(p["x_proj"], x, phase)
+    dt = jax.nn.softplus(engine.linear(p["dt_proj"], dbc[..., :r], phase))
+    bc, cc = dbc[..., r:r + n], dbc[..., r + n:]
+    return x, z, dt, bc, cc
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over seq.  x [B,S,di], w [cw,di]."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state                                       # [B, cw-1, di]
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    return jax.nn.silu(out + bias)
+
+
+def mamba_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
+                phase: str, cfg: ModelConfig
+                ) -> tuple[jax.Array, Params]:
+    """Full-sequence chunked selective scan.  Returns (y, final ssm cache)."""
+    bsz, s, _ = x_star.shape
+    di, n = cfg.d_inner_, cfg.ssm_state
+    chunk = min(cfg.ssm_chunk, s)
+
+    xz = engine.linear(p["in_proj"], x_star, phase, row_scale=sig_inv)
+    xc, z, dt, bc, cc = _ssm_inputs(p, xz, engine, phase, cfg)
+    xc = _conv_causal(xc, p["conv_w"], p["conv_b"])
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # [di, n], negative
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, b2 + a2 * b1
+
+    def scan_block(h0, dt_c, xc_c, bc_c, cc_c):
+        """One chunk.  Inputs seq-major [c, B, ...]; the [c, B, di, n] decay
+        and state tensors exist only inside this block (transient VMEM-scale
+        working set — never the full sequence; DESIGN.md §3 'chunked')."""
+        da_c = jnp.exp(dt_c[..., None] * a)                # [c, B, di, n]
+        db_c = (dt_c * xc_c)[..., None] * bc_c[..., None, :]
+        a_sc, b_sc = jax.lax.associative_scan(combine, (da_c, db_c), axis=0)
+        h = a_sc * h0[None] + b_sc
+        y = jnp.einsum("sbdn,sbn->sbd", h, cc_c)
+        return h[-1], y
+
+    # seq-major [S, B, ...] f32 views of the small per-step inputs
+    dt_s = jnp.moveaxis(dt.astype(jnp.float32), 1, 0)
+    xc_s = jnp.moveaxis(xc.astype(jnp.float32), 1, 0)
+    bc_s = jnp.moveaxis(bc.astype(jnp.float32), 1, 0)
+    cc_s = jnp.moveaxis(cc.astype(jnp.float32), 1, 0)
+    main, rem = (s // chunk) * chunk, s % chunk
+    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+
+    def chunk_step(h, blk):
+        return scan_block(h, *blk)
+
+    def to_chunks(t):
+        return t[:main].reshape(main // chunk, chunk, *t.shape[1:])
+
+    h_last, ys = jax.lax.scan(
+        chunk_step, h0,
+        (to_chunks(dt_s), to_chunks(xc_s), to_chunks(bc_s), to_chunks(cc_s)))
+    y_main = ys.reshape(main, bsz, di)
+    if rem:
+        h_last, y_rem = scan_block(h_last, dt_s[main:], xc_s[main:],
+                                   bc_s[main:], cc_s[main:])
+        y_seq = jnp.concatenate([y_main, y_rem], axis=0)
+    else:
+        y_seq = y_main
+    y = jnp.moveaxis(y_seq, 0, 1)
+
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = engine.linear(p["out_proj"], y.astype(x_star.dtype), phase)
+    pre = xz[..., :di].astype(jnp.float32)                 # pre-conv inputs
+    cw = cfg.conv_width
+    if s >= cw - 1:
+        conv_state = pre[:, s - (cw - 1):]
+    else:
+        conv_state = jnp.concatenate(
+            [jnp.zeros((bsz, cw - 1 - s, di), jnp.float32), pre], axis=1)
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def mamba_decode(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
+                 cfg: ModelConfig, cache: Params
+                 ) -> tuple[jax.Array, Params]:
+    """One-step recurrence (O(1) state) — the edge decode workload."""
+    bsz = x_star.shape[0]
+    di, n = cfg.d_inner_, cfg.ssm_state
+
+    xz = engine.linear(p["in_proj"], x_star, "decode", row_scale=sig_inv)
+    x_raw = xz[..., :di]                                   # pre-conv input
+    # Ring conv state: shift in the newest input.
+    conv_state = jnp.concatenate(
+        [cache["conv"][:, 1:], x_raw.astype(jnp.float32)], axis=1)
+    xc = _conv_causal(x_raw, p["conv_w"], p["conv_b"],
+                      state=cache["conv"].astype(x_raw.dtype))
+    _, z, dt, bc, cc = _ssm_inputs(p, xz, engine, "decode", cfg)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                     # [B, di]
+    da = jnp.exp(dtf[..., None] * a)                       # [B, di, n]
+    db = (dtf * xc[:, 0].astype(jnp.float32))[..., None] * \
+        bc[:, 0].astype(jnp.float32)[:, None, :]
+    h = da * cache["h"] + db
+    y = jnp.einsum("bdn,bn->bd", h, cc[:, 0].astype(jnp.float32))
+    y = y + xc[:, 0].astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32))
+    out = engine.linear(p["out_proj"], y[:, None].astype(x_star.dtype), "decode")
+    return out, {"h": h, "conv": conv_state}
+
+
+def mamba_make_cache(cfg: ModelConfig, batch: int) -> Params:
+    di, n = cfg.d_inner_, cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32),
+    }

@@ -1,0 +1,91 @@
+"""AdamW with warmup+cosine schedule and global-norm clipping.
+
+Moments inherit the param sharding (FSDP: optimizer state is sharded over the
+'data' axis with the params — ZeRO-style).  `moment_dtype='bfloat16'` halves
+optimizer HBM for the 671B config (DESIGN.md §2 scale note); master params
+stay in the model's param_dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def init(params: Params, cfg: AdamWConfig) -> Params:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def update(grads: Params, state: Params, params: Params,
+           cfg: AdamWConfig) -> tuple[Params, Params, dict]:
+    step = state["step"]
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                       # decoupled WD on matrices only
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+        return new_p, m32.astype(mdt), v32.astype(mdt)
+
+    flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t3: t3[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

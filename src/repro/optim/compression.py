@@ -1,0 +1,92 @@
+"""INT8 error-feedback gradient compression (beyond-paper distributed trick).
+
+At 1000+-node scale the cross-pod (DCN) gradient all-reduce is the slowest
+hop.  Compressing gradients to int8 with per-tensor scales cuts those bytes
+4x (vs f32) while error feedback keeps the *accumulated* quantization error
+bounded: the residual of each round is added back before the next round, so
+the compressed sequence tracks the true gradient sum (standard EF-SGD result;
+`tests/test_compression.py` checks the accumulated-error property).
+
+Usage in the train step (runtime/train_step.py, `compress_grads=True`): the
+compression is applied to the gradient tree between backprop and the
+optimizer, carrying the residual in the optimizer-adjacent state.  The wire
+format (int8 + f32 scale) is exactly what a DCN all-reduce would move; the
+roofline accounting in §Perf uses `wire_bytes` for the pod-axis collective
+term.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def init_residuals(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(g: jax.Array, residual: jax.Array
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One tensor: error-feedback int8 quantization.
+
+    Returns (q int8, scale f32, new_residual f32) with
+    ``dequant(q, scale) + new_residual == g + residual`` (exactly, in f32).
+    """
+    target = g.astype(jnp.float32) + residual
+    absmax = jnp.max(jnp.abs(target))
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+    new_residual = target - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grads(grads: Params, residuals: Params
+                     ) -> tuple[Params, Params, jax.Array]:
+    """Tree version.  Returns (dequantized grads, new residuals, wire_bytes).
+
+    The dequantized grads are what the optimizer consumes (= what every
+    worker reconstructs after the int8 all-reduce); wire_bytes counts the
+    int8+scale payload that crosses the DCN.
+    """
+    qs = jax.tree.map(compress, grads, residuals)
+    deq = jax.tree.map(lambda t: decompress(t[0], t[1]), qs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[2], qs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    wire = sum(x.size for x in jax.tree.leaves(grads)) + 4 * len(
+        jax.tree.leaves(grads))
+    return deq, new_res, wire
+
+
+def psum_compressed(grads: Params, residuals: Params, axis_name: str
+                    ) -> tuple[Params, Params]:
+    """shard_map-side int8 all-reduce: quantize locally, psum the int8
+    payload (XLA moves int8 on the wire), dequantize, keep residuals local.
+
+    Scales are max-reduced first so every worker uses one shared scale —
+    required for the int8 sum to be meaningful.
+    """
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        absmax = jax.lax.pmax(jnp.max(jnp.abs(target)), axis_name)
+        scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int8)
+        new_r = target - q.astype(jnp.float32) * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return total.astype(jnp.float32) * scale, new_r
+
+    out = jax.tree.map(one, grads, residuals)
+    summed = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return summed, new_res

@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding rules, step builders, checkpointing,
+fault tolerance, pipeline parallelism."""

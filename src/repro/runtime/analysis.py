@@ -1,0 +1,185 @@
+"""Analytic per-cell workload model: MODEL_FLOPS / HBM bytes / roofline terms.
+
+XLA's `cost_analysis()` counts each `while` (lax.scan) body once — verified
+experimentally (EXPERIMENTS.md §Dry-run methodology) — so scanned-layer models
+under-report FLOPs/bytes by ~L x.  This module derives the terms analytically
+from the config (exact trip counts, standard 6ND accounting), while the
+*collective* term comes from the partitioned HLO with trip-count correction
+(launch/dryrun.py).  Both the analytic and raw-HLO numbers appear in
+EXPERIMENTS.md §Roofline.
+
+Hardware constants (TPU v5e-class, per the assignment):
+    197 TFLOP/s bf16 / chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.models import lm
+from repro.models.config import InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCN_BW = 6.25e9          # ~50 Gb/s effective per-chip cross-pod share
+
+MX_BITS = 4.25           # MXINT4 streamed bits/weight (C2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamCounts:
+    total: int           # all params
+    expert: int          # routed-expert params (EP-sharded, sparsely active)
+    embed: int           # embedding + lm_head
+
+    @property
+    def active(self) -> float:
+        return self.total - self.expert  # + the active slice, added below
+
+
+def param_counts(cfg: ModelConfig) -> ParamCounts:
+    shapes, _, _ = lm.init(cfg, jax.random.key(0), abstract=True)
+    total = expert = 0
+
+    def walk(tree, in_experts):
+        nonlocal total, expert
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                walk(v, in_experts or k == "experts")
+            else:
+                total += v.size
+                if in_experts:
+                    expert += v.size
+
+    walk(shapes, False)
+    embed = shapes["embed"].size + shapes["lm_head"]["w"].size
+    return ParamCounts(total=total, expert=expert, embed=embed)
+
+
+def active_params(cfg: ModelConfig, pc: ParamCounts) -> float:
+    """Params touched per token (MoE: shared + top-k slice of experts)."""
+    if cfg.n_experts:
+        return pc.total - pc.expert * (1 - cfg.top_k / cfg.n_experts)
+    return pc.total
+
+
+def _attn_flops_per_token(cfg: ModelConfig, context: float) -> float:
+    """Score+value matmul FLOPs per token at the given average context."""
+    if cfg.family == "ssm":
+        return 4 * cfg.n_layers * cfg.d_inner_ * cfg.ssm_state
+    if cfg.family == "retnet":
+        dk, dv = cfg.d_model // cfg.n_heads, 2 * cfg.d_model // cfg.n_heads
+        return 4 * cfg.n_layers * cfg.n_heads * dk * dv
+    h, hd = cfg.n_heads, cfg.head_dim_
+    if cfg.attn_type == "mla":
+        hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ctx = min(context, cfg.sliding_window) if cfg.sliding_window else context
+    layers = cfg.n_layers + cfg.encoder_layers
+    ssm_extra = (4 * cfg.n_layers * cfg.d_inner_ * cfg.ssm_state
+                 if cfg.family == "hybrid" else 0)
+    return 4 * layers * h * hd * ctx + ssm_extra
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Per-device, per-step workload of one (arch x shape x mesh) cell."""
+
+    model_flops: float        # useful FLOPs (causal-aware, analytic)
+    hbm_bytes: float          # analytic HBM traffic
+    tokens: float             # tokens processed per step per device
+
+    def compute_term(self) -> float:
+        return self.model_flops / PEAK_FLOPS
+
+    def memory_term(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+
+def train_workload(cfg: ModelConfig, shape: InputShape, n_chips: int,
+                   remat_factor: float = 1.0,
+                   param_bytes_each: float = 2.0,
+                   moment_bytes_each: float = 4.0) -> Workload:
+    """6ND accounting + attention + full-remat recompute.
+
+    fwd 2ND + bwd 4ND (+ remat re-fwd 2ND * remat_factor).
+    HBM: params read fwd+bwd+rematfwd + grads r/w + moments r/w + new params
+    + activation stack w+r (layer inputs, bf16, seq-parallel).
+    """
+    pc = param_counts(cfg)
+    n_act = active_params(cfg, pc)
+    tokens = shape.global_batch * shape.seq_len
+    causal_ctx = shape.seq_len / 2
+    flops_tok = (6 + 2 * remat_factor) * n_act \
+        + 1.5 * _attn_flops_per_token(cfg, causal_ctx)  # fwd+bwd+remat attn
+    model_flops = flops_tok * tokens / n_chips
+
+    p_bytes = pc.total * param_bytes_each
+    weight_traffic = p_bytes * (2 + remat_factor)     # fwd + bwd + remat reads
+    grad_traffic = 2 * p_bytes
+    opt_traffic = 2 * 2 * pc.total * moment_bytes_each + p_bytes
+    act_stack = 2 * (cfg.n_layers + cfg.encoder_layers) * tokens \
+        * cfg.d_model * 2.0                            # save + re-read, bf16
+    hbm = (weight_traffic + grad_traffic + opt_traffic) / n_chips \
+        + act_stack / n_chips
+    return Workload(model_flops, hbm, tokens / n_chips)
+
+
+def prefill_workload(cfg: ModelConfig, shape: InputShape,
+                     n_chips: int) -> Workload:
+    pc = param_counts(cfg)
+    n_act = active_params(cfg, pc)
+    tokens = shape.global_batch * shape.seq_len
+    flops_tok = 2 * n_act + 0.5 * _attn_flops_per_token(cfg, shape.seq_len / 2)
+    model_flops = flops_tok * tokens / n_chips
+    # W8A8 prefill: int8 weights read once per weight tile reuse window;
+    # activations stream through; KV cache written once.
+    hbm = (pc.total * 1.0 + tokens * cfg.d_model * 2 * 4
+           + _cache_bytes(cfg, shape.seq_len, shape.global_batch)) / n_chips
+    return Workload(model_flops, hbm, tokens / n_chips)
+
+
+def _cache_bytes(cfg: ModelConfig, cache_len: int, batch: int,
+                 dtype_bytes: float = 2.0) -> float:
+    """Total decode-cache footprint (read per decode step)."""
+    layers = cfg.n_layers
+    if cfg.family == "ssm":
+        return layers * batch * cfg.d_inner_ * cfg.ssm_state * 4 * 2
+    if cfg.family == "retnet":
+        dk, dv = cfg.d_model // cfg.n_heads, 2 * cfg.d_model // cfg.n_heads
+        return layers * batch * cfg.n_heads * dk * dv * 4 * 2
+    if cfg.attn_type == "mla":
+        per_tok = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        return layers * batch * cache_len * per_tok * dtype_bytes
+    ctx = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    kv = layers * batch * ctx * cfg.n_kv_heads * cfg.head_dim_ * 2 * dtype_bytes
+    if cfg.family == "hybrid":
+        kv += layers * batch * cfg.d_inner_ * cfg.ssm_state * 4 * 2
+    return kv
+
+
+def decode_workload(cfg: ModelConfig, shape: InputShape, n_chips: int,
+                    weight_bits: float = MX_BITS) -> Workload:
+    """One decode step: every active weight streamed, cache read+updated."""
+    pc = param_counts(cfg)
+    n_act = active_params(cfg, pc)
+    b = shape.global_batch
+    flops = (2 * n_act + _attn_flops_per_token(cfg, shape.seq_len)) * b / n_chips
+    # MoE decode with small batch: only experts hit by b*top_k tokens stream.
+    weight_entities = n_act if not cfg.n_experts else (
+        pc.total - pc.expert
+        + pc.expert * min(1.0, b * cfg.top_k / cfg.n_experts))
+    hbm = (weight_entities * weight_bits / 8
+           + _cache_bytes(cfg, shape.seq_len, b)) / n_chips
+    return Workload(flops, hbm, b / n_chips)
+
+
+def cell_workload(cfg: ModelConfig, shape: InputShape, n_chips: int,
+                  **kw) -> Workload:
+    if shape.kind == "train":
+        return train_workload(cfg, shape, n_chips, **kw)
+    if shape.kind == "prefill":
+        return prefill_workload(cfg, shape, n_chips)
+    return decode_workload(cfg, shape, n_chips, **kw)

@@ -1,0 +1,131 @@
+"""Fault tolerance for long multi-pod runs: heartbeats, straggler detection,
+elastic re-meshing.
+
+Large fleets lose nodes mid-run; the framework's contract is:
+
+  1. `HeartbeatMonitor` tracks per-host liveness (on TPU pods this reads the
+     coordination service; here hosts are simulated so the failure path is
+     testable on CPU).
+  2. `StragglerDetector` flags hosts whose step times exceed
+     `threshold x` the fleet median over a sliding window — the mitigation at
+     the launcher level is checkpoint + exclude + re-mesh (same path as a
+     hard failure, just proactive).
+  3. `plan_elastic_mesh` maps surviving chip count -> the largest valid mesh
+     that preserves the 'model' axis (TP degree must not change — param
+     shards would be orphaned otherwise) and shrinks the DP axes; the
+     launcher then restores the latest checkpoint into the new mesh via
+     CheckpointManager.restore(shardings=new) — resharding is free because
+     checkpoints are mesh-agnostic.
+
+`examples/distributed_train.py` + tests/test_fault_tolerance.py exercise the
+full loop: inject failure -> detect -> re-mesh -> restore -> resume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+
+
+@dataclasses.dataclass
+class HostState:
+    last_seen: float
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts: list[str], timeout_s: float = 60.0):
+        now = time.monotonic()
+        self.timeout = timeout_s
+        self.hosts = {h: HostState(last_seen=now) for h in hosts}
+
+    def beat(self, host: str, now: float | None = None) -> None:
+        st = self.hosts[host]
+        st.last_seen = now if now is not None else time.monotonic()
+        st.alive = True
+
+    def mark_failed(self, host: str) -> None:
+        """Out-of-band failure report (e.g. launcher saw the process die)."""
+        self.hosts[host].alive = False
+
+    def check(self, now: float | None = None) -> list[str]:
+        """Returns newly-dead hosts (timeout or marked)."""
+        now = now if now is not None else time.monotonic()
+        dead = []
+        for h, st in self.hosts.items():
+            if st.alive and now - st.last_seen > self.timeout:
+                st.alive = False
+            if not st.alive:
+                dead.append(h)
+        return dead
+
+    def alive_hosts(self) -> list[str]:
+        return [h for h, st in self.hosts.items() if st.alive]
+
+
+class StragglerDetector:
+    """Flags hosts persistently slower than the fleet median."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 16,
+                 min_samples: int = 4):
+        self.threshold = threshold
+        self.window = window
+        self.min_samples = min_samples
+        self.times: dict[str, deque] = defaultdict(
+            lambda: deque(maxlen=window))
+
+    def record(self, host: str, step_time_s: float) -> None:
+        self.times[host].append(step_time_s)
+
+    def stragglers(self) -> list[str]:
+        meds = {h: sorted(ts)[len(ts) // 2]
+                for h, ts in self.times.items() if len(ts) >= self.min_samples}
+        if len(meds) < 2:
+            return []
+        fleet = sorted(meds.values())[len(meds) // 2]
+        return [h for h, m in meds.items() if m > self.threshold * fleet]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    dropped_chips: int
+
+
+def plan_elastic_mesh(alive_chips: int, model_parallel: int = 16,
+                      pods: int = 1) -> MeshPlan:
+    """Largest mesh with the TP degree preserved and DP shrunk to fit.
+
+    TP ('model') cannot change across a restore — every param shard assumes
+    that factor — so we keep it and give DP the biggest power-of-two (or
+    exact) factor that fits the survivors.  Any remainder chips idle until
+    the next full restart (reported as dropped).
+    """
+    assert alive_chips >= model_parallel, "fewer chips than TP degree"
+    dp = alive_chips // (model_parallel * pods)
+    # largest power of two <= dp keeps collectives ring-friendly
+    p = 1
+    while p * 2 <= dp:
+        p *= 2
+    used = p * model_parallel * pods
+    if pods > 1:
+        return MeshPlan(shape=(pods, p, model_parallel),
+                        axes=("pod", "data", "model"),
+                        dropped_chips=alive_chips - used)
+    return MeshPlan(shape=(p, model_parallel), axes=("data", "model"),
+                    dropped_chips=alive_chips - used)
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples: {step: [hosts]}."""
+
+    def __init__(self, schedule: dict[int, list[str]]):
+        self.schedule = schedule
+
+    def maybe_fail(self, step: int, monitor: HeartbeatMonitor) -> list[str]:
+        failed = self.schedule.get(step, [])
+        for h in failed:
+            monitor.mark_failed(h)
+        return failed

@@ -1,0 +1,215 @@
+"""Logical-axis -> mesh-axis sharding rules engine.
+
+Models annotate every param dimension with a *logical* axis name
+(models/modules.py); decode caches carry their own axes tree (lm.cache_axes).
+This module maps logical names onto physical mesh axes with a
+divisibility-aware fallback: each logical name carries an ordered candidate
+list (each candidate = one mesh axis or a composite tuple of axes); the first
+candidate whose axes (a) all exist in the mesh, (b) have a product that evenly
+divides the dimension, and (c) are not already used by another dimension of
+the same tensor wins; otherwise the dimension is replicated.
+
+That one rule serves every arch without special cases: hymba's 25 heads fall
+through a 16-way 'model' axis to replicated (its MLP/inner dims still shard),
+deepseek's 128 heads shard cleanly, long_500k's batch=1 falls through so its
+KV/state length axis picks up the 'data' axis (sequence-sharded cache).
+
+Mesh layout (launch/mesh.py):
+    single-pod:  (data=16, model=16)
+    multi-pod :  (pod=2, data=16, model=16)   -- 'pod' = DCN-connected pods
+
+Baseline policy (the paper-faithful "naive" distribution; §Perf hillclimbs
+swap in variants):
+    * batch over ('pod','data')          (pure DP)
+    * TP over 'model' for heads/mlp/vocab/experts/inner
+    * FSDP (param + optimizer-state sharding) over 'data' for d_model dims
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = dict[str, Any]
+
+Candidates = tuple[tuple[str, ...], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """One named distribution strategy."""
+
+    name: str = "baseline"
+    rules: tuple[tuple[str, Candidates], ...] = (
+        ("vocab", (("model",),)),
+        # Embedding-table dims: the table shards on d_model (TP) with the
+        # vocab rows replicated, so token gathers and their scatter-add
+        # gradients never materialize a full [V, D] tensor (GSPMD handles
+        # dynamic-index scatter poorly on a sharded indexed dim).
+        ("embed_tp", (("model",),)),
+        ("heads", (("model",),)),
+        ("kv", (("model",),)),
+        ("mlp", (("model",),)),
+        ("experts", (("model",),)),
+        ("inner", (("model",),)),
+        ("embed", (("pod", "data"), ("data",))),  # FSDP/ZeRO axes (params+opt)
+        ("batch", (("pod", "data"), ("data",))),
+        ("cache", (("data",), ("model",))),  # KV/state length axis
+        ("seq", (("model",),)),             # activation sequence-parallelism
+        ("capacity", (("data",),)),         # MoE dispatch-buffer rows
+        ("layers", ()),                     # scan dim: never sharded
+    )
+
+    def rule(self, logical: str | None) -> Candidates:
+        if logical is None:
+            return ()
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return ()
+
+    def with_rule(self, logical: str, candidates: Candidates) -> "ShardingPolicy":
+        rules = tuple((k, candidates if k == logical else v)
+                      for k, v in self.rules)
+        if logical not in dict(self.rules):
+            rules = rules + ((logical, candidates),)
+        return dataclasses.replace(self, rules=rules)
+
+
+def spec_for_tensor(shape: tuple[int, ...], axes: tuple,
+                    mesh: Mesh, policy: ShardingPolicy) -> P:
+    """Resolve one tensor's PartitionSpec under the divisibility fallback."""
+    used: set[str] = set()
+    out: list = []
+    for dim, logical in zip(shape, axes):
+        chosen = None
+        for cand in policy.rule(logical):
+            size = 1
+            ok = all(a in mesh.shape and a not in used for a in cand)
+            if not ok:
+                continue
+            for a in cand:
+                size *= mesh.shape[a]
+            if size > 1 and dim % size == 0:
+                chosen = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        out.append(chosen)
+    return P(*out)
+
+
+def _walk(params: Params, axes: Params, fn, path=()):
+    out = {}
+    for k, v in params.items():
+        a = axes.get(k) if isinstance(axes, dict) else None
+        if isinstance(v, dict):
+            out[k] = _walk(v, a if isinstance(a, dict) else {}, fn, path + (k,))
+        elif hasattr(v, "ndim"):
+            out[k] = fn(v, a, path + (k,))
+        else:
+            # Non-dict pytree node (e.g. OnlineRopeState): replicate; jit
+            # in_shardings treats a single spec as a prefix for the subtree.
+            out[k] = P()
+    return out
+
+
+def tree_specs(tree: Params, axes: Params, mesh: Mesh,
+               policy: ShardingPolicy) -> Params:
+    """PartitionSpec tree for any (params/cache) tree; ShapeDtypeStruct-safe.
+
+    Leaves without a matching axes annotation are replicated.
+    """
+
+    def one(leaf, a, path):
+        if a is None or not isinstance(a, tuple) or len(a) != leaf.ndim:
+            return P()
+        return spec_for_tensor(leaf.shape, a, mesh, policy)
+
+    return _walk(tree, axes, one)
+
+
+def tree_shardings(tree: Params, axes: Params, mesh: Mesh,
+                   policy: ShardingPolicy) -> Params:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(tree, axes, mesh, policy),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_shapes: Params, mesh: Mesh,
+                policy: ShardingPolicy) -> Params:
+    """Data-input sharding: leading batch dim over the DP axes."""
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        spec = spec_for_tensor(leaf.shape, ("batch",) + (None,) * (leaf.ndim - 1),
+                               mesh, policy)
+        return spec
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def shardings_from_specs(specs: Params, mesh: Mesh) -> Params:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (logical): a contextvar carries the active
+# (mesh, policy) so model code can annotate intermediates ('seq'-parallel
+# residual stream, MoE dispatch buffers) without threading mesh handles
+# through every layer.  Outside a context (CPU smoke tests) it's a no-op —
+# the MaxText-style logical-constraint pattern.
+# ---------------------------------------------------------------------------
+
+_CTX: contextvars.ContextVar[tuple[Mesh, ShardingPolicy] | None] = \
+    contextvars.ContextVar("sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, policy: ShardingPolicy):
+    tok = _CTX.set((mesh, policy))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current_ctx() -> tuple[Mesh, ShardingPolicy] | None:
+    """The active (mesh, policy), or None outside a sharding context."""
+    return _CTX.get()
+
+
+def constrain(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a context."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, policy = ctx
+    spec = spec_for_tensor(x.shape, logical_axes, mesh, policy)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_tree(tree: Params, axes: Params) -> Params:
+    """`constrain` over a whole tree (e.g. gradients onto the param layout,
+    so optimizer math never runs on accidentally-replicated tensors)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return tree
+    mesh, policy = ctx
+
+    def rec(t, a):
+        if isinstance(t, dict):
+            return {k: rec(v, a.get(k) if isinstance(a, dict) else None)
+                    for k, v in t.items()}
+        if hasattr(t, "ndim") and isinstance(a, tuple) and len(a) == t.ndim:
+            spec = spec_for_tensor(t.shape, a, mesh, policy)
+            return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+        return t
+
+    return rec(tree, axes)

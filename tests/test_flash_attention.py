@@ -1,0 +1,108 @@
+"""Flash attention (custom VJP) vs dense reference: fwd + grads, all masks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import flash_attention
+
+RNG = np.random.default_rng(0)
+
+
+def dense_ref(q, k, v, causal=True, window=0):
+    b, sq, kv, g, hd = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    qpos = np.arange(sq)[:, None]
+    kpos = np.arange(sk)[None, :]
+    mask = np.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+
+
+CASES = [
+    # sq, sk, causal, window, q_chunk, kv_chunk
+    (24, 24, True, 0, 8, 8),
+    (32, 48, False, 0, 16, 16),        # cross/bidirectional
+    (40, 40, True, 12, 16, 8),         # sliding window
+    (33, 57, True, 0, 16, 16),         # non-divisible -> padding path
+    (16, 16, True, 0, 16, 16),         # single tile
+]
+
+
+@pytest.mark.parametrize("sq,sk,causal,window,qc,kc", CASES)
+def test_forward_matches_dense(sq, sk, causal, window, qc, kc):
+    q = jnp.asarray(RNG.normal(size=(2, sq, 2, 3, 16)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, sk, 2, 16)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, sk, 2, 20)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          q_chunk=qc, kv_chunk=kc)
+    want = dense_ref(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("sq,sk,causal,window,qc,kc", CASES)
+def test_gradients_match_dense(sq, sk, causal, window, qc, kc):
+    q = jnp.asarray(RNG.normal(size=(1, sq, 2, 2, 8)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, sk, 2, 8)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, sk, 2, 8)).astype(np.float32))
+
+    def f(q, k, v):
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_chunk=qc, kv_chunk=kc).sum()
+
+    def fr(q, k, v):
+        return dense_ref(q, k, v, causal, window).sum()
+
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_traced_window_hybrid_flags():
+    """window may be a traced scalar (hymba's per-layer full/SWA flags)."""
+    q = jnp.asarray(RNG.normal(size=(1, 16, 1, 2, 8)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, 16, 1, 8)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, 16, 1, 8)).astype(np.float32))
+
+    @jax.jit
+    def f(win):
+        return flash_attention(q, k, v, causal=True, window=win,
+                               q_chunk=8, kv_chunk=8)
+
+    got_w4 = f(jnp.int32(4))
+    want_w4 = dense_ref(q, k, v, True, 4)
+    np.testing.assert_allclose(np.asarray(got_w4), np.asarray(want_w4),
+                               rtol=1e-5, atol=1e-6)
+    got_full = f(jnp.int32(16))
+    want_full = dense_ref(q, k, v, True, 16)
+    np.testing.assert_allclose(np.asarray(got_full), np.asarray(want_full),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_no_quadratic_buffer_in_grad():
+    """The custom VJP must not save per-tile score tensors (the A-m1 fix):
+    grad temp memory stays far below the dense [Sq, Sk] score matrix."""
+    B, S, KV, G, HD = 1, 2048, 2, 2, 32
+
+    def f(q, k, v):
+        return flash_attention(q, k, v, q_chunk=256, kv_chunk=256).sum()
+
+    comp = jax.jit(jax.grad(f, argnums=(0, 1, 2))).lower(
+        jax.ShapeDtypeStruct((B, S, KV, G, HD), jnp.float32),
+        jax.ShapeDtypeStruct((B, S, KV, HD), jnp.float32),
+        jax.ShapeDtypeStruct((B, S, KV, HD), jnp.float32)).compile()
+    temp = comp.memory_analysis().temp_size_in_bytes
+    dense_scores = B * KV * G * S * S * 4
+    assert temp < 0.75 * dense_scores, (temp, dense_scores)

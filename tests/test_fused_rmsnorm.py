@@ -1,0 +1,72 @@
+"""Eq. (4) layer-fused RMSNorm: exactness of the fusion (contribution C3)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fused_rmsnorm as fr
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _data(seed, m, d, n):
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    gamma = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    beta = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(d, n)).astype(np.float32))
+    return y, gamma, beta, w
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 8),
+       d=st.sampled_from([16, 64]), n=st.sampled_from([8, 32]))
+def test_fusion_exact_rmsnorm(seed, m, d, n):
+    """(RMSNorm(y) @ W) * S == (y*gamma @ W) * (sigma^-1 * S)  (Eq. 4)."""
+    y, gamma, beta, w = _data(seed, m, d, n)
+    s_next = 0.37
+    unfused = (fr.rmsnorm(y, gamma) @ w) * s_next
+    y_star, sig_inv = fr.fused_rmsnorm_emit(y, gamma)
+    fused = (y_star @ w) * (sig_inv[:, None] * s_next)
+    np.testing.assert_allclose(np.asarray(unfused), np.asarray(fused),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fusion_with_beta_bias_term(seed):
+    """The B_{n+1} = (beta @ W) * S term of Eq. (4)."""
+    y, gamma, beta, w = _data(seed, 4, 32, 16)
+    s_next = 1.7
+    unfused = (fr.rmsnorm(y, gamma, beta) @ w) * s_next
+    y_star, sig_inv = fr.fused_rmsnorm_emit(y, gamma)
+    b_next = fr.fused_bias(beta, w, s_next)
+    fused = (y_star @ w) * (sig_inv[:, None] * s_next) + b_next
+    np.testing.assert_allclose(np.asarray(unfused), np.asarray(fused),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fusion_exact_layernorm_variant(seed):
+    """The centered (LayerNorm) extension used by starcoder2/seamless."""
+    y, gamma, beta, w = _data(seed, 5, 32, 12)
+    unfused = fr.layernorm(y, gamma) @ w
+    y_star, sig_inv = fr.fused_layernorm_emit(y, gamma)
+    fused = (y_star @ w) * sig_inv[:, None]
+    np.testing.assert_allclose(np.asarray(unfused), np.asarray(fused),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sigma_inv_matches_definition(seed):
+    y, *_ = _data(seed, 6, 64, 1)
+    sig = np.asarray(fr.rms_sigma_inv(y))
+    want = 1.0 / np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1) + 1e-6)
+    np.testing.assert_allclose(sig, want, rtol=1e-5)
+
+
+def test_rmsnorm_dtype_preserved():
+    y = jnp.ones((2, 16), jnp.bfloat16)
+    g = jnp.ones((16,), jnp.float32)
+    assert fr.rmsnorm(y, g).dtype == jnp.bfloat16
+    ys, si = fr.fused_rmsnorm_emit(y, g)
+    assert ys.dtype == jnp.bfloat16 and si.dtype == jnp.float32

@@ -1,0 +1,152 @@
+"""Model-zoo behaviour: prefill->decode consistency per family, train loss,
+HSA phase formats, deployment."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hsa import HSAConfig, HSAEngine
+from repro.models import deploy, frontends, lm
+from repro.models.config import ModelConfig
+
+ENGINE = HSAEngine(HSAConfig())
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=96,
+            vocab_size=256, head_dim=16, vocab_pad_multiple=64,
+            param_dtype="float32")
+
+FAMILIES = {
+    "dense": ModelConfig(name="dense", family="dense", **BASE),
+    "qknorm_bias": ModelConfig(name="qkb", family="dense", qk_norm=True,
+                               qkv_bias=True, **BASE),
+    "layernorm": ModelConfig(name="ln", family="dense",
+                             norm_type="layernorm", **BASE),
+    "moe": ModelConfig(name="moe", family="moe", n_experts=4, top_k=2,
+                       moe_d_ff=64, n_shared_experts=1, capacity_factor=8.0,
+                       **BASE),
+    "ssm": ModelConfig(name="ssm", family="ssm", rope=False, ssm_state=8,
+                       d_inner=128, dt_rank=8, ssm_chunk=8,
+                       **{**BASE, "d_ff": 0}),
+    "retnet": ModelConfig(name="ret", family="retnet",
+                          attn_type="retention", **BASE),
+    "hybrid": ModelConfig(name="hyb", family="hybrid", sliding_window=16,
+                          ssm_state=8, d_inner=128, dt_rank=8, ssm_chunk=8,
+                          **BASE),
+    "mla_moe": ModelConfig(name="mla", family="moe", attn_type="mla",
+                           n_experts=4, top_k=2, moe_d_ff=64,
+                           n_shared_experts=1, first_dense_layers=1,
+                           capacity_factor=8.0, q_lora_rank=32,
+                           kv_lora_rank=32, qk_nope_head_dim=16,
+                           qk_rope_head_dim=8, v_head_dim=16,
+                           **{**BASE, "n_layers": 3}),
+    "vlm": ModelConfig(name="vlm", family="vlm", frontend="vision",
+                       frontend_tokens=8, **BASE),
+    "encdec": ModelConfig(name="ed", family="audio", encoder_layers=2,
+                          rope=False, abs_pos_embed=True,
+                          norm_type="layernorm", frontend="audio",
+                          frontend_tokens=16, **BASE),
+}
+
+
+def _batch(cfg, S, B=2, seed=1):
+    toks = jax.random.randint(jax.random.key(seed), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = frontends.synth_patch_embeds(cfg, B)
+    if cfg.is_encdec:
+        batch["src_embeds"] = frontends.synth_frame_embeds(cfg, B, 16)
+    return batch
+
+
+@pytest.mark.parametrize("fam", sorted(FAMILIES))
+def test_decode_consistency(fam):
+    """prefill(S) + decode(token S) == prefill(S+1) last logits."""
+    cfg = FAMILIES[fam]
+    S = 12 if fam == "hybrid" else 20  # hybrid exact only inside the window
+    params, _, _ = lm.init(cfg, jax.random.key(0))
+    b_s = _batch(cfg, S + 1)
+    batch = {k: (v[:, :S] if k in ("tokens", "labels") else v)
+             for k, v in b_s.items()}
+    _, cache = lm.forward_prefill(params, batch, cfg, ENGINE, cache_len=S + 4)
+    lg_dec, _ = lm.forward_decode(params, b_s["tokens"][:, S:S + 1], cache,
+                                  cfg, ENGINE)
+    lg_ref, _ = lm.forward_prefill(params, b_s, cfg, ENGINE)
+    rel = float(jnp.max(jnp.abs(lg_dec - lg_ref))) / (
+        float(jnp.max(jnp.abs(lg_ref))) + 1e-9)
+    assert rel < 1e-4, rel
+
+
+@pytest.mark.parametrize("fam", sorted(FAMILIES))
+def test_train_step_finite(fam):
+    cfg = FAMILIES[fam]
+    params, _, _ = lm.init(cfg, jax.random.key(0))
+    loss, metrics = lm.forward_train(params, _batch(cfg, 16), cfg, ENGINE)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: lm.forward_train(p, _batch(cfg, 16), cfg,
+                                                ENGINE)[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in jax.tree.leaves(grads))
+
+
+def test_multi_step_decode_matches_full_forward():
+    cfg = FAMILIES["dense"]
+    params, _, _ = lm.init(cfg, jax.random.key(0))
+    S, EXTRA = 10, 4
+    b_full = _batch(cfg, S + EXTRA)
+    _, cache = lm.forward_prefill(
+        params, {"tokens": b_full["tokens"][:, :S]}, cfg, ENGINE,
+        cache_len=S + EXTRA)
+    for i in range(EXTRA):
+        lg, cache = lm.forward_decode(params, b_full["tokens"][:, S + i:S + i + 1],
+                                      cache, cfg, ENGINE)
+    lg_ref, _ = lm.forward_prefill(params, b_full, cfg, ENGINE)
+    # after decoding token S+EXTRA-1 the logits predict position S+EXTRA
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_ref),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_deployed_formats_behave(monkeypatch):
+    """fp / w8a8 / mxint4 paths agree to quantization tolerance; decode
+    streams 4.25-bit weights (the EMA claim)."""
+    cfg = FAMILIES["dense"]
+    params, _, paths = lm.init(cfg, jax.random.key(0))
+    served = deploy.deploy_quantize(params, paths)
+    batch = _batch(cfg, 8)
+
+    fp = HSAEngine(HSAConfig(prefill_format="fp", decode_format="fp"))
+    q = HSAEngine(HSAConfig())   # w8a8 prefill / mxint4 decode
+    lg_fp, cache_fp = lm.forward_prefill(params, batch, cfg, fp, cache_len=10)
+    lg_q, cache_q = lm.forward_prefill(served, batch, cfg, q, cache_len=10)
+    # logits order mostly preserved under W8A8
+    top_fp = np.asarray(jnp.argsort(lg_fp, axis=-1)[:, -5:])
+    top_q = np.asarray(jnp.argsort(lg_q, axis=-1)[:, -5:])
+    overlap = np.mean([len(set(a) & set(b)) / 5 for a, b in zip(top_fp, top_q)])
+    assert overlap >= 0.4, overlap
+
+    tok = jnp.argmax(lg_q, -1)[:, None]
+    lg_d, _ = lm.forward_decode(served, tok, cache_q, cfg, q)
+    assert bool(jnp.all(jnp.isfinite(lg_d)))
+
+
+def test_deploy_drops_masters_except_mla_absorbed():
+    cfg = FAMILIES["mla_moe"]
+    params, _, paths = lm.init(cfg, jax.random.key(0))
+    served = deploy.deploy_quantize(params, paths)
+    blocks = served["blocks"]
+    assert "w" not in blocks["attn"]["wq_a"]          # master dropped
+    assert "w" in blocks["attn"]["wk_b"]              # absorbed-decode needs it
+    assert "w" in blocks["attn"]["wv_b"]
+    assert "mx_packed" in blocks["attn"]["wq_a"]
+    # experts quantized to stacked MXINT4
+    assert "wg_mx" in blocks["moe"]["experts"]
+    assert "wg" not in blocks["moe"]["experts"]
+
+
+def test_reduced_configs_are_small():
+    from repro import configs
+    for name in configs.ASSIGNED:
+        red = configs.get_config(name).reduced()
+        shapes = jax.eval_shape(lambda k: lm.init(red, k)[0],
+                                jax.random.key(0))
+        n = sum(x.size for x in jax.tree.leaves(shapes))
+        assert n < 30e6, (name, n)

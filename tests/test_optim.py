@@ -1,0 +1,97 @@
+"""Optimizer + gradient compression properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw, compression
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def test_adamw_optimizes_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, warmup_steps=2, total_steps=100,
+                            weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    state = adamw.init(params, cfg)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_schedule_warmup_and_decay():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    lrs = [float(adamw.schedule(jnp.asarray(s), cfg)) for s in range(100)]
+    assert lrs[0] < lrs[5] < lrs[9]                  # warming up
+    assert abs(lrs[9] - 1.0) < 0.05                  # peak
+    assert lrs[99] < 0.15                            # decayed to min ratio
+    assert min(lrs[10:]) >= 0.1 * 0.99
+
+
+def test_grad_clip_bounds_update():
+    cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0,
+                            total_steps=10, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params, cfg)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, metrics = adamw.update(huge, state, params, cfg)
+    assert float(metrics["grad_norm"]) > 1e5         # reported pre-clip
+
+
+def test_moment_dtype_bfloat16():
+    cfg = adamw.AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    state = adamw.init(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    new_p, new_s, _ = adamw.update({"w": jnp.ones((4, 4))}, state, params, cfg)
+    assert new_s["v"]["w"].dtype == jnp.bfloat16
+    assert new_p["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_compress_identity(seed):
+    """dequant(q) + residual' == g + residual (exact bookkeeping)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(32,)).astype(np.float32) * 0.01)
+    qv, scale, r2 = compression.compress(g, r)
+    np.testing.assert_allclose(
+        np.asarray(compression.decompress(qv, scale) + r2),
+        np.asarray(g + r), rtol=1e-5, atol=1e-6)
+
+
+def test_error_feedback_tracks_sum():
+    """EF property: sum of dequantized updates tracks the true gradient sum
+    with bounded (non-accumulating) error."""
+    rng = np.random.default_rng(0)
+    grads = [jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+             for _ in range(50)]
+    res = {"g": jnp.zeros(64)}
+    sent_sum = jnp.zeros(64)
+    true_sum = jnp.zeros(64)
+    for g in grads:
+        deq, res, wire = compression.compressed_grads({"g": g}, res)
+        sent_sum = sent_sum + deq["g"]
+        true_sum = true_sum + g
+        # instantaneous error bounded by one quantization step
+        step = float(jnp.max(jnp.abs(res["g"])))
+        assert step <= float(jnp.max(jnp.abs(g + res["g"]))) / 127 + 1e-5
+    err = float(jnp.max(jnp.abs(sent_sum - true_sum)))
+    naive_err = 50 * float(jnp.max(jnp.abs(grads[0]))) / 127
+    assert err < naive_err  # EF: error does NOT grow linearly with steps
+
+
+def test_wire_bytes_4x_smaller():
+    g = {"a": jnp.zeros((1024,)), "b": jnp.zeros((256, 4))}
+    _, _, wire = compression.compressed_grads(g, compression.init_residuals(g))
+    f32_bytes = (1024 + 1024) * 4
+    assert wire < f32_bytes / 3.5

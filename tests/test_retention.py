@@ -1,0 +1,79 @@
+"""Property tests: the three retention forms are the same function (Sec. II)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import retention as ret
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _qkv(seed, b, h, s, dk, dv):
+    rng = np.random.default_rng(seed)
+    mk = lambda *sh: jnp.asarray(rng.normal(size=sh).astype(np.float32) * 0.3)
+    return mk(b, h, s, dk), mk(b, h, s, dk), mk(b, h, s, dv)
+
+
+@given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 3),
+       h=st.integers(1, 5), s=st.integers(1, 48),
+       dk=st.sampled_from([4, 16]), dv=st.sampled_from([8, 24]))
+def test_parallel_equals_recurrent(seed, b, h, s, dk, dv):
+    q, k, v = _qkv(seed, b, h, s, dk, dv)
+    g = ret.head_decays(h)
+    y_par = ret.retention_parallel(q, k, v, g)
+    y_rec, _ = ret.retention_recurrent(q, k, v, g)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([4, 8, 16, 64]))
+def test_parallel_equals_chunkwise(seed, chunk):
+    q, k, v = _qkv(seed, 2, 3, 64, 16, 24)
+    g = ret.head_decays(3)
+    y_par = ret.retention_parallel(q, k, v, g)
+    y_chk, _ = ret.retention_chunkwise(q, k, v, g, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_chk),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_chunkwise_state_equals_recurrent_state(seed):
+    q, k, v = _qkv(seed, 1, 2, 32, 8, 16)
+    g = ret.head_decays(2)
+    _, st_rec = ret.retention_recurrent(q, k, v, g)
+    _, st_chk = ret.retention_chunkwise(q, k, v, g, chunk=8)
+    np.testing.assert_allclose(np.asarray(st_rec), np.asarray(st_chk),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_warm_state_continuation():
+    """Prefill chunkwise -> decode recurrent must continue seamlessly (the
+    paper's LISO flow: parallel prompt, recurrent generation)."""
+    q, k, v = _qkv(0, 1, 2, 40, 8, 16)
+    g = ret.head_decays(2)
+    y_full, _ = ret.retention_recurrent(q, k, v, g)
+    _, st32 = ret.retention_chunkwise(q[:, :, :32], k[:, :, :32],
+                                      v[:, :, :32], g, chunk=8)
+    state = st32
+    for i in range(32, 40):
+        y_t, state = ret.retention_recurrent_step(
+            q[:, :, i], k[:, :, i], v[:, :, i], state, g)
+        np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, :, i]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_decays_multi_scale():
+    g = np.asarray(ret.head_decays(8))
+    assert (g > 0).all() and (g < 1).all()
+    assert (np.diff(g) > 0).all()           # increasing retention horizon
+    np.testing.assert_allclose(g[0], 1 - 2 ** -5)
+
+
+def test_group_norm_unit_rms():
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.normal(size=(2, 3, 5, 64)).astype(np.float32) * 7)
+    n = ret.group_norm_heads(y)
+    rms = np.sqrt(np.mean(np.asarray(n) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

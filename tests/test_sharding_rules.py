@@ -1,0 +1,71 @@
+"""Rules engine: divisibility fallback, composite axes, cache specs."""
+
+import dataclasses
+
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime.sharding import ShardingPolicy, spec_for_tensor
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    shape: dict
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+POLICY = ShardingPolicy()
+
+
+def test_divisible_head_dim_shards():
+    # deepseek: 128 heads over model=16
+    spec = spec_for_tensor((7168, 128 * 128), ("embed", "heads"), SINGLE, POLICY)
+    assert spec == P("data", "model")
+
+
+def test_nondivisible_heads_fall_through():
+    # hymba: 25 heads * 64 = 1600 -> 1600 % 16 == 0, shards; but 25 alone no:
+    spec = spec_for_tensor((64, 25), (None, "heads"), SINGLE, POLICY)
+    assert spec == P(None, None)
+
+
+def test_fsdp_composite_on_multipod():
+    spec = spec_for_tensor((1024, 4096), (None, "embed"), MULTI, POLICY)
+    assert spec == P(None, ("pod", "data"))
+
+
+def test_fsdp_single_pod_falls_to_data():
+    spec = spec_for_tensor((1024, 4096), (None, "embed"), SINGLE, POLICY)
+    assert spec == P(None, "data")
+
+
+def test_axis_used_once_per_tensor():
+    # both dims want 'model': second falls through
+    spec = spec_for_tensor((256, 512), ("heads", "mlp"), SINGLE, POLICY)
+    assert spec == P("model", None)
+
+
+def test_batch_one_falls_through_then_cache_takes_data():
+    # long_500k: batch=1 unshardable; cache length takes 'data'
+    spec = spec_for_tensor((4, 1, 524288, 5, 64),
+                           ("layers", "batch", "cache", "kv", None),
+                           SINGLE, POLICY)
+    assert spec == P(None, None, "data", None, None)
+
+
+def test_decode32k_batch_takes_dp_cache_takes_model():
+    spec = spec_for_tensor((36, 128, 32768, 8, 128),
+                           ("layers", "batch", "cache", "kv", None),
+                           MULTI, POLICY)
+    assert spec == P(None, ("pod", "data"), "model", None, None)
+
+
+def test_unknown_logical_replicates():
+    spec = spec_for_tensor((8, 8), ("nonsense", None), SINGLE, POLICY)
+    assert spec == P(None, None)
+
+
+def test_with_rule_override():
+    pol = POLICY.with_rule("embed", ())
+    spec = spec_for_tensor((64, 4096), (None, "embed"), SINGLE, pol)
+    assert spec == P(None, None)

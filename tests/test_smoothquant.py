@@ -1,0 +1,70 @@
+"""SmoothQuant invariance and outlier-migration properties (Section III)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fused_rmsnorm as fr
+from repro.core import mxint4 as mx
+from repro.core import smoothquant as sq
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       alpha=st.sampled_from([0.3, 0.5, 0.8]))
+def test_smoothing_is_exact_rewrite(seed, alpha):
+    """rmsnorm(x; gamma') @ W' == rmsnorm(x; gamma) @ W exactly in f32."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(9, 32)).astype(np.float32))
+    gamma = jnp.asarray(rng.normal(size=(32,)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    g2, w2, s = sq.smooth_linear_pair(gamma, w, sq.collect_act_absmax(x),
+                                      alpha=alpha)
+    a = fr.rmsnorm(x, gamma) @ w
+    b = fr.rmsnorm(x, g2) @ w2
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_outlier_channel_quantizes_better_after_smoothing():
+    """The SmoothQuant effect: activation outliers migrate into weights so
+    INT8 activation quantization error drops."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 32)).astype(np.float32)
+    x[:, 3] *= 50.0                     # classic outlier channel
+    x = jnp.asarray(x)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    gamma = jnp.ones((32,), jnp.float32)
+
+    def int8_err(xx):
+        xq, s = mx.quantize_act_int8(xx)
+        return float(jnp.mean((xx - xq.astype(jnp.float32) * s) ** 2)
+                     / jnp.mean(xx ** 2))
+
+    g2, w2, s = sq.smooth_linear_pair(gamma, w, sq.collect_act_absmax(x),
+                                      alpha=0.8)   # strong migration
+    x_smooth = x / s[None, :]
+    assert int8_err(x_smooth) < 0.5 * int8_err(x)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_scales_positive_unit_geomean(seed):
+    rng = np.random.default_rng(seed)
+    stats = sq.CalibStats(
+        act_absmax=jnp.asarray(np.abs(rng.normal(size=32)) + 0.1,
+                               jnp.float32),
+        weight_absmax=jnp.asarray(np.abs(rng.normal(size=32)) + 0.1,
+                                  jnp.float32))
+    s = sq.smoothing_scales(stats)
+    assert bool(jnp.all(s > 0))
+    np.testing.assert_allclose(float(jnp.exp(jnp.mean(jnp.log(s)))), 1.0,
+                               rtol=1e-4)
+
+
+def test_running_max_merge():
+    a = jnp.asarray([1.0, 5.0, 2.0])
+    b = jnp.asarray([3.0, 1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(sq.merge_absmax(a, b)),
+                                  [3.0, 5.0, 2.0])
