@@ -1,0 +1,20 @@
+# Developer entry points.  `make test` is the tier-1 verification command
+# (ROADMAP.md); PYTHONPATH=src keeps the repo importable without installing.
+
+PY ?= python
+
+.PHONY: test test-fast install serve-demo
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q \
+		tests/test_serving_engine.py tests/test_serving.py tests/test_kernels.py
+
+install:
+	$(PY) -m pip install -e .[test]
+
+serve-demo:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
+		--arch retnet-1.3b --reduced --scenario SILO --scale 0.1 --batch 2

@@ -17,10 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
 from repro.core import mxint4 as mx
-from repro.core.hsa import HSAConfig, HSAEngine
-from repro.models import deploy, lm
+from repro.serving import EngineSpec, InferenceEngine
 
 from benchmarks.bench_lib import emit, time_fn
 
@@ -51,26 +49,30 @@ def weight_mse() -> None:
 
 
 def logit_kl() -> None:
-    cfg = configs.get_config("retnet-1.3b").reduced()
-    params, _, paths = lm.init(cfg, jax.random.key(0))
-    served = deploy.deploy_quantize(params, paths)
+    # Engine variants share one set of weights: the fp engine keeps masters,
+    # the quantized ones PTQ-deploy those same masters via from_config.
+    fp = InferenceEngine.from_config(
+        "retnet-1.3b", EngineSpec(reduced=True, quantize=False))
+    cfg = fp.cfg
+    w8 = InferenceEngine.from_config(cfg, EngineSpec(prefill_format="w8a8"),
+                                     params=fp.params)
+    # mxint4 on the prefill path = W4A8 everywhere (stress case); reuses
+    # w8's already-deployed tree rather than re-running the PTQ pass
+    w4 = InferenceEngine(cfg, w8.params, EngineSpec(prefill_format="mxint4"))
     toks = jax.random.randint(jax.random.key(1), (4, 48), 1, cfg.vocab_size)
-    batch = {"tokens": toks}
 
-    def logits(p, engine):
-        lg, _ = lm.forward_prefill(p, batch, cfg, engine, cache_len=50)
+    def logits(engine):
+        lg, _ = engine.prefill(toks, cache_len=50)
         return jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
 
-    ref = logits(params, HSAEngine(HSAConfig(prefill_format="fp")))
+    ref = logits(fp)
 
     def kl(lg):
         return float(jnp.mean(jnp.sum(jnp.exp(ref) * (ref - lg), axis=-1)))
 
-    kl8 = kl(logits(served, HSAEngine(HSAConfig(prefill_format="w8a8"))))
+    kl8 = kl(logits(w8))
     emit("table3.logit_kl.w8a8", 0.0, f"{kl8:.5f}")
-    # mxint4 on the prefill path = W4A8 everywhere (stress case)
-    kl4 = kl(logits(served, HSAEngine(HSAConfig(prefill_format="mxint4",
-                                                decode_format="mxint4"))))
+    kl4 = kl(logits(w4))
     emit("table3.logit_kl.w4a8_mxint4", 0.0,
          f"{kl4:.5f} (paper: ppl 18.22 vs 17.97 W8A8 - small gap)")
     # naive int4: quantize every master to per-tensor int4
@@ -86,7 +88,8 @@ def logit_kl() -> None:
                 out[k] = v
         return out
 
-    kln = kl(logits(naive(params), HSAEngine(HSAConfig(prefill_format="fp"))))
+    kln = kl(logits(InferenceEngine.from_config(
+        cfg, EngineSpec(quantize=False), params=naive(fp.params))))
     emit("table3.logit_kl.int4_naive", 0.0,
          f"{kln:.5f} (paper: V3Q-style collapse, ppl 1e35)")
     ordering_ok = kl8 <= kl4 * 1.5 and kl4 * 3 < kln

@@ -1,8 +1,9 @@
 """Edge inference — the paper's LISO/SILO evaluation, end to end (C1-C6).
 
-Runs both scenarios (scaled for CPU) through the real quantized serving stack
-and then projects the same workload onto the paper's 28nm accelerator and a
-TPU v5e chip with the analytic edge model, reproducing the Table II metrics.
+Runs both scenarios (scaled for CPU) through `repro.serving.InferenceEngine`
+— the real quantized serving stack with the fused decode loop — and then
+projects the same workload onto the paper's 28nm accelerator and a TPU v5e
+chip with the analytic edge model, reproducing the Table II metrics.
 
     PYTHONPATH=src python examples/edge_inference.py [--scale 0.05]
 """
@@ -12,11 +13,8 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro import configs
 from repro.core import edge_model as em
-from repro.core.hsa import HSAConfig, HSAEngine
-from repro.launch.serve import generate
-from repro.models import deploy, lm
+from repro.serving import EngineSpec, GenerationConfig, InferenceEngine
 
 
 def main() -> None:
@@ -25,10 +23,9 @@ def main() -> None:
                     help="scale of the paper's 750/50 token counts")
     args = ap.parse_args()
 
-    cfg = configs.get_config("retnet-1.3b").reduced()
-    params, _, paths = lm.init(cfg, jax.random.key(0))
-    served = deploy.deploy_quantize(params, paths)
-    engine = HSAEngine(HSAConfig())
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    cfg = engine.cfg
 
     print("== measured (reduced model, CPU, real quantized stack) ==")
     for scen in (em.LISO, em.SILO):
@@ -36,8 +33,10 @@ def main() -> None:
         n_out = max(2, int(scen.tokens_out * args.scale))
         prompts = jax.random.randint(jax.random.key(1), (1, n_in), 1,
                                      cfg.vocab_size, dtype=jnp.int32)
-        _, t_p, t_d = generate(cfg, served, engine, prompts, n_out)
+        res = engine.generate(prompts,
+                              GenerationConfig(max_new_tokens=n_out))
         total = n_in + n_out
+        t_p, t_d = res.prefill_s, res.decode_s
         print(f"  {scen.name}: in/out {n_in}/{n_out}  "
               f"prefill {t_p*1e3:.0f}ms decode {t_d/n_out*1e3:.1f}ms/tok  "
               f"tokens/s {total/(t_p+t_d):.2f}")

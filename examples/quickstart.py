@@ -1,8 +1,22 @@
 """Quickstart: the public API in ~60 lines.
 
 Builds a reduced RetNet (the paper's model family), trains a few steps on the
-synthetic pipeline, PTQ-deploys it (SmoothQuant-free minimal path), and
-generates tokens through the HSA engine's phase-dependent dataflows.
+synthetic pipeline, then serves it through `repro.serving` — the one entry
+point that owns PTQ deployment (SmoothQuant-free minimal path) and the HSA
+engine's phase-dependent dataflows, with the decode loop fused on-device.
+
+The whole serving surface is three calls::
+
+    from repro.serving import EngineSpec, GenerationConfig, InferenceEngine
+
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    result = engine.generate(prompts, GenerationConfig(max_new_tokens=32))
+    result.tokens      # [B, 32] int32, padded after any stop token
+
+`from_config` also adopts trained weights (``params=..., linear_paths=...``,
+as below), and `GenerationConfig` carries temperature / top-k / top-p /
+stop-token sampling controls.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,12 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core.hsa import HSAConfig, HSAEngine
+from repro.core.hsa import HSAEngine
 from repro.data.pipeline import DataConfig, SyntheticPipeline
-from repro.launch.serve import generate
-from repro.models import deploy, lm
 from repro.optim import adamw
 from repro.runtime import train_step as ts
+from repro.serving import EngineSpec, GenerationConfig, InferenceEngine
 
 
 def main() -> None:
@@ -38,20 +51,21 @@ def main() -> None:
         if i % 3 == 0:
             print(f"  step {i}: loss {float(metrics['loss']):.4f}")
 
-    # 3. PTQ deploy: INT8 prefill + MXINT4 (4.25 bits/weight) decode formats
-    served = deploy.deploy_quantize(state["params"], paths)
+    # 3+4. deploy + serve in one step: InferenceEngine owns the PTQ pass
+    # (INT8 prefill + MXINT4 4.25-bit decode formats) and the HSA engine's
+    # W8A8-MMM prefill / W4A8-MVM fused decode loop.
+    engine = InferenceEngine.from_config(cfg, EngineSpec(),
+                                         params=state["params"],
+                                         linear_paths=paths)
     n_mx = sum(v.size for p, v in
-               jax.tree_util.tree_flatten_with_path(served)[0]
+               jax.tree_util.tree_flatten_with_path(engine.params)[0]
                if "mx_packed" in str(p[-1]))
     print(f"deployed: {n_mx / 1e6:.2f} MB packed int4 weight bytes")
 
-    # 4. serve: prefill (W8A8 MMM dataflow) + decode (W4A8 MVM dataflow)
-    engine = HSAEngine(HSAConfig())      # the paper's default format policy
     prompts = jnp.asarray(data.batch(99)["tokens"][:2, :16])
-    toks, t_prefill, t_decode = generate(cfg, served, engine, prompts,
-                                         n_out=12)
-    print(f"generated: {toks[0].tolist()}")
-    print(f"prefill {t_prefill*1e3:.0f} ms, decode {t_decode*1e3:.0f} ms")
+    res = engine.generate(prompts, GenerationConfig(max_new_tokens=12))
+    print(f"generated: {res.tokens[0].tolist()}")
+    print(f"prefill {res.prefill_s*1e3:.0f} ms, decode {res.decode_s*1e3:.0f} ms")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""Version-compat shims for jax APIs that were renamed across releases.
+
+The repo targets the jax that ships in the image (0.4.x today) but is written
+against the modern spellings; every renamed symbol is funneled through here so
+a jax upgrade is a one-file change:
+
+  * ``pltpu.CompilerParams``      — 0.4.x calls it ``TPUCompilerParams``.
+  * ``jax.sharding.AxisType``     — explicit-sharding axis types (and the
+    ``axis_types=`` kwarg of ``jax.make_mesh``) only exist on newer jax;
+    0.4.x meshes are implicitly Auto already.
+  * ``jax.shard_map``             — 0.4.x only has the experimental spelling.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = True):
+    """``jax.shard_map`` across versions.
+
+    0.4.x spells it ``jax.experimental.shard_map.shard_map`` with
+    ``check_rep`` instead of ``check_vma`` and an ``auto`` set (the complement
+    of the modern ``axis_names`` manual set).
+    """
+    if hasattr(jax, "shard_map"):
+        import inspect
+        params = inspect.signature(jax.shard_map).parameters
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        # mid-window releases promoted shard_map before the check_vma rename
+        kw["check_vma" if "check_vma" in params else "check_rep"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kw)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` / ``pltpu.TPUCompilerParams`` across versions."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def make_auto_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with every axis in Auto sharding mode.
+
+    Newer jax requires the mode to be spelled out (``AxisType.Auto``); on
+    0.4.x the kwarg does not exist and Auto is the only behavior.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes, devices=devices)
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(axis_type.Auto,) * len(axes))

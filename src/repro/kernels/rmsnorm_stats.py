@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _kernel(y_ref, out_ref, acc_ref, *, n_d: int, d_total: int, eps: float):
     dd = pl.program_id(1)
@@ -53,7 +55,7 @@ def rmsnorm_stats_pallas(
         out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

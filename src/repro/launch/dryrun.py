@@ -239,28 +239,28 @@ def lower_cell(cfg: ModelConfig, shape: InputShape, mesh,
             lowered = jit_step.lower(built["state_shapes"], specs)
         return lowered
 
-    built = serve_step.build_serve(cfg, mesh, shape, policy=policy,
-                                   cache_dtype=cache_dtype)
+    cell = serve_step.build_serve(cfg, mesh, shape, policy=policy,
+                                  cache_dtype=cache_dtype)
     if shape.kind == "prefill":
         batch_sh = shd.shardings_from_specs(
             shd.batch_specs(specs, mesh, policy), mesh)
-        jit_fn = jax.jit(built["prefill"],
-                         in_shardings=(built["param_shardings"], batch_sh),
-                         out_shardings=(None, built["cache_shardings"]))
+        jit_fn = jax.jit(cell.prefill,
+                         in_shardings=(cell.param_shardings, batch_sh),
+                         out_shardings=(None, cell.cache_shardings))
         with shd.sharding_ctx(mesh, policy):
-            return jit_fn.lower(built["param_shapes"], specs)
+            return jit_fn.lower(cell.param_shapes, specs)
 
     # decode
     tok_sh = shd.shardings_from_specs(
         shd.batch_specs(specs, mesh, policy), mesh)["tokens"]
-    jit_fn = jax.jit(built["decode"],
-                     in_shardings=(built["param_shardings"], tok_sh,
-                                   built["cache_shardings"]),
-                     out_shardings=(None, built["cache_shardings"]),
+    jit_fn = jax.jit(cell.decode,
+                     in_shardings=(cell.param_shardings, tok_sh,
+                                   cell.cache_shardings),
+                     out_shardings=(None, cell.cache_shardings),
                      donate_argnums=(2,))
     with shd.sharding_ctx(mesh, policy):
-        return jit_fn.lower(built["param_shapes"], specs["tokens"],
-                            built["cache_shapes"])
+        return jit_fn.lower(cell.param_shapes, specs["tokens"],
+                            cell.cache_shapes)
 
 
 def run_cell(arch: str, shape_name: str, mesh_name: str,

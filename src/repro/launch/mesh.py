@@ -7,12 +7,11 @@ XLA_FLAGS before *any* jax initialization.
 
 from __future__ import annotations
 
-import jax
+from repro.compat import make_auto_mesh
 
 
 def _mesh(shape, axes):
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_auto_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

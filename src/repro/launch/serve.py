@@ -1,10 +1,13 @@
-"""End-to-end serving driver: PTQ deploy -> prefill (MMM) -> decode loop (MVM).
+"""End-to-end serving CLI — thin shim over `repro.serving.InferenceEngine`.
 
 Implements the paper's edge serving flow at any scale: quantize the model
 (SmoothQuant + MXINT4, Section III), prefill the prompt in the W8A8 MMM
-dataflow, then autoregressively decode in the W4A8 MVM dataflow with the
-online RoPE unit advancing per token.  Batched requests; LISO/SILO scenario
-presets matching the paper's evaluation.
+dataflow, then autoregressively decode in the W4A8 MVM dataflow — the decode
+loop fused into one jitted `lax.while_loop` by the engine.  Batched requests;
+LISO/SILO scenario presets matching the paper's evaluation.
+
+All wiring lives in `repro.serving`; this module only parses flags and keeps
+the historical `generate(...)` entry point for existing callers.
 
 Usage (CPU, reduced config):
     PYTHONPATH=src python -m repro.launch.serve --arch retnet-1.3b --reduced \
@@ -14,44 +17,32 @@ Usage (CPU, reduced config):
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
 from repro.core import edge_model
-from repro.core.hsa import HSAConfig, HSAEngine
-from repro.models import deploy, lm
+from repro.core.hsa import HSAEngine
 from repro.models.config import ModelConfig
+from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
+                           SamplingParams)
 
 
 def generate(cfg: ModelConfig, params, engine: HSAEngine, prompts: jax.Array,
              n_out: int, greedy: bool = True, key=None):
-    """Prefill + decode loop.  prompts [B, S_in] -> tokens [B, n_out]."""
-    b, s_in = prompts.shape
-    cache_len = s_in + n_out
+    """Legacy entry point: prefill + fused decode loop.
 
-    prefill = jax.jit(lambda p, t: lm.forward_prefill(
-        p, {"tokens": t}, cfg, engine, cache_len=cache_len))
-    decode = jax.jit(lambda p, t, c: lm.forward_decode(p, t, c, cfg, engine))
-
-    t0 = time.time()
-    logits, cache = prefill(params, prompts)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-
-    outs = []
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    t0 = time.time()
-    for i in range(n_out):
-        outs.append(tok)
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    return jnp.concatenate(outs, axis=1), t_prefill, t_decode
+    prompts [B, S_in] -> (tokens [B, n_out], t_prefill_s, t_decode_s).
+    Deprecated shim — construct an `InferenceEngine` directly instead.
+    """
+    eng = InferenceEngine(cfg, params, EngineSpec(), hsa=engine)
+    sampling = SamplingParams() if greedy else SamplingParams(temperature=1.0)
+    res = eng.generate(prompts,
+                       GenerationConfig(max_new_tokens=n_out,
+                                        sampling=sampling),
+                       key=key)
+    return res.tokens, res.prefill_s, res.decode_s
 
 
 def main() -> None:
@@ -62,39 +53,43 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0,
                     help="scale LISO/SILO token counts (CPU-friendly)")
     ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--no-quant", action="store_true",
                     help="serve fp master weights (ablation)")
     ap.add_argument("--unfused-norm", action="store_true",
                     help="disable the Eq.(4) fused RMSNorm (ablation)")
     args = ap.parse_args()
 
-    cfg = configs.get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
     scen = edge_model.LISO if args.scenario == "LISO" else edge_model.SILO
     n_in = max(2, int(scen.tokens_in * args.scale))
     n_out = max(2, int(scen.tokens_out * args.scale))
 
+    spec = EngineSpec(quantize=not args.no_quant, reduced=args.reduced,
+                      fuse_rmsnorm=not args.unfused_norm)
+    engine = InferenceEngine.from_config(args.arch, spec)
+    cfg = engine.cfg
     print(f"[serve] {cfg.name} scenario={scen.name} in/out={n_in}/{n_out} "
           f"batch={args.batch}")
-    params, axes, paths = lm.init(cfg, jax.random.key(0))
     if not args.no_quant:
-        params = deploy.deploy_quantize(params, paths)
         print("[serve] deployed: W8A8 prefill / MXINT4 (4.25b) decode weights")
-    engine = HSAEngine(HSAConfig(
-        prefill_format="fp" if args.no_quant else "w8a8",
-        decode_format="fp" if args.no_quant else "mxint4",
-        fuse_rmsnorm=not args.unfused_norm))
 
     prompts = jax.random.randint(jax.random.key(1), (args.batch, n_in), 1,
                                  cfg.vocab_size, dtype=jnp.int32)
-    toks, t_p, t_d = generate(cfg, params, engine, prompts, n_out)
+    gen = GenerationConfig(
+        max_new_tokens=n_out,
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p))
+    res = engine.generate(prompts, gen, key=jax.random.key(2))
     total = n_in + n_out
+    t_p, t_d = res.prefill_s, res.decode_s
     print(f"[serve] prefill {t_p*1e3:.0f} ms, decode {t_d*1e3:.0f} ms "
           f"({t_d/n_out*1e3:.1f} ms/token)")
     print(f"[serve] {scen.name} tokens/s (paper convention, prompt+output): "
           f"{args.batch * total / (t_p + t_d):.2f}")
-    print(f"[serve] sample output tokens: {np.asarray(toks[0,:16])}")
+    print(f"[serve] sample output tokens: {np.asarray(res.tokens[0, :16])}")
 
 
 if __name__ == "__main__":

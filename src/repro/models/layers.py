@@ -397,7 +397,10 @@ def gqa_decode(
 def gqa_make_cache(cfg: ModelConfig, batch: int, cache_len: int,
                    dtype=jnp.bfloat16) -> Params:
     kv, hd = cfg.n_kv_heads, cfg.head_dim_
-    c = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    # Sliding-window rings are always `window` slots — prefill pads short
+    # prompts up to the window (_seed_attn_cache), so cold caches must match
+    # that layout even when cache_len < window (serving.CachePool slots).
+    c = cfg.sliding_window if cfg.sliding_window else cache_len
     return {
         "k": jnp.zeros((batch, c, kv, hd), dtype),
         "v": jnp.zeros((batch, c, kv, hd), dtype),

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hsa import HSAEngine
+from repro.compat import shard_map
 from repro.models.config import ModelConfig
 from repro.models.modules import ParamBuilder
 from repro.runtime.sharding import constrain
@@ -234,7 +235,7 @@ def _moe_core_sharded(x, idx, gates, p_experts: Params, cfg: ModelConfig,
         return y_part.astype(x_loc.dtype)
 
     manual = set(dp_axes) | ({tp} if tp else set())
-    y = jax.shard_map(
+    y = shard_map(
         local_moe,
         mesh=mesh,
         in_specs=(P(dp_axes or None, None), P(dp_axes or None, None),

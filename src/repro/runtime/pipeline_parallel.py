@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 Params = dict[str, Any]
 
 
@@ -87,7 +89,7 @@ def pipeline_forward(
         return jax.lax.psum(outputs, stage_axis)
 
     specs_params = jax.tree.map(lambda _: P(stage_axis), stacked_params)
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage, mesh=mesh,
         in_specs=(specs_params, P()),
         out_specs=P(),

@@ -1,84 +1,17 @@
-"""Serving step builders: prefill (MMM dataflow) and decode (MVM dataflow).
+"""Serving step builders — thin shim over `repro.serving.cell`.
 
-The serving params are the *deployed* tree (models/deploy.py): prefill streams
-per-tensor INT8, decode streams MXINT4 packed+shifts — the paper's phase-
-dependent formats (C1/C2).  Cache sharding comes from lm.cache_axes + the
-rules engine: batch over DP axes when divisible, sequence-sharded KV for
-long_500k, TP'd SSM state.
+The serving-cell planner (typed `ServeCell`: shardings + shapes for one
+prefill/decode deployment) moved to `repro.serving`, the unified inference
+package.  This module keeps the historical import path alive for runtime
+callers (launch/dryrun.py and external scripts); new code should import from
+`repro.serving` directly.
 """
 
 from __future__ import annotations
 
-from typing import Any
+from repro.serving.cell import (ServeCell, build_serve, decode_step_fn,
+                                deployed_shapes, prefill_step_fn,
+                                serving_engine)
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh
-
-from repro.core.hsa import HSAConfig, HSAEngine
-from repro.models import deploy, lm
-from repro.models.config import InputShape, ModelConfig
-from repro.runtime import sharding as shd
-
-Params = dict[str, Any]
-
-
-def serving_engine(kernel_impl: str = "auto") -> HSAEngine:
-    return HSAEngine(HSAConfig(prefill_format="w8a8", decode_format="mxint4",
-                               kernel_impl=kernel_impl))
-
-
-def deployed_shapes(cfg: ModelConfig) -> tuple[Params, Params]:
-    """(serving param ShapeDtypeStructs, their axes) — no allocation."""
-    params_abs, axes, paths = lm.init(cfg, jax.random.key(0), abstract=True)
-    served = jax.eval_shape(
-        lambda p: deploy.deploy_quantize(p, paths), params_abs)
-    served_axes = deploy.deployed_axes(axes, paths)
-    return served, served_axes
-
-
-def prefill_step_fn(cfg: ModelConfig, engine: HSAEngine, cache_len: int = 0):
-    def prefill(params, batch):
-        return lm.forward_prefill(params, batch, cfg, engine,
-                                  cache_len=cache_len)
-    return prefill
-
-
-def decode_step_fn(cfg: ModelConfig, engine: HSAEngine):
-    def decode(params, tokens, cache):
-        logits, new_cache = lm.forward_decode(params, tokens, cache, cfg, engine)
-        return logits, new_cache
-    return decode
-
-
-def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
-                policy: shd.ShardingPolicy | None = None,
-                kernel_impl: str = "auto",
-                local_batch: int | None = None,
-                cache_dtype=jnp.bfloat16):
-    """Shardings + shapes for one serving cell (prefill or decode kind)."""
-    policy = policy or shd.ShardingPolicy()
-    engine = serving_engine(kernel_impl)
-    batch = local_batch or shape.global_batch
-
-    served_shapes, served_axes = deployed_shapes(cfg)
-    param_shardings = shd.tree_shardings(served_shapes, served_axes, mesh, policy)
-
-    cache_shapes = jax.eval_shape(
-        lambda: lm.make_decode_cache(cfg, batch, shape.seq_len, cache_dtype))
-    c_axes = lm.cache_axes(cfg)
-    # Prepend 'batch' resolution: cache axes use the logical 'batch'/'cache'
-    # names directly; tree_specs resolves per-tensor with fallback.
-    cache_shardings = shd.tree_shardings(cache_shapes, c_axes, mesh, policy)
-
-    return {
-        "engine": engine,
-        "prefill": prefill_step_fn(cfg, engine, cache_len=shape.seq_len),
-        "decode": decode_step_fn(cfg, engine),
-        "param_shapes": served_shapes,
-        "param_axes": served_axes,
-        "param_shardings": param_shardings,
-        "cache_shapes": cache_shapes,
-        "cache_shardings": cache_shardings,
-        "policy": policy,
-    }
+__all__ = ["ServeCell", "build_serve", "decode_step_fn", "deployed_shapes",
+           "prefill_step_fn", "serving_engine"]

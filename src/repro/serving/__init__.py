@@ -1,0 +1,29 @@
+"""`repro.serving` — the unified inference API for the HSA reproduction.
+
+One import gives the whole serving surface:
+
+  * `InferenceEngine` / `EngineSpec` — init -> PTQ deploy -> HSA engine ->
+    jit-cached prefill + a fused, jitted decode loop (engine.py).
+  * `GenerationConfig` / `SamplingParams` — greedy, temperature, top-k,
+    top-p, stop tokens, max_new_tokens (sampling.py).
+  * `RequestScheduler` / `CachePool` / `Request` — continuous batching over a
+    slot-based decode-cache pool: MMM-phase prefill admissions overlapping
+    MVM-phase decode, like the paper's sequencer (scheduler.py).
+  * `ServeCell` / `build_serve` — typed sharding/shape plan for multi-chip
+    deployments (cell.py; `runtime.serve_step` re-exports it).
+"""
+
+from repro.serving.cell import ServeCell, build_serve, serving_engine
+from repro.serving.engine import (EngineSpec, GenerationResult,
+                                  InferenceEngine)
+from repro.serving.sampling import (GREEDY, GenerationConfig, SamplingParams,
+                                    sample)
+from repro.serving.scheduler import (CachePool, FinishedRequest, Request,
+                                     RequestScheduler)
+
+__all__ = [
+    "CachePool", "EngineSpec", "FinishedRequest", "GenerationConfig",
+    "GenerationResult", "GREEDY", "InferenceEngine", "Request",
+    "RequestScheduler", "SamplingParams", "ServeCell", "build_serve",
+    "sample", "serving_engine",
+]

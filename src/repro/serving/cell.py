@@ -1,0 +1,111 @@
+"""Typed serving-cell description: shardings + shapes for one deployment.
+
+`ServeCell` replaces the untyped dict `runtime/serve_step.build_serve` used
+to return.  It is the *planning* artifact for a sharded deployment (dry-run
+lowering, multi-chip serving); the in-process path is `InferenceEngine`.
+`runtime/serve_step.py` re-exports everything here, so existing imports keep
+working.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.hsa import HSAConfig, HSAEngine
+from repro.models import deploy, lm
+from repro.models.config import InputShape, ModelConfig
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeCell:
+    """Everything needed to jit one serving cell (prefill or decode kind).
+
+    ``cell["name"]`` access is kept as a deprecated alias for the dict this
+    used to be; new code should use the attributes.
+    """
+
+    engine: HSAEngine
+    prefill: Callable[[Params, Params], tuple[jax.Array, Params]]
+    decode: Callable[[Params, jax.Array, Params], tuple[jax.Array, Params]]
+    param_shapes: Params
+    param_axes: Params
+    param_shardings: Params
+    cache_shapes: Params
+    cache_shardings: Params
+    policy: Any
+
+    def __getitem__(self, name: str):
+        if name not in {f.name for f in dataclasses.fields(self)}:
+            raise KeyError(name)
+        return getattr(self, name)
+
+
+def serving_engine(kernel_impl: str = "auto") -> HSAEngine:
+    """The paper's deployment policy: W8A8 MMM prefill, MXINT4 MVM decode."""
+    return HSAEngine(HSAConfig(prefill_format="w8a8", decode_format="mxint4",
+                               kernel_impl=kernel_impl))
+
+
+def deployed_shapes(cfg: ModelConfig) -> tuple[Params, Params]:
+    """(serving param ShapeDtypeStructs, their axes) — no allocation."""
+    params_abs, axes, paths = lm.init(cfg, jax.random.key(0), abstract=True)
+    served = jax.eval_shape(
+        lambda p: deploy.deploy_quantize(p, paths), params_abs)
+    served_axes = deploy.deployed_axes(axes, paths)
+    return served, served_axes
+
+
+def prefill_step_fn(cfg: ModelConfig, engine: HSAEngine, cache_len: int = 0):
+    def prefill(params, batch):
+        return lm.forward_prefill(params, batch, cfg, engine,
+                                  cache_len=cache_len)
+    return prefill
+
+
+def decode_step_fn(cfg: ModelConfig, engine: HSAEngine):
+    def decode(params, tokens, cache):
+        logits, new_cache = lm.forward_decode(params, tokens, cache, cfg, engine)
+        return logits, new_cache
+    return decode
+
+
+def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
+                policy=None, kernel_impl: str = "auto",
+                local_batch: int | None = None,
+                cache_dtype=jnp.bfloat16) -> ServeCell:
+    """Shardings + shapes for one serving cell (prefill or decode kind)."""
+    from repro.runtime import sharding as shd   # deferred: avoid import cycle
+
+    policy = policy or shd.ShardingPolicy()
+    engine = serving_engine(kernel_impl)
+    batch = local_batch or shape.global_batch
+
+    served_shapes, served_axes = deployed_shapes(cfg)
+    param_shardings = shd.tree_shardings(served_shapes, served_axes, mesh,
+                                         policy)
+
+    cache_shapes = jax.eval_shape(
+        lambda: lm.make_decode_cache(cfg, batch, shape.seq_len, cache_dtype))
+    c_axes = lm.cache_axes(cfg)
+    # Prepend 'batch' resolution: cache axes use the logical 'batch'/'cache'
+    # names directly; tree_specs resolves per-tensor with fallback.
+    cache_shardings = shd.tree_shardings(cache_shapes, c_axes, mesh, policy)
+
+    return ServeCell(
+        engine=engine,
+        prefill=prefill_step_fn(cfg, engine, cache_len=shape.seq_len),
+        decode=decode_step_fn(cfg, engine),
+        param_shapes=served_shapes,
+        param_axes=served_axes,
+        param_shardings=param_shardings,
+        cache_shapes=cache_shapes,
+        cache_shardings=cache_shardings,
+        policy=policy,
+    )

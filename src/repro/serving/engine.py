@@ -1,0 +1,230 @@
+"""`InferenceEngine` — the one public entry point for serving a model.
+
+Owns the full deployment chain the paper describes for its accelerator and
+that every caller used to hand-wire:
+
+    lm.init -> deploy.deploy_quantize -> HSAEngine -> jitted prefill/decode
+
+plus a *fused* decode loop: instead of one Python-level ``jax.jit`` dispatch
+per generated token (host-bound; the seed `generate()` re-built its jits per
+call on top of that), the whole MVM phase runs as a single jitted
+``lax.while_loop`` that samples, checks stop tokens, and advances the online
+RoPE unit on-device.  Greedy decoding through the fused loop is token-
+identical to the per-token Python loop (tests/test_serving_engine.py).
+
+Usage::
+
+    from repro.serving import EngineSpec, GenerationConfig, InferenceEngine
+
+    engine = InferenceEngine.from_config("retnet-1.3b", EngineSpec(reduced=True))
+    result = engine.generate(prompts, GenerationConfig(max_new_tokens=32))
+    result.tokens        # [B, max_new_tokens], pad-filled after stop tokens
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.hsa import HSAConfig, HSAEngine
+from repro.models import deploy, lm
+from repro.models.config import ModelConfig
+from repro.serving.sampling import GenerationConfig, sample
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """How to build the serving stack around a model config.
+
+    The default is the paper's deployment: SmoothQuant-ready W8A8 prefill
+    (MMM dataflow) and MXINT4 W4A8 decode (MVM dataflow) with the Eq. (4)
+    fused RMSNorm and the online RoPE unit, `kernel_impl='auto'` picking the
+    Pallas kernels on TPU and the jnp reference path elsewhere.
+    """
+
+    quantize: bool = True               # PTQ-deploy master weights
+    prefill_format: str = "w8a8"        # 'w8a8' | 'fp'
+    decode_format: str = "mxint4"       # 'mxint4' | 'w8a8' | 'fp'
+    fuse_rmsnorm: bool = True           # C3 ablation switch
+    kernel_impl: str = "auto"           # 'auto' | 'pallas' | 'ref'
+    reduced: bool = False               # use cfg.reduced() (CPU-scale)
+    seed: int = 0                       # init key when params aren't supplied
+
+    def hsa_config(self) -> HSAConfig:
+        fmt_p = self.prefill_format if self.quantize else "fp"
+        fmt_d = self.decode_format if self.quantize else "fp"
+        return HSAConfig(prefill_format=fmt_p, decode_format=fmt_d,
+                         fuse_rmsnorm=self.fuse_rmsnorm,
+                         kernel_impl=self.kernel_impl)
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """Output of `InferenceEngine.generate`."""
+
+    tokens: jax.Array        # i32 [B, max_new_tokens]; pad after stop token
+    lengths: jax.Array       # i32 [B] — emitted tokens incl. the stop token
+    prefill_s: float         # wall-clock MMM phase (includes compile on miss)
+    decode_s: float          # wall-clock MVM phase
+
+
+class InferenceEngine:
+    """Deployed model + HSA engine + jit-cached prefill / fused decode.
+
+    Construct via `from_config`.  All jitted callables are built once per
+    engine; repeated `generate` calls with the same shapes and
+    `GenerationConfig` hit jax's compilation cache instead of re-tracing
+    (the `GenerationConfig` itself is a hashable static argument).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, spec: EngineSpec,
+                 hsa: HSAEngine | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.spec = spec
+        self.hsa = hsa or HSAEngine(spec.hsa_config())
+
+        self._prefill = jax.jit(self._prefill_impl,
+                                static_argnames=("cache_len",))
+        self._decode = jax.jit(self._decode_impl)
+        self._loop = jax.jit(self._loop_impl, static_argnames=("gen",))
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig | str,
+                    spec: EngineSpec = EngineSpec(), *,
+                    params: Params | None = None,
+                    linear_paths: list[tuple[str, ...]] | None = None,
+                    ) -> "InferenceEngine":
+        """Build the serving stack: init (or adopt) params, PTQ-deploy, wire
+        the HSA engine.
+
+        ``cfg`` may be an architecture name (``configs.get_config``) or a
+        ready `ModelConfig`.  Pass ``params`` (+ the matching
+        ``linear_paths`` from `lm.init`) to serve trained weights; otherwise
+        fresh ones are initialized from ``spec.seed``.  Already-deployed
+        trees (no master ``'w'`` under the lm_head) are adopted as-is.
+        """
+        if isinstance(cfg, str):
+            cfg = configs.get_config(cfg)
+        if spec.reduced:
+            cfg = cfg.reduced()
+
+        if params is None:
+            params, _, linear_paths = lm.init(cfg, jax.random.key(spec.seed))
+        if spec.quantize and _is_master_tree(params):
+            if linear_paths is None:
+                _, _, linear_paths = lm.init(cfg, jax.random.key(spec.seed),
+                                             abstract=True)
+            params = deploy.deploy_quantize(params, linear_paths)
+        return cls(cfg, params, spec)
+
+    # -- jitted building blocks --------------------------------------------
+
+    def _prefill_impl(self, params, batch, cache_len: int):
+        return lm.forward_prefill(params, batch, self.cfg, self.hsa,
+                                  cache_len=cache_len)
+
+    def _decode_impl(self, params, tokens, cache):
+        return lm.forward_decode(params, tokens, cache, self.cfg, self.hsa)
+
+    def _loop_impl(self, params, logits0, cache, key,
+                   gen: GenerationConfig):
+        """The fused MVM phase: sample/emit/stop/decode in one while_loop.
+
+        Matches the reference Python loop exactly: ``out[:, i]`` is sampled
+        from the logits *before* decode step ``i`` (the first token comes
+        from the prefill logits), and the loop exits as soon as every
+        sequence has hit a stop token — the remaining slots stay
+        ``pad_token_id``.
+        """
+        b = logits0.shape[0]
+        n = gen.max_new_tokens
+        stop = (jnp.asarray(gen.stop_tokens, jnp.int32)
+                if gen.stop_tokens else None)
+
+        def hit_stop(tok):                       # tok i32 [B]
+            if stop is None:
+                return jnp.zeros((b,), bool)
+            return jnp.any(tok[:, None] == stop[None, :], axis=-1)
+
+        key, sub = jax.random.split(key)
+        tok0 = sample(logits0, gen.sampling, sub)
+        out0 = jnp.full((b, n), gen.pad_token_id, jnp.int32)
+        state = (jnp.int32(0), tok0, cache, jnp.zeros((b,), bool), out0,
+                 jnp.zeros((b,), jnp.int32), key)
+
+        def cond(st):
+            i, _, _, done, _, _, _ = st
+            return (i < n) & ~jnp.all(done)
+
+        def body(st):
+            i, tok, cache, done, out, lengths, key = st
+            out = out.at[:, i].set(jnp.where(done, gen.pad_token_id, tok))
+            lengths = lengths + (~done).astype(jnp.int32)
+            done = done | hit_stop(tok)
+            logits, cache = lm.forward_decode(params, tok[:, None], cache,
+                                              self.cfg, self.hsa)
+            key, sub = jax.random.split(key)
+            tok = sample(logits, gen.sampling, sub)
+            return (i + 1, tok, cache, done, out, lengths, key)
+
+        _, _, cache, _, out, lengths, _ = jax.lax.while_loop(cond, body, state)
+        return out, lengths, cache
+
+    # -- public API ---------------------------------------------------------
+
+    def prefill(self, tokens: jax.Array, *, cache_len: int | None = None,
+                extras: Params | None = None) -> tuple[jax.Array, Params]:
+        """MMM phase: prompts [B, S] -> (last-token logits [B, V], caches)."""
+        batch = {"tokens": tokens, **(extras or {})}
+        return self._prefill(self.params, batch,
+                             cache_len=cache_len or tokens.shape[1])
+
+    def decode_step(self, tokens: jax.Array, cache: Params
+                    ) -> tuple[jax.Array, Params]:
+        """One MVM step: tokens [B, 1] + warm cache -> (logits [B, V], cache)."""
+        return self._decode(self.params, tokens, cache)
+
+    def generate(self, prompts: jax.Array,
+                 gen: GenerationConfig = GenerationConfig(), *,
+                 key: jax.Array | None = None,
+                 extras: Params | None = None) -> GenerationResult:
+        """Prefill + fused decode.  prompts [B, S_in] -> GenerationResult.
+
+        ``key`` seeds stochastic sampling; it is ignored under greedy
+        decoding and defaults to a fixed key so greedy calls never touch
+        host RNG state.
+        """
+        prompts = jnp.asarray(prompts, jnp.int32)
+        cache_len = prompts.shape[1] + gen.max_new_tokens
+        if key is None:
+            key = jax.random.key(0)
+
+        t0 = time.perf_counter()
+        logits, cache = self.prefill(prompts, cache_len=cache_len,
+                                     extras=extras)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        tokens, lengths, _ = self._loop(self.params, logits, cache, key,
+                                        gen=gen)
+        jax.block_until_ready(tokens)
+        t_decode = time.perf_counter() - t0
+        return GenerationResult(tokens=tokens, lengths=lengths,
+                                prefill_s=t_prefill, decode_s=t_decode)
+
+
+def _is_master_tree(params: Params) -> bool:
+    """True when the tree still carries master linear weights (pre-deploy)."""
+    head = params.get("lm_head")
+    return isinstance(head, dict) and "w" in head and "w8_vals" not in head

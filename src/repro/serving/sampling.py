@@ -1,0 +1,93 @@
+"""Typed generation/sampling configuration and the in-loop token sampler.
+
+`SamplingParams` describes the per-token distribution transform (temperature,
+top-k, top-p); `GenerationConfig` adds loop-level controls (length, stop
+tokens, padding).  Both are frozen/hashable so they can ride through
+``jax.jit`` as static arguments — the fused decode loop specializes on them
+(greedy compiles to a pure argmax with no RNG traffic at all).
+
+`sample` is pure jnp and is called once per decode step *inside* the jitted
+loop; all shape-affecting decisions (is top-k on? is this greedy?) are Python
+branches over the static dataclass, so nothing dynamic leaks into the HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-token distribution transform.
+
+    temperature <= 0 means greedy (argmax); top_k == 0 and top_p >= 1.0
+    disable the respective filters.  Filters compose in the usual order:
+    temperature -> top-k -> top-p -> categorical draw.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    """Loop-level generation controls for `InferenceEngine.generate`."""
+
+    max_new_tokens: int = 16
+    sampling: SamplingParams = SamplingParams()
+    stop_tokens: tuple[int, ...] = ()
+    pad_token_id: int = 0
+
+    def __post_init__(self):
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+GREEDY = GenerationConfig()
+
+
+def _top_k_mask(logits: jax.Array, k: int) -> jax.Array:
+    """Keep the k largest logits per row, -inf elsewhere."""
+    kth = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits < kth, -jnp.inf, logits)
+
+
+def _top_p_mask(logits: jax.Array, p: float) -> jax.Array:
+    """Nucleus filter: keep the smallest prefix of the sorted distribution
+    whose cumulative probability reaches p (the crossing token included)."""
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # exclusive cumsum: a token survives if the mass *before* it is < p
+    keep_sorted = (cum - probs) < p
+    # threshold logit = smallest kept logit per row
+    thresh = jnp.min(jnp.where(keep_sorted, sorted_logits, jnp.inf),
+                     axis=-1, keepdims=True)
+    return jnp.where(logits < thresh, -jnp.inf, logits)
+
+
+def sample(logits: jax.Array, params: SamplingParams,
+           key: jax.Array) -> jax.Array:
+    """logits [..., V] -> int32 token ids [...]. Pure; jit/vmap-safe."""
+    if params.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / params.temperature
+    if params.top_k > 0:
+        logits = _top_k_mask(logits, params.top_k)
+    if params.top_p < 1.0:
+        logits = _top_p_mask(logits, params.top_p)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,212 @@
+"""Continuous-batching request scheduler over a slot-based cache pool.
+
+Mirrors the HSA sequencer (paper Sec. IV): the engine's *prefill* path (MMM
+dataflow) admits new requests into free cache slots while the resident slots
+advance through the *decode* path (MVM dataflow) one token per step.  The two
+phases interleave at step granularity — a long-running decode batch never has
+to drain before new prompts enter, which is exactly the LISO/SILO mix the
+paper evaluates.
+
+`CachePool` owns N slots of decode state behind one interface over
+`lm.make_decode_cache`: every per-model cache kind (KV rings, MXINT4-decoded
+MoE experts, Mamba conv state, RetNet's O(1) retention state, the online RoPE
+angle memory, the per-sequence position) is just a pytree leaf with a leading
+``[n_slots]`` axis.  The decode step vmaps `lm.forward_decode` over that axis,
+so slots at *different* positions (staggered admissions) batch into one
+dispatch — per-slot ``pos`` and RoPE state are vmapped scalars, not a shared
+host counter.
+
+The pool steps all N lanes every iteration (free lanes compute garbage that is
+never read) — one compiled shape, no re-trace as occupancy fluctuates, the
+same trade the fixed-size PE array makes in silicon.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.serving.engine import InferenceEngine
+from repro.serving.sampling import GenerationConfig, sample
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request; `max_new_tokens` overrides the scheduler's."""
+
+    uid: int
+    prompt: Any                          # int sequence [S_in]
+    max_new_tokens: int | None = None
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    uid: int
+    prompt_len: int
+    tokens: list[int]                    # emitted tokens incl. any stop token
+    slot: int                            # pool slot it ran in (for tests/stats)
+
+
+class CachePool:
+    """N decode-cache slots as one stacked pytree ([n_slots, ...] per leaf).
+
+    Built over `lm.make_decode_cache` (batch=1 per slot), so the slot layout
+    is identical for every cache kind the model zoo produces.  Prefilled
+    batch-1 caches are scattered into a slot with ``write``; the whole pool is
+    advanced in one vmapped decode step by the scheduler.
+    """
+
+    def __init__(self, cfg, n_slots: int, cache_len: int,
+                 dtype=jnp.float32):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        template = lm.make_decode_cache(cfg, 1, cache_len, dtype)
+        self.store = jax.tree.map(
+            lambda x: jnp.zeros((n_slots,) + x.shape, x.dtype), template)
+        self._free = list(range(n_slots))
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> int | None:
+        return self._free.pop(0) if self._free else None
+
+    def release(self, slot: int) -> None:
+        assert 0 <= slot < self.n_slots and slot not in self._free, slot
+        self._free.append(slot)
+
+    def write(self, slot: int, cache: Params) -> None:
+        """Scatter one batch-1 cache (e.g. fresh from prefill) into a slot."""
+        self.store = jax.tree.map(
+            lambda pool, c: pool.at[slot].set(c.astype(pool.dtype)),
+            self.store, cache)
+
+
+class RequestScheduler:
+    """Admit-while-decoding serving loop around one `InferenceEngine`.
+
+    ``step()`` performs one sequencer cycle: (1) admit queued requests into
+    free slots via the MMM prefill path, (2) advance every resident slot one
+    token through the vmapped MVM decode path, (3) retire slots that hit a
+    stop token or their token budget.  ``run()`` drains the queue.
+
+    Stochastic sampling stays per-request reproducible: each request draws
+    from ``fold_in(key, uid)`` regardless of which slot it lands in or what
+    else shares the batch.
+    """
+
+    def __init__(self, engine: InferenceEngine, *, n_slots: int = 4,
+                 cache_len: int = 128,
+                 gen: GenerationConfig = GenerationConfig(),
+                 key: jax.Array | None = None):
+        self.engine = engine
+        self.gen = gen
+        self.pool = CachePool(engine.cfg, n_slots, cache_len)
+        self.base_key = key if key is not None else jax.random.key(0)
+
+        self._queue: list[Request] = []
+        self._active: dict[int, dict] = {}       # slot -> per-request state
+        self._finished: list[FinishedRequest] = []
+        # Current token per slot [N, 1, 1] (lane-major so vmap sees [1, 1],
+        # the [B=1, T=1] shape forward_decode expects).
+        self._tokens = jnp.zeros((n_slots, 1, 1), jnp.int32)
+        self._keys = jax.random.split(self.base_key, n_slots)  # set on admit
+
+        # Same split-then-sample order as the engine's fused loop, so a
+        # request's token stream is identical whether it runs here or through
+        # engine.generate with key = fold_in(base_key, uid).
+        def pool_step(params, tokens, store, keys):
+            def one(tok, cache, key):
+                logits, new_cache = lm.forward_decode(
+                    params, tok, cache, engine.cfg, engine.hsa)
+                key, sub = jax.random.split(key)
+                nxt = sample(logits[0], gen.sampling, sub)
+                return nxt, new_cache, key
+            return jax.vmap(one)(tokens, store, keys)
+
+        self._pool_step = jax.jit(pool_step)
+
+    # -- queue management ---------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        self._queue.append(request)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + len(self._active)
+
+    # -- the sequencer cycle ------------------------------------------------
+
+    def _admit(self) -> None:
+        """MMM phase: prefill queued requests into free slots."""
+        while self._queue and self.pool.free_slots:
+            req = self._queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            budget = req.max_new_tokens or self.gen.max_new_tokens
+            # Decode writes cache positions s .. s+budget-1; past-capacity
+            # positions would silently clamp onto the last linear-cache slot
+            # (gqa_decode), so reject instead of corrupting attention.
+            if prompt.shape[1] + budget > self.pool.cache_len:
+                raise ValueError(
+                    f"request {req.uid}: prompt ({prompt.shape[1]}) + "
+                    f"max_new_tokens ({budget}) exceeds the pool cache_len "
+                    f"({self.pool.cache_len})")
+            slot = self.pool.acquire()
+            logits, cache = self.engine.prefill(
+                prompt, cache_len=self.pool.cache_len)
+            self.pool.write(slot, cache)
+
+            key = jax.random.fold_in(self.base_key, req.uid)
+            key, sub = jax.random.split(key)
+            tok = sample(logits[0], self.gen.sampling, sub)
+            self._tokens = self._tokens.at[slot, 0, 0].set(tok)
+            self._keys = self._keys.at[slot].set(key)
+            self._active[slot] = {"req": req, "emitted": [], "budget": budget}
+
+    def _retire(self, slot: int) -> None:
+        st = self._active.pop(slot)
+        self._finished.append(FinishedRequest(
+            uid=st["req"].uid, prompt_len=len(st["req"].prompt),
+            tokens=st["emitted"], slot=slot))
+        self.pool.release(slot)
+
+    def step(self) -> int:
+        """One admit+decode cycle; returns the number of tokens emitted."""
+        self._admit()
+        if not self._active:
+            return 0
+
+        # Snapshot this step's token per active slot *before* decoding: like
+        # the fused loop, the token emitted at step i is the one sampled from
+        # the previous step's (or prefill's) logits.
+        emitted = 0
+        stepped = np.asarray(jax.device_get(self._tokens[:, 0, 0]))
+        next_toks, self.pool.store, self._keys = self._pool_step(
+            self.engine.params, self._tokens, self.pool.store, self._keys)
+        self._tokens = next_toks[:, None, None]
+
+        for slot in list(self._active):
+            st = self._active[slot]
+            tok = int(stepped[slot])
+            st["emitted"].append(tok)
+            emitted += 1
+            if tok in self.gen.stop_tokens or len(st["emitted"]) >= st["budget"]:
+                self._retire(slot)
+        return emitted
+
+    def run(self) -> dict[int, FinishedRequest]:
+        """Drain queue + active slots; returns results keyed by request uid."""
+        while self.pending:
+            self.step()
+        return {f.uid: f for f in self._finished}

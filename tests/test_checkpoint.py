@@ -64,8 +64,8 @@ def test_restore_missing_raises(tmp_path):
 
 def test_restore_with_shardings(tmp_path):
     """Reshard-on-load: device_put into the current mesh's shardings."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import make_auto_mesh
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), _state())
     mgr = CheckpointManager(str(tmp_path))

@@ -87,6 +87,7 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.optim import compression
+from repro.compat import shard_map
 from repro.launch.mesh import make_tiny_mesh
 
 mesh = make_tiny_mesh()   # (data=2, model=2)
@@ -96,7 +97,7 @@ res = jnp.zeros((2, 16))
 def f(g, r):
     return compression.psum_compressed({"g": g}, {"g": r}, "data")
 
-fn = jax.shard_map(lambda g, r: f(g[0], r[0]),
+fn = shard_map(lambda g, r: f(g[0], r[0]),
                    mesh=mesh, in_specs=(P("data"), P("data")),
                    out_specs=(P(), P("data")), check_vma=False)
 (summed, new_res) = fn(g_local, res)

@@ -1,6 +1,7 @@
 """Fault tolerance: heartbeats, stragglers, elastic mesh planning."""
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests skip without it
 from hypothesis import given, settings, strategies as st
 
 from repro.runtime import fault_tolerance as ft
