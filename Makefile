@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast install serve-demo
+.PHONY: test test-fast install serve-demo bench-serving
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -18,3 +18,8 @@ install:
 serve-demo:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
 		--arch retnet-1.3b --reduced --scenario SILO --scale 0.1 --batch 2
+
+# Serving-path perf trajectory: writes BENCH_serving.json (tokens/s, prefill
+# compiles triggered, decode-stall steps) for PR-over-PR comparison.
+bench-serving:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_serving

@@ -12,6 +12,11 @@ the historical `generate(...)` entry point for existing callers.
 Usage (CPU, reduced config):
     PYTHONPATH=src python -m repro.launch.serve --arch retnet-1.3b --reduced \
         --scenario SILO --scale 0.1 --batch 2
+
+Continuous-batching mode (`--requests N`) drives the `RequestScheduler`
+instead: N staggered requests with mixed prompt lengths are chunk-admitted
+(`--chunk-size`) into a paged cache pool while resident lanes decode — the
+paper's sequencer behavior, with per-step stats printed at the end.
 """
 
 from __future__ import annotations
@@ -26,7 +31,7 @@ from repro.core import edge_model
 from repro.core.hsa import HSAEngine
 from repro.models.config import ModelConfig
 from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
-                           SamplingParams)
+                           Request, RequestScheduler, SamplingParams)
 
 
 def generate(cfg: ModelConfig, params, engine: HSAEngine, prompts: jax.Array,
@@ -45,6 +50,47 @@ def generate(cfg: ModelConfig, params, engine: HSAEngine, prompts: jax.Array,
     return res.tokens, res.prefill_s, res.decode_s
 
 
+def _run_scheduler_demo(engine: InferenceEngine, args,
+                        n_in: int, n_out: int) -> None:
+    """Sequencer demo: mixed-length prompts chunk-admitted into a paged pool
+    (a small + a large cache class) while resident lanes decode."""
+    import time
+
+    cfg = engine.cfg
+    gen = GenerationConfig(
+        max_new_tokens=n_out,
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p))
+    rng = np.random.default_rng(0)
+    lengths = [max(2, int(n_in * f)) for f in
+               rng.choice([0.25, 0.5, 1.0], size=args.requests)]
+    small = max(2, int(n_in * 0.5)) + n_out
+    large = n_in + n_out
+    classes = ([(args.slots, large)] if small >= large else
+               [(max(1, args.slots // 2), small),
+                (max(1, args.slots - args.slots // 2), large)])
+    sched = RequestScheduler(engine, classes=classes, gen=gen,
+                             chunk_size=args.chunk_size,
+                             key=jax.random.key(2))
+    for uid, s in enumerate(lengths):
+        prompt = jax.random.randint(jax.random.fold_in(jax.random.key(1), uid),
+                                    (s,), 1, cfg.vocab_size, dtype=jnp.int32)
+        sched.submit(Request(uid=uid, prompt=prompt.tolist()))
+    print(f"[serve] scheduler: {args.requests} requests, prompt lengths "
+          f"{sorted(set(lengths))}, classes {classes}, "
+          f"chunk={args.chunk_size}")
+    t0 = time.perf_counter()
+    results = sched.run()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.tokens) for r in results.values()) + sum(lengths)
+    print(f"[serve] {sched.stats['steps']} cycles, "
+          f"{sched.stats['prefill_chunks']} prefill chunks, "
+          f"{engine.prefill_compiles} prefill compiles, "
+          f"{sched.stats['decode_stall_steps']} decode-stall steps")
+    print(f"[serve] tokens/s (paper convention, prompt+output): "
+          f"{total / dt:.2f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -61,6 +107,13 @@ def main() -> None:
                     help="serve fp master weights (ablation)")
     ap.add_argument("--unfused-norm", action="store_true",
                     help="disable the Eq.(4) fused RMSNorm (ablation)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="> 0: continuous-batching scheduler demo with this "
+                         "many mixed-length requests")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="scheduler mode: decode lanes in the cache pool")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="scheduler mode: prefill chunk size (tokens/cycle)")
     args = ap.parse_args()
 
     scen = edge_model.LISO if args.scenario == "LISO" else edge_model.SILO
@@ -71,6 +124,8 @@ def main() -> None:
                       fuse_rmsnorm=not args.unfused_norm)
     engine = InferenceEngine.from_config(args.arch, spec)
     cfg = engine.cfg
+    if args.requests > 0:
+        return _run_scheduler_demo(engine, args, n_in, n_out)
     print(f"[serve] {cfg.name} scenario={scen.name} in/out={n_in}/{n_out} "
           f"batch={args.batch}")
     if not args.no_quant:

@@ -59,22 +59,25 @@ def norm_full(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def _flash_mask(q_pos, k_pos, sk_orig, causal, windowed, window):
-    mask = jnp.broadcast_to(k_pos[None, :] < sk_orig,
-                            (q_pos.shape[0], k_pos.shape[0]))
+def _flash_mask(q_pos, k_pos, lims, causal, windowed):
+    """Positional mask.  ``lims`` is the f32 [4] array
+    ``[window, q_offset, k_offset, kv_len]`` (entries may be traced); q/k
+    positions arrive already offset, in f32 (exact for any real seq len)."""
+    mask = (k_pos[None, :] >= 0) & (k_pos[None, :] < lims[3])
+    mask = jnp.broadcast_to(mask, (q_pos.shape[0], k_pos.shape[0]))
     if causal:
         mask &= q_pos[:, None] >= k_pos[None, :]
     if windowed:
-        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        mask &= (q_pos[:, None] - k_pos[None, :]) < lims[0]
     return mask
 
 
-def _flash_fwd_impl(cfg, q, k, v, window):
+def _flash_fwd_impl(cfg, q, k, v, lims):
     """Forward online-softmax scan.  q is pre-scaled f32 [B,Sq,KV,G,hd].
 
     Returns (out [B,Sq,KV,G,dv] f32, lse [B,KV,G,Sq] f32).
     """
-    (causal, windowed, q_chunk, kv_chunk, sk_orig, q_offset) = cfg
+    (causal, windowed, q_chunk, kv_chunk) = cfg
     b, sq, kv_h, g, hd = q.shape
     sk = k.shape[1]
     dv = v.shape[-1]
@@ -85,14 +88,14 @@ def _flash_fwd_impl(cfg, q, k, v, window):
 
     def one_q_chunk(args):
         qi, q_blk = args
-        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        q_pos = lims[1] + (qi * q_chunk + jnp.arange(q_chunk)).astype(jnp.float32)
 
         def kv_step(carry, inp):
             m, l, acc = carry
             ki, k_blk, v_blk = inp
-            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            k_pos = lims[2] + (ki * kv_chunk + jnp.arange(kv_chunk)).astype(jnp.float32)
             s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk)
-            mask = _flash_mask(q_pos, k_pos, sk_orig, causal, windowed, window)
+            mask = _flash_mask(q_pos, k_pos, lims, causal, windowed)
             s = jnp.where(mask, s, -jnp.inf)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             # All-masked rows: keep m finite so exp() stays well-defined.
@@ -126,14 +129,14 @@ def _flash_fwd_impl(cfg, q, k, v, window):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _flash(cfg, q, k, v, window):
-    out, _ = _flash_fwd_impl(cfg, q, k, v, window)
+def _flash(cfg, q, k, v, lims):
+    out, _ = _flash_fwd_impl(cfg, q, k, v, lims)
     return out
 
 
-def _flash_fwd(cfg, q, k, v, window):
-    out, lse = _flash_fwd_impl(cfg, q, k, v, window)
-    return out, (q, k, v, window, out, lse)
+def _flash_fwd(cfg, q, k, v, lims):
+    out, lse = _flash_fwd_impl(cfg, q, k, v, lims)
+    return out, (q, k, v, lims, out, lse)
 
 
 def _flash_bwd(cfg, res, dout):
@@ -141,8 +144,8 @@ def _flash_bwd(cfg, res, dout):
     (q,k,v,lse) instead of letting autodiff save per-step score/mask tensors
     (which made large train cells exceed HBM — see EXPERIMENTS.md §Dry-run).
     """
-    (causal, windowed, q_chunk, kv_chunk, sk_orig, q_offset) = cfg
-    q, k, v, window, out, lse = res
+    (causal, windowed, q_chunk, kv_chunk) = cfg
+    q, k, v, lims, out, lse = res
     b, sq, kv_h, g, hd = q.shape
     sk = k.shape[1]
     dv = v.shape[-1]
@@ -161,14 +164,14 @@ def _flash_bwd(cfg, res, dout):
     def one_q_chunk(carry, args):
         dk_acc, dv_acc = carry                   # [B, Sk, KV, hd/dv] f32
         qi, q_blk, do_blk, lse_blk, dl_blk = args
-        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        q_pos = lims[1] + (qi * q_chunk + jnp.arange(q_chunk)).astype(jnp.float32)
 
         def kv_step(carry2, inp):
             dq_blk, dk_a, dv_a = carry2
             ki, k_blk, v_blk = inp
-            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            k_pos = lims[2] + (ki * kv_chunk + jnp.arange(kv_chunk)).astype(jnp.float32)
             s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk)
-            mask = _flash_mask(q_pos, k_pos, sk_orig, causal, windowed, window)
+            mask = _flash_mask(q_pos, k_pos, lims, causal, windowed)
             p = jnp.where(mask, jnp.exp(s - lse_blk[..., None]), 0.0)
             dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_blk, v_blk)
             ds = p * (dp - dl_blk[..., None])
@@ -201,8 +204,7 @@ def _flash_bwd(cfg, res, dout):
          jnp.moveaxis(do_f, 1, 0), jnp.moveaxis(lse_f, 3, 0),
          jnp.moveaxis(dl_f, 3, 0)))
     dq = jnp.moveaxis(dqs, 0, 1).reshape(b, sq, kv_h, g, hd)
-    dwin = None if window is None else jnp.zeros_like(window)
-    return dq, dk, dv_, dwin
+    return dq, dk, dv_, jnp.zeros_like(lims)
 
 
 _flash.defvjp(_flash_fwd, _flash_bwd)
@@ -215,7 +217,10 @@ def flash_attention(
     *,
     causal: bool = True,
     window: int | jax.Array = 0,   # >0: sliding window; may be traced (hybrid)
-    q_offset: int = 0,         # absolute position of q[0] (cross-chunk decode)
+    q_offset: int | jax.Array = 0,  # absolute position of q[0]; may be traced
+    k_offset: int | jax.Array = 0,  # absolute position of k[0] (ring gathers)
+    kv_len: int | jax.Array | None = None,  # valid keys end at this absolute
+                                            # position (default: Sk + k_offset)
     q_chunk: int = 512,
     kv_chunk: int = 1024,
 ) -> jax.Array:
@@ -225,14 +230,20 @@ def flash_attention(
     (recompute P from q,k,v,lse per tile) — O(chunk^2) transients only.
     Handles causal, sliding-window (possibly traced, for hybrid layer flags)
     and bidirectional (cross/encoder) masking via position arithmetic.
+
+    Chunked prefill threads *traced* ``q_offset``/``k_offset``/``kv_len``
+    through the mask (all positional limits ride in one f32 side array with a
+    zero cotangent), so one compiled shape serves every chunk offset: queries
+    sit at absolute positions ``q_offset + i``, keys at ``k_offset + j``, and
+    keys at positions outside ``[0, kv_len)`` are masked out.
     """
     b, sq, kv_h, g, hd = q.shape
     sk = k.shape[1]
     windowed = not (isinstance(window, int) and window == 0)
     q_chunk = min(q_chunk, sq)
     kv_chunk = min(kv_chunk, sk)
-    # Pad to chunk multiples; padded K positions are masked out, padded Q
-    # rows sliced off on return.
+    # Pad to chunk multiples; padded K positions are masked out (they fall at
+    # or beyond kv_len), padded Q rows sliced off on return.
     sq_orig, sk_orig = sq, sk
     pq, pk = (-sq) % q_chunk, (-sk) % kv_chunk
     if pq:
@@ -245,11 +256,19 @@ def flash_attention(
 
     scale = 1.0 / jnp.sqrt(jnp.float32(hd))
     qs = q.astype(jnp.float32) * scale
-    # window rides as an f32 array arg (may be traced); custom_vjp returns a
-    # zero cotangent for it.
-    win = jnp.asarray(window, jnp.float32) if windowed else jnp.float32(0)
-    cfg = (causal, windowed, q_chunk, kv_chunk, sk_orig, q_offset)
-    out = _flash(cfg, qs, k.astype(jnp.float32), v.astype(jnp.float32), win)
+    # All positional limits ride as one f32 [4] array arg (entries may be
+    # traced); custom_vjp returns a zero cotangent for it.  f32 position
+    # arithmetic is exact below 2^24 — far beyond any context length here.
+    if kv_len is None:
+        kv_len = sk_orig + k_offset
+    lims = jnp.stack([
+        jnp.asarray(window, jnp.float32) if windowed else jnp.float32(0),
+        jnp.asarray(q_offset, jnp.float32),
+        jnp.asarray(k_offset, jnp.float32),
+        jnp.asarray(kv_len, jnp.float32),
+    ])
+    cfg = (causal, windowed, q_chunk, kv_chunk)
+    out = _flash(cfg, qs, k.astype(jnp.float32), v.astype(jnp.float32), lims)
     return out[:, :sq_orig].astype(v.dtype)
 
 
@@ -394,6 +413,70 @@ def gqa_decode(
     return out, {"k": k_cache, "v": v_cache}
 
 
+def gqa_chunk(
+    p: Params,
+    x_star: jax.Array,          # [B, C, D] — one prefill chunk
+    sig_inv: jax.Array | None,
+    engine: HSAEngine,
+    cfg: ModelConfig,
+    cache: Params,              # {'k','v'} decode-layout ring/linear buffer
+    pos: jax.Array,             # i32 scalar — absolute position of chunk[0]
+    *,
+    window: int | jax.Array = 0,
+    rope_sin: jax.Array | None = None,   # [C, hd/2] at absolute positions
+    rope_cos: jax.Array | None = None,
+) -> tuple[jax.Array, Params]:
+    """Chunked prefill (MMM phase over a warm cache): append C tokens at
+    ``pos`` and attend to the whole resident prefix.
+
+    Because ``pos`` is traced, one compiled shape serves every chunk offset.
+    Linear caches append in place; sliding-window rings scatter at
+    ``pos % window`` and are gathered back into position order for the flash
+    call (chunk size must not exceed the window so no slot is written twice).
+    """
+    b, c, _ = x_star.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q, k, v = _project_qkv(p, x_star, sig_inv, engine, "prefill", cfg)
+    if rope_sin is not None:
+        q = orp.apply_rope(q, rope_sin[None, :, None, :], rope_cos[None, :, None, :])
+        k = orp.apply_rope(k, rope_sin[None, :, None, :], rope_cos[None, :, None, :])
+
+    if cfg.sliding_window:
+        w = cfg.sliding_window
+        assert c <= w, f"chunk ({c}) must fit the sliding window ({w})"
+        # Attend BEFORE evicting: the chunk's earliest queries still window
+        # back to keys the chunk's own writes are about to overwrite.  Key
+        # j of the linearized view sits at absolute position (pos - w + j):
+        # the old ring in position order, then the chunk's fresh keys.
+        # Negative positions alias valid slots but are masked via k_offset.
+        base = pos - w
+        slots = (base + jnp.arange(w)) % w
+        k_lin = jnp.concatenate(
+            [from_cache_dtype(cache["k"][:, slots]), k.astype(jnp.float32)],
+            axis=1)
+        v_lin = jnp.concatenate(
+            [from_cache_dtype(cache["v"][:, slots]), v.astype(jnp.float32)],
+            axis=1)
+        k_off = base
+        idx = (pos + jnp.arange(c)) % w
+        k_cache = cache["k"].at[:, idx].set(to_cache_dtype(k, cache["k"].dtype))
+        v_cache = cache["v"].at[:, idx].set(to_cache_dtype(v, cache["v"].dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], to_cache_dtype(k, cache["k"].dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], to_cache_dtype(v, cache["v"].dtype), (0, pos, 0, 0))
+        k_lin, v_lin, k_off = (from_cache_dtype(k_cache),
+                               from_cache_dtype(v_cache), 0)
+
+    g = h // kv
+    out = flash_attention(q.reshape(b, c, kv, g, hd), k_lin, v_lin,
+                          causal=True, window=window, q_offset=pos,
+                          k_offset=k_off, kv_len=pos + c)
+    out = engine.linear(p["wo"], out.reshape(b, c, h * hd), "prefill")
+    return out, {"k": k_cache, "v": v_cache}
+
+
 def gqa_make_cache(cfg: ModelConfig, batch: int, cache_len: int,
                    dtype=jnp.bfloat16) -> Params:
     kv, hd = cfg.n_kv_heads, cfg.head_dim_
@@ -526,6 +609,53 @@ def mla_decode(p: Params, x_star, sig_inv, engine: HSAEngine, cfg: ModelConfig,
     wv_b = p["wv_b"]["w"].reshape(kvr, h, dv).astype(jnp.float32)
     out_heads = jnp.einsum("bhr,rhv->bhv", lat_out, wv_b)
     out = engine.linear(p["wo"], out_heads.reshape(b, 1, h * dv), "decode")
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_chunk(p: Params, x_star, sig_inv, engine: HSAEngine, cfg: ModelConfig,
+              cache: Params, pos: jax.Array, *, rope_sin=None, rope_cos=None
+              ) -> tuple[jax.Array, Params]:
+    """Chunked prefill for MLA: append the chunk's compressed latents at
+    ``pos``, then re-expand the *whole* resident prefix through wk_b/wv_b for
+    the flash call (compute-rich MMM work; the cache itself stays compressed).
+    """
+    b, c, _ = x_star.shape
+    h = cfg.n_heads
+    kvr, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+                       cfg.qk_rope_head_dim, cfg.v_head_dim)
+    q_nope, q_rope = _mla_q(p, x_star, sig_inv, engine, "prefill", cfg)
+
+    kv_a = engine.linear(p["wkv_a"], x_star, "prefill", row_scale=sig_inv)
+    c_kv_new, k_rope_new = kv_a[..., :kvr], kv_a[..., kvr:]
+    c_kv_new = norm_full(p["kv_norm"], c_kv_new, cfg)
+    if rope_sin is not None:
+        q_rope = orp.apply_rope(q_rope, rope_sin[None, :, None, :],
+                                rope_cos[None, :, None, :])
+        k_rope_new = orp.apply_rope(k_rope_new[:, :, None, :],
+                                    rope_sin[None, :, None, :],
+                                    rope_cos[None, :, None, :])[:, :, 0]
+
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], to_cache_dtype(c_kv_new, cache["c_kv"].dtype),
+        (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], to_cache_dtype(k_rope_new, cache["k_rope"].dtype),
+        (0, pos, 0))
+
+    cap = c_kv.shape[1]
+    c_kv_f = from_cache_dtype(c_kv)
+    k_nope = engine.linear(p["wk_b"], c_kv_f, "prefill").reshape(b, cap, h, dn)
+    v = engine.linear(p["wv_b"], c_kv_f, "prefill").reshape(b, cap, h, dv)
+    k_rope_f = from_cache_dtype(k_rope)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_f[:, :, None, :], (b, cap, h, dr))],
+        axis=-1)
+    out = flash_attention(q_full[:, :, :, None, :].reshape(b, c, h, 1, dn + dr),
+                          k_full, v, causal=True, q_offset=pos,
+                          kv_len=pos + c)
+    out = engine.linear(p["wo"], out.reshape(b, c, h * dv), "prefill")
     return out, {"c_kv": c_kv, "k_rope": k_rope}
 
 

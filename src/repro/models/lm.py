@@ -3,11 +3,16 @@
 One generic stack with per-family blocks, scanned over layers (compact HLO,
 fast multi-pod compiles), with three entry points matching the workload cells:
 
-    forward_train   — full-sequence teacher forcing, loss (train_4k)
-    forward_prefill — full-sequence, returns last-token logits + warm caches
-                      (prefill_32k; also the LISO prompt phase)
-    forward_decode  — one token with warm caches (decode_32k / long_500k;
-                      the SILO generation phase)
+    forward_train         — full-sequence teacher forcing, loss (train_4k)
+    forward_prefill       — full-sequence, returns last-token logits + warm
+                            caches (prefill_32k; also the LISO prompt phase);
+                            ``batch['prompt_len']`` switches on bucketed
+                            pad-and-mask mode (serving admission ladder)
+    forward_prefill_chunk — [B, C] tokens appended into a warm cache at a
+                            traced offset (the sequencer's chunk-granular
+                            LISO admissions; serving/engine.py paces it)
+    forward_decode        — one token with warm caches (decode_32k /
+                            long_500k; the SILO generation phase)
 
 The HSA engine (C1) routes every matmul; norms use fused emission (C3); the
 decode path drives a single model-level online-RoPE unit (C4) shared by all
@@ -99,20 +104,28 @@ def _block_init(b: ParamBuilder, cfg: ModelConfig, kind: str) -> None:
 
 def _block_apply(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
                  phase: str, kind: str, *, rope=None, full_attn=None,
-                 enc_kv=None, cache_len: int = 0
+                 enc_kv=None, cache_len: int = 0, valid_len=None
                  ) -> tuple[jax.Array, Params | None, jax.Array]:
-    """Full-sequence block.  Returns (x_out, cache_seed, aux_loss)."""
+    """Full-sequence block.  Returns (x_out, cache_seed, aux_loss).
+
+    ``valid_len`` (traced i32 scalar) marks a bucketed prefill: tokens at
+    positions >= valid_len are padding.  Causality already keeps them out of
+    every real token's *output*; the recurrent/conv/ring cache seeds
+    additionally mask them so decode continues from the real prompt end.
+    """
     sin, cos = rope if rope is not None else (None, None)
     aux = jnp.float32(0.0)
     xs, sig = L.norm_emit(p["ln1"], x, engine, cfg)
 
     if kind == "ssm":
-        y, cache = S.mamba_apply(p["mamba"], xs, sig, engine, phase, cfg)
+        y, cache = S.mamba_apply(p["mamba"], xs, sig, engine, phase, cfg,
+                                 valid_len=valid_len)
         return x + y, cache, aux
 
     if kind == "retnet":
         y, cache = R.retention_apply(p["ret"], xs, sig, engine, phase, cfg,
-                                     rope_sin=sin, rope_cos=cos)
+                                     rope_sin=sin, rope_cos=cos,
+                                     valid_len=valid_len)
         x = x + y
         xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
         x = x + M.mlp_apply(p["mlp"], xs2, sig2, engine, phase)
@@ -124,13 +137,15 @@ def _block_apply(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
         a_out, (k, v) = L.gqa_apply(p["attn"], xs, sig, engine, phase, cfg,
                                     causal=True, window=window,
                                     rope_sin=sin, rope_cos=cos)
-        m_out, m_cache = S.mamba_apply(p["mamba"], xs, sig, engine, phase, cfg)
+        m_out, m_cache = S.mamba_apply(p["mamba"], xs, sig, engine, phase, cfg,
+                                       valid_len=valid_len)
         y = 0.5 * (L.norm_full(p["attn_norm"], a_out, cfg)
                    + L.norm_full(p["mamba_norm"], m_out, cfg))
         x = x + y
         xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
         x = x + M.mlp_apply(p["mlp"], xs2, sig2, engine, phase)
-        cache = {"attn": _seed_attn_cache(cfg, k, v, cache_len),
+        cache = {"attn": _seed_attn_cache(cfg, k, v, cache_len,
+                                          valid_len=valid_len),
                  "mamba": m_cache}
         return x, cache, aux
 
@@ -148,7 +163,8 @@ def _block_apply(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
                                     causal=causal,
                                     window=cfg.sliding_window,
                                     rope_sin=sin, rope_cos=cos)
-        cache = _seed_attn_cache(cfg, k, v, cache_len) if causal else None
+        cache = (_seed_attn_cache(cfg, k, v, cache_len, valid_len=valid_len)
+                 if causal else None)
     x = x + a_out
 
     if kind == "dec":
@@ -179,17 +195,32 @@ def _cross_from_enc(p, xc, sigc, engine, phase, cfg, enc_out):
 
 
 def _seed_attn_cache(cfg: ModelConfig, k: jax.Array, v: jax.Array,
-                     cache_len: int = 0) -> Params:
+                     cache_len: int = 0, valid_len=None) -> Params:
     """Convert prefill K/V into the decode cache layout.
 
     Sliding-window caches are ring buffers keyed by ``pos % window``: the last
     `window` entries are rolled so each position p lands in slot p %% window.
     Linear caches are right-padded to `cache_len` so generation can continue.
+
+    ``valid_len`` (traced, bucketed prefill) builds the ring from the *real*
+    prompt only: slot i gets the key at the largest real position ≡ i mod w.
+    Padded keys must never enter the ring — they would alias (overwrite)
+    still-windowed real positions once the ring wraps.  Linear caches keep
+    their padded tail: decode starts writing at ``pos = valid_len`` and its
+    validity mask hides every not-yet-overwritten junk slot.
     """
     s = k.shape[1]
     if cfg.sliding_window:
         w = cfg.sliding_window
-        if s <= w:
+        if valid_len is not None:
+            i = jnp.arange(w)
+            # Largest real position p <= valid_len-1 with p % w == i.
+            p = i + w * ((valid_len - 1 - i) // w)
+            keep = (p >= 0)[None, :, None, None]
+            pc = jnp.clip(p, 0, s - 1)
+            k = jnp.where(keep, k[:, pc], 0)
+            v = jnp.where(keep, v[:, pc], 0)
+        elif s <= w:
             pad = [(0, 0), (0, w - s)] + [(0, 0)] * (k.ndim - 2)
             k, v = jnp.pad(k, pad), jnp.pad(v, pad)   # slot i = position i
         else:
@@ -354,7 +385,8 @@ def _sinusoidal(pos: jax.Array, d: int) -> jax.Array:
 
 
 def _run_group(params, gname, count, kind, x, cfg, engine, phase, rope,
-               enc_kv=None, remat: bool = True, cache_len: int = 0):
+               enc_kv=None, remat: bool = True, cache_len: int = 0,
+               valid_len=None):
     """Scan one homogeneous layer group over the sequence-major activations."""
     flags = (hybrid_full_attn_flags(cfg, count) if kind == "hybrid"
              else jnp.zeros(count, bool))
@@ -368,7 +400,7 @@ def _run_group(params, gname, count, kind, x, cfg, engine, phase, rope,
         xc = constrain(xc, ("batch", "seq", None))
         y, cache, aux = _block_apply(pl, xc, cfg, engine, phase, kind,
                                      rope=rope, full_attn=flag, enc_kv=enc_kv,
-                                     cache_len=cache_len)
+                                     cache_len=cache_len, valid_len=valid_len)
         y = y.astype(xc.dtype)     # keep the residual stream in param dtype
         if phase == "train":
             cache = None       # don't materialize per-layer K/V during training
@@ -455,9 +487,21 @@ def forward_prefill(params: Params, batch: Params, cfg: ModelConfig,
     """Prompt processing (MMM phase).  Returns (last logits [B,V], cache).
 
     `cache_len` > prompt length reserves KV slots for subsequent decoding.
+
+    Bucketed mode: if ``batch['prompt_len']`` (traced i32 scalar) is present,
+    the token array is treated as a prompt of that length right-padded to the
+    compiled bucket size.  Causality hides the pad from every real token;
+    recurrent/conv/ring cache seeds mask it explicitly (see `_block_apply`);
+    logits are taken at the last *real* token and the cache's ``pos``/RoPE
+    state start there — so K distinct prompt lengths share one compile per
+    bucket instead of one per length.
     """
     x = _embed(params, batch, cfg)
     b, s, _ = x.shape
+    valid_len = batch.get("prompt_len")
+    if valid_len is not None and cfg.is_encdec:
+        raise NotImplementedError("bucketed prefill: encoder-decoder models "
+                                  "prefill at exact length")
     rope = _rope_tables(cfg, s)
     enc_kv = _encode(params, batch, cfg, engine, "prefill") if cfg.is_encdec else None
 
@@ -467,16 +511,143 @@ def forward_prefill(params: Params, batch: Params, cfg: ModelConfig,
             continue
         x, _, cache = _run_group(params, gname, count, kind, x, cfg, engine,
                                  "prefill", rope, enc_kv=enc_kv, remat=False,
-                                 cache_len=cache_len)
+                                 cache_len=cache_len, valid_len=valid_len)
         caches[gname] = cache
+
+    if valid_len is None:
+        last = x[:, -1:]
+        pos = jnp.int32(s)
+    else:
+        last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+        pos = jnp.asarray(valid_len, jnp.int32)
+    h = L.norm_full(params["final_norm"], last, cfg)
+    logits = engine.linear(params["lm_head"], h, "prefill")[:, 0]
+
+    caches["pos"] = pos
+    if cfg.rope:
+        caches["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base, pos=pos)
+    return logits, caches
+
+
+def _block_chunk(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
+                 kind: str, cache: Params, pos: jax.Array, *, rope=None,
+                 full_attn=None) -> tuple[jax.Array, Params]:
+    """One chunked-prefill block: [B, C] tokens continuing a warm cache.
+
+    The MMM-shaped sibling of `_block_decode`: same per-layer cache-in /
+    cache-out contract, but C tokens at once through the prefill dataflow.
+    """
+    sin, cos = rope if rope is not None else (None, None)
+    xs, sig = L.norm_emit(p["ln1"], x, engine, cfg)
+
+    if kind == "ssm":
+        y, cache = S.mamba_apply(p["mamba"], xs, sig, engine, "prefill", cfg,
+                                 cache=cache)
+        return x + y, cache
+
+    if kind == "retnet":
+        y, cache = R.retention_apply(p["ret"], xs, sig, engine, "prefill",
+                                     cfg, rope_sin=sin, rope_cos=cos,
+                                     cache=cache)
+        x = x + y
+        xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+        return x + M.mlp_apply(p["mlp"], xs2, sig2, engine, "prefill"), cache
+
+    if kind == "hybrid":
+        c = x.shape[1]
+        # Full-attention layers see the whole resident prefix (the ring bounds
+        # it to the last `window` positions — the same degradation decode
+        # applies; exact whenever the prompt fits the window).
+        window = jnp.where(full_attn, pos + jnp.int32(c),
+                           jnp.int32(cfg.sliding_window))
+        a_out, a_cache = L.gqa_chunk(p["attn"], xs, sig, engine, cfg,
+                                     cache["attn"], pos, window=window,
+                                     rope_sin=sin, rope_cos=cos)
+        m_out, m_cache = S.mamba_apply(p["mamba"], xs, sig, engine, "prefill",
+                                       cfg, cache=cache["mamba"])
+        y = 0.5 * (L.norm_full(p["attn_norm"], a_out, cfg)
+                   + L.norm_full(p["mamba_norm"], m_out, cfg))
+        x = x + y
+        xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+        x = x + M.mlp_apply(p["mlp"], xs2, sig2, engine, "prefill")
+        return x, {"attn": a_cache, "mamba": m_cache}
+
+    if cfg.attn_type == "mla":
+        a_out, new_cache = L.mla_chunk(p["attn"], xs, sig, engine, cfg, cache,
+                                       pos, rope_sin=sin, rope_cos=cos)
+    else:
+        a_out, new_cache = L.gqa_chunk(p["attn"], xs, sig, engine, cfg, cache,
+                                       pos, window=cfg.sliding_window,
+                                       rope_sin=sin, rope_cos=cos)
+    x = x + a_out
+
+    xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
+    if kind == "moe":
+        y, _ = M.moe_apply(p["moe"], xs2, sig2, engine, "prefill", cfg)
+    else:
+        y = M.mlp_apply(p["mlp"], xs2, sig2, engine, "prefill")
+    return x + y, new_cache
+
+
+def forward_prefill_chunk(params: Params, batch: Params, cache: Params,
+                          cfg: ModelConfig, engine: HSAEngine
+                          ) -> tuple[jax.Array, Params]:
+    """Chunked prefill (MMM phase over a warm cache).
+
+    Processes ``batch['tokens']`` [B, C] as a continuation of ``cache`` —
+    absolute positions ``cache['pos'] .. cache['pos']+C-1`` — and returns
+    (last-token logits [B, V], advanced cache).  Because the offset rides in
+    the cache as a traced scalar, every chunk of the same length C shares one
+    compile: the sequencer admits a 750-token LISO prompt as a handful of
+    cached chunk shapes instead of one monolithic per-length trace.
+
+    Chunks are exact (never padded): the engine decomposes a prompt into
+    ladder-sized chunks, so recurrent (RetNet/SSM) state needs no pad
+    correction here.
+    """
+    if cfg.is_encdec:
+        raise NotImplementedError("chunked prefill: encoder-decoder models "
+                                  "prefill monolithically")
+    if cfg.frontend:
+        raise NotImplementedError("chunked prefill: frontend (vision/audio) "
+                                  "prompts splice patch embeddings — prefill "
+                                  "monolithically")
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    c = x.shape[1]
+    pos0 = cache["pos"]
+    positions = pos0 + jnp.arange(c)
+    if cfg.abs_pos_embed:
+        x = x + _sinusoidal(positions, cfg.d_model)[None].astype(x.dtype)
+
+    rope = None
+    if cfg.rope:
+        th = orp.rope_thetas(_rope_dim(cfg), cfg.rope_base)
+        rope = orp.rope_table(positions, th)
+
+    new_cache: Params = {"pos": pos0 + jnp.int32(c)}
+    if cfg.rope:
+        new_cache["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base,
+                                           pos=pos0 + jnp.int32(c))
+
+    for gname, count, kind in layer_groups(cfg):
+        if kind == "enc":
+            continue
+        flags = (hybrid_full_attn_flags(cfg, count) if kind == "hybrid"
+                 else jnp.zeros(count, bool))
+
+        def body(xc, per_layer, kind=kind):
+            pl, cl, flag = per_layer
+            y, c2 = _block_chunk(pl, xc, cfg, engine, kind, cl, pos0,
+                                 rope=rope, full_attn=flag)
+            return y.astype(xc.dtype), c2
+
+        x, new_g = jax.lax.scan(body, x, (params[gname], cache[gname], flags))
+        new_cache[gname] = new_g
 
     h = L.norm_full(params["final_norm"], x[:, -1:], cfg)
     logits = engine.linear(params["lm_head"], h, "prefill")[:, 0]
-
-    caches["pos"] = jnp.int32(s)
-    if cfg.rope:
-        caches["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base, pos=s)
-    return logits, caches
+    return logits, new_cache
 
 
 def forward_decode(params: Params, tokens: jax.Array, cache: Params,
@@ -515,12 +686,17 @@ def forward_decode(params: Params, tokens: jax.Array, cache: Params,
 
 
 def make_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
-                      dtype=jnp.bfloat16) -> Params:
-    """Cold caches for decode-only dry-runs (pos = cache_len - 1)."""
-    caches: Params = {"pos": jnp.int32(cache_len - 1)}
+                      dtype=jnp.bfloat16, start_pos: int | None = None
+                      ) -> Params:
+    """Cold caches.  Default ``start_pos`` keeps the decode-only dry-run
+    convention (pos = cache_len - 1); ``start_pos=0`` yields the empty cache
+    a chunked prefill appends into (zeros are the exact initial state for
+    every cache kind: KV rings, retention S, mamba h/conv)."""
+    pos = cache_len - 1 if start_pos is None else start_pos
+    caches: Params = {"pos": jnp.int32(pos)}
     if cfg.rope:
         caches["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base,
-                                        pos=cache_len - 1)
+                                        pos=pos)
 
     def one_layer(kind):
         if kind == "ssm":

@@ -49,9 +49,19 @@ def _project(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
 
 
 def retention_apply(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
-                    cfg: ModelConfig, *, rope_sin=None, rope_cos=None
+                    cfg: ModelConfig, *, rope_sin=None, rope_cos=None,
+                    cache: Params | None = None,
+                    valid_len: jax.Array | None = None
                     ) -> tuple[jax.Array, Params]:
-    """Full-sequence (chunkwise) retention.  Returns (out, final-state cache)."""
+    """Full-sequence (chunkwise) retention.  Returns (out, final-state cache).
+
+    ``cache`` (chunked prefill) carries the O(1) retention state across
+    chunks — outputs and the new state then include the decayed contribution
+    of everything before this chunk.  ``valid_len`` (bucketed prefill) masks
+    padded tail tokens out of the state: their k/v are zeroed and the final
+    state is re-scaled by ``gamma^(valid_len - s)`` to undo the extra decay
+    the padded steps applied (exact — see decay recurrence).
+    """
     b, s, d = x_star.shape
     h = cfg.n_heads
     q, k, v, g = _project(p, x_star, sig_inv, engine, phase, cfg)
@@ -59,13 +69,25 @@ def retention_apply(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
         q = orp.apply_rope(q, rope_sin[None, :, None, :], rope_cos[None, :, None, :])
         k = orp.apply_rope(k, rope_sin[None, :, None, :], rope_cos[None, :, None, :])
     gamma = ret.head_decays(h)
+    if valid_len is not None:
+        keep = (jnp.arange(s) < valid_len)[None, :, None, None]
+        k = k * keep
+        v = v * keep
     qt, kt, vt = (jnp.moveaxis(t, 2, 1) for t in (q, k, v))   # [B,H,S,d*]
+    state0 = cache["s"] if cache is not None else None
     chunk = min(128, s)
     if s % chunk == 0:
-        y, state = ops.retention_chunkwise(qt, kt, vt, gamma, chunk=chunk)
-    else:
+        y, state = ops.retention_chunkwise(qt, kt, vt, gamma, chunk=chunk,
+                                           state=state0)
+    elif state0 is None:
         y = ret.retention_parallel(qt, kt, vt, gamma)
         _, state = ret.retention_recurrent(qt, kt, vt, gamma)
+    else:
+        y, state = ret.retention_chunkwise(qt, kt, vt, gamma, chunk=s,
+                                           state=state0)
+    if valid_len is not None:
+        undo = jnp.exp((valid_len - s).astype(jnp.float32) * jnp.log(gamma))
+        state = state * undo[None, :, None, None]
     y = ret.group_norm_heads(y)
     y = jnp.moveaxis(y, 1, 2).reshape(b, s, 2 * d)
     y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)

@@ -66,16 +66,30 @@ def _conv_causal(x: jax.Array, w: jax.Array, bias: jax.Array,
 
 
 def mamba_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
-                phase: str, cfg: ModelConfig
+                phase: str, cfg: ModelConfig,
+                cache: Params | None = None,
+                valid_len: jax.Array | None = None
                 ) -> tuple[jax.Array, Params]:
-    """Full-sequence chunked selective scan.  Returns (y, final ssm cache)."""
+    """Full-sequence chunked selective scan.  Returns (y, final ssm cache).
+
+    ``cache`` (chunked prefill) seeds the scan with the previous chunk's
+    ``h``/``conv`` state so chunk N continues chunk N-1 exactly.
+    ``valid_len`` (bucketed prefill) freezes the state through padded tail
+    tokens: their ``dt`` is zeroed (``exp(0·A) = 1`` keeps h, ``dt·B·x = 0``
+    adds nothing) and the outgoing conv window is gathered at the last *real*
+    token instead of the padded end.
+    """
     bsz, s, _ = x_star.shape
     di, n = cfg.d_inner_, cfg.ssm_state
+    cw = cfg.conv_width
     chunk = min(cfg.ssm_chunk, s)
 
     xz = engine.linear(p["in_proj"], x_star, phase, row_scale=sig_inv)
     xc, z, dt, bc, cc = _ssm_inputs(p, xz, engine, phase, cfg)
-    xc = _conv_causal(xc, p["conv_w"], p["conv_b"])
+    conv_in = cache["conv"].astype(xc.dtype) if cache is not None else None
+    xc = _conv_causal(xc, p["conv_w"], p["conv_b"], state=conv_in)
+    if valid_len is not None:
+        dt = dt * (jnp.arange(s) < valid_len)[None, :, None]
 
     a = -jnp.exp(p["a_log"].astype(jnp.float32))           # [di, n], negative
 
@@ -101,7 +115,8 @@ def mamba_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
     bc_s = jnp.moveaxis(bc.astype(jnp.float32), 1, 0)
     cc_s = jnp.moveaxis(cc.astype(jnp.float32), 1, 0)
     main, rem = (s // chunk) * chunk, s % chunk
-    h0 = jnp.zeros((bsz, di, n), jnp.float32)
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((bsz, di, n), jnp.float32))
 
     def chunk_step(h, blk):
         return scan_block(h, *blk)
@@ -125,12 +140,16 @@ def mamba_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
     y = y * jax.nn.silu(z.astype(jnp.float32))
     out = engine.linear(p["out_proj"], y.astype(x_star.dtype), phase)
     pre = xz[..., :di].astype(jnp.float32)                 # pre-conv inputs
-    cw = cfg.conv_width
-    if s >= cw - 1:
-        conv_state = pre[:, s - (cw - 1):]
+    # Outgoing conv window: the cw-1 pre-conv inputs ending at the last real
+    # token, continuing any incoming window across the chunk boundary.
+    prev = (cache["conv"].astype(jnp.float32) if cache is not None
+            else jnp.zeros((bsz, cw - 1, di), jnp.float32))
+    pre_ext = jnp.concatenate([prev, pre], axis=1)         # [B, cw-1+s, di]
+    if valid_len is None:
+        conv_state = pre_ext[:, s:]
     else:
-        conv_state = jnp.concatenate(
-            [jnp.zeros((bsz, cw - 1 - s, di), jnp.float32), pre], axis=1)
+        conv_state = jax.lax.dynamic_slice(
+            pre_ext, (0, valid_len, 0), (bsz, cw - 1, di))
     return out, {"h": h_last, "conv": conv_state}
 
 

@@ -7,23 +7,29 @@ One import gives the whole serving surface:
   * `GenerationConfig` / `SamplingParams` — greedy, temperature, top-k,
     top-p, stop tokens, max_new_tokens (sampling.py).
   * `RequestScheduler` / `CachePool` / `Request` — continuous batching over a
-    slot-based decode-cache pool: MMM-phase prefill admissions overlapping
-    MVM-phase decode, like the paper's sequencer (scheduler.py).
+    *paged* slot pool (per-class cache lengths) with chunk-granular MMM
+    admissions overlapping MVM decode, like the paper's sequencer
+    (scheduler.py).
+  * `ChunkedPrefill` / `bucket_length` / `chunk_schedule` — the ladder-
+    bucketed, chunked prompt-admission machinery (engine.py).
   * `ServeCell` / `build_serve` — typed sharding/shape plan for multi-chip
     deployments (cell.py; `runtime.serve_step` re-exports it).
 """
 
-from repro.serving.cell import ServeCell, build_serve, serving_engine
-from repro.serving.engine import (EngineSpec, GenerationResult,
-                                  InferenceEngine)
+from repro.serving.cell import (ServeCell, build_serve,
+                                prefill_chunk_step_fn, serving_engine)
+from repro.serving.engine import (ChunkedPrefill, EngineSpec,
+                                  GenerationResult, InferenceEngine,
+                                  bucket_length, chunk_schedule)
 from repro.serving.sampling import (GREEDY, GenerationConfig, SamplingParams,
                                     sample)
 from repro.serving.scheduler import (CachePool, FinishedRequest, Request,
                                      RequestScheduler)
 
 __all__ = [
-    "CachePool", "EngineSpec", "FinishedRequest", "GenerationConfig",
-    "GenerationResult", "GREEDY", "InferenceEngine", "Request",
-    "RequestScheduler", "SamplingParams", "ServeCell", "build_serve",
-    "sample", "serving_engine",
+    "CachePool", "ChunkedPrefill", "EngineSpec", "FinishedRequest",
+    "GenerationConfig", "GenerationResult", "GREEDY", "InferenceEngine",
+    "Request", "RequestScheduler", "SamplingParams", "ServeCell",
+    "bucket_length", "build_serve", "chunk_schedule",
+    "prefill_chunk_step_fn", "sample", "serving_engine",
 ]

@@ -40,6 +40,11 @@ class ServeCell:
     cache_shapes: Params
     cache_shardings: Params
     policy: Any
+    # Chunked-prefill step (params, batch, cache) -> (logits, cache): the
+    # sharded twin of `InferenceEngine.begin_chunked_prefill`; cache
+    # shardings are the decode ones (the chunk path is cache-resident).
+    prefill_chunk: Callable[[Params, Params, Params],
+                            tuple[jax.Array, Params]] | None = None
 
     def __getitem__(self, name: str):
         if name not in {f.name for f in dataclasses.fields(self)}:
@@ -76,6 +81,14 @@ def decode_step_fn(cfg: ModelConfig, engine: HSAEngine):
     return decode
 
 
+def prefill_chunk_step_fn(cfg: ModelConfig, engine: HSAEngine):
+    """Chunk-granular prefill step: appends [B, C] tokens into a warm cache
+    at ``cache['pos']`` (one compiled shape per chunk length)."""
+    def prefill_chunk(params, batch, cache):
+        return lm.forward_prefill_chunk(params, batch, cache, cfg, engine)
+    return prefill_chunk
+
+
 def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
                 policy=None, kernel_impl: str = "auto",
                 local_batch: int | None = None,
@@ -102,6 +115,8 @@ def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
         engine=engine,
         prefill=prefill_step_fn(cfg, engine, cache_len=shape.seq_len),
         decode=decode_step_fn(cfg, engine),
+        prefill_chunk=(None if cfg.is_encdec
+                       else prefill_chunk_step_fn(cfg, engine)),
         param_shapes=served_shapes,
         param_axes=served_axes,
         param_shardings=param_shardings,

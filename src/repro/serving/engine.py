@@ -38,6 +38,48 @@ from repro.serving.sampling import GenerationConfig, sample
 
 Params = dict[str, Any]
 
+# Prompt-length bucket ladder: prompts pad (bucketed) or decompose (chunked)
+# to powers of two >= this floor, so K distinct lengths hit at most
+# ~log2(max_len) cached prefill compiles instead of K.
+MIN_BUCKET = 8
+
+
+def bucket_length(s: int, min_bucket: int = MIN_BUCKET) -> int:
+    """Smallest ladder bucket (power of two >= min_bucket) holding s tokens."""
+    if s < 1:
+        raise ValueError(f"prompt length must be >= 1, got {s}")
+    b = min_bucket
+    while b < s:
+        b *= 2
+    return b
+
+
+def chunk_schedule(s: int, chunk_size: int,
+                   min_bucket: int = MIN_BUCKET) -> list[int]:
+    """Decompose a prompt of length s into exact ladder-sized chunks.
+
+    Full `chunk_size` chunks, then the remainder split into descending
+    powers of two (its binary decomposition) — no padding, so recurrent
+    caches (RetNet state, Mamba h/conv) continue exactly, and the set of
+    compiled chunk shapes stays <= log2(chunk_size) + 1 across *all* prompt
+    lengths.  `min_bucket` is not applied here: exactness beats one or two
+    extra tiny-chunk compiles.
+    """
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    sched = [chunk_size] * (s // chunk_size)
+    rem = s % chunk_size
+    p = 1
+    while p <= rem:
+        p *= 2
+    p //= 2
+    while rem:
+        if p <= rem:
+            sched.append(p)
+            rem -= p
+        p //= 2
+    return sched
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
@@ -75,6 +117,63 @@ class GenerationResult:
     decode_s: float          # wall-clock MVM phase
 
 
+class ChunkedPrefill:
+    """One in-flight chunked prompt admission (MMM phase, cache-resident).
+
+    Built by `InferenceEngine.begin_chunked_prefill`; the sequencer calls
+    `advance()` once per cycle, so a long prompt overlaps ~n_chunks decode
+    steps instead of blocking them.  After the final chunk, `logits` holds
+    the last-token logits and `cache` the warm decode cache (identical — up
+    to fp summation order — to a monolithic `prefill` of the same prompt).
+    """
+
+    def __init__(self, engine: "InferenceEngine", tokens: jax.Array,
+                 cache_len: int, chunk_size: int, cache_dtype=jnp.float32):
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim != 2:
+            raise ValueError(f"tokens must be [B, S], got {tokens.shape}")
+        s = tokens.shape[1]
+        if s < 1:
+            raise ValueError("prompt must have at least one token")
+        if s > cache_len:
+            raise ValueError(f"prompt ({s}) exceeds cache_len ({cache_len})")
+        w = engine.cfg.sliding_window
+        if w:
+            chunk_size = min(chunk_size, w)   # ring scatter: chunk <= window
+        self.engine = engine
+        self.tokens = tokens
+        self.schedule = chunk_schedule(s, chunk_size)
+        self.cache = lm.make_decode_cache(engine.cfg, tokens.shape[0],
+                                          cache_len, cache_dtype, start_pos=0)
+        self.cache_len = cache_len
+        self.logits: jax.Array | None = None
+        self._off = 0
+        self._next = 0
+
+    @property
+    def done(self) -> bool:
+        return self._next >= len(self.schedule)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.schedule)
+
+    def advance(self) -> jax.Array | None:
+        """Run one chunk; returns the final logits once all chunks ran."""
+        if self.done:
+            return self.logits
+        c = self.schedule[self._next]
+        chunk = self.tokens[:, self._off:self._off + c]
+        eng = self.engine
+        eng.prefill_shape_keys.add(("chunk", c, self.cache_len))
+        self.logits, self.cache = eng._prefill_chunk(eng.params,
+                                                     {"tokens": chunk},
+                                                     self.cache)
+        self._off += c
+        self._next += 1
+        return self.logits if self.done else None
+
+
 class InferenceEngine:
     """Deployed model + HSA engine + jit-cached prefill / fused decode.
 
@@ -93,8 +192,13 @@ class InferenceEngine:
 
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("cache_len",))
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
         self._decode = jax.jit(self._decode_impl)
         self._loop = jax.jit(self._loop_impl, static_argnames=("gen",))
+        # Distinct prefill-entry shape keys = XLA compiles triggered by this
+        # engine's admission paths (the bench/tests watch the ladder keep
+        # this ~log-sized as distinct prompt lengths grow).
+        self.prefill_shape_keys: set[tuple] = set()
 
     # -- construction -------------------------------------------------------
 
@@ -132,6 +236,10 @@ class InferenceEngine:
     def _prefill_impl(self, params, batch, cache_len: int):
         return lm.forward_prefill(params, batch, self.cfg, self.hsa,
                                   cache_len=cache_len)
+
+    def _prefill_chunk_impl(self, params, batch, cache):
+        return lm.forward_prefill_chunk(params, batch, cache, self.cfg,
+                                        self.hsa)
 
     def _decode_impl(self, params, tokens, cache):
         return lm.forward_decode(params, tokens, cache, self.cfg, self.hsa)
@@ -182,17 +290,62 @@ class InferenceEngine:
 
     # -- public API ---------------------------------------------------------
 
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shapes this engine has dispatched (compile proxy)."""
+        return len(self.prefill_shape_keys)
+
     def prefill(self, tokens: jax.Array, *, cache_len: int | None = None,
-                extras: Params | None = None) -> tuple[jax.Array, Params]:
-        """MMM phase: prompts [B, S] -> (last-token logits [B, V], caches)."""
+                extras: Params | None = None, bucket: bool = False
+                ) -> tuple[jax.Array, Params]:
+        """MMM phase: prompts [B, S] -> (last-token logits [B, V], caches).
+
+        ``bucket=True`` pads the prompt up to the power-of-two ladder and
+        passes the real length in as a *traced* scalar, so every prompt
+        length in a bucket shares one compile; logits/cache positions are
+        taken at the real prompt end (token-identical to the exact-length
+        call).  ``cache_len`` is rounded up onto the same ladder — it is a
+        static jit argument, so a per-request value (prompt + budget) would
+        otherwise re-trigger one compile per length, defeating the bucket.
+        The cache is at least bucket-sized so the padded tail stays
+        addressable (decode masks, then overwrites it).
+        """
+        tokens = jnp.asarray(tokens, jnp.int32)
+        s = tokens.shape[1]
         batch = {"tokens": tokens, **(extras or {})}
-        return self._prefill(self.params, batch,
-                             cache_len=cache_len or tokens.shape[1])
+        if bucket:
+            b = bucket_length(s)
+            if b > s:
+                batch["tokens"] = jnp.pad(tokens, ((0, 0), (0, b - s)))
+            batch["prompt_len"] = jnp.int32(s)
+            cache_len = bucket_length(max(cache_len or s, b))
+            self.prefill_shape_keys.add(("bucket", b, cache_len))
+        else:
+            cache_len = cache_len or s
+            self.prefill_shape_keys.add(("prefill", s, cache_len))
+        return self._prefill(self.params, batch, cache_len=cache_len)
 
     def decode_step(self, tokens: jax.Array, cache: Params
                     ) -> tuple[jax.Array, Params]:
         """One MVM step: tokens [B, 1] + warm cache -> (logits [B, V], cache)."""
         return self._decode(self.params, tokens, cache)
+
+    def begin_chunked_prefill(self, tokens: jax.Array, *, cache_len: int,
+                              chunk_size: int = 32,
+                              cache_dtype=jnp.float32) -> ChunkedPrefill:
+        """Start a chunk-granular admission; the caller paces `advance()`."""
+        return ChunkedPrefill(self, tokens, cache_len, chunk_size, cache_dtype)
+
+    def prefill_chunked(self, tokens: jax.Array, *, cache_len: int,
+                        chunk_size: int = 32, cache_dtype=jnp.float32
+                        ) -> tuple[jax.Array, Params]:
+        """Drive a chunked prefill to completion: (last logits [B,V], cache)."""
+        cp = self.begin_chunked_prefill(tokens, cache_len=cache_len,
+                                        chunk_size=chunk_size,
+                                        cache_dtype=cache_dtype)
+        while not cp.done:
+            cp.advance()
+        return cp.logits, cp.cache
 
     def generate(self, prompts: jax.Array,
                  gen: GenerationConfig = GenerationConfig(), *,

@@ -1,30 +1,37 @@
-"""Continuous-batching request scheduler over a slot-based cache pool.
+"""Continuous-batching request scheduler over a paged, slot-based cache pool.
 
 Mirrors the HSA sequencer (paper Sec. IV): the engine's *prefill* path (MMM
 dataflow) admits new requests into free cache slots while the resident slots
-advance through the *decode* path (MVM dataflow) one token per step.  The two
-phases interleave at step granularity — a long-running decode batch never has
-to drain before new prompts enter, which is exactly the LISO/SILO mix the
-paper evaluates.
+advance through the *decode* path (MVM dataflow) one token per step.  Two
+refinements over the original slot pool make the admission path match the
+paper's LISO scenario (750-token prompts entering a busy decode batch):
 
-`CachePool` owns N slots of decode state behind one interface over
-`lm.make_decode_cache`: every per-model cache kind (KV rings, MXINT4-decoded
-MoE experts, Mamba conv state, RetNet's O(1) retention state, the online RoPE
-angle memory, the per-sequence position) is just a pytree leaf with a leading
-``[n_slots]`` axis.  The decode step vmaps `lm.forward_decode` over that axis,
-so slots at *different* positions (staggered admissions) batch into one
-dispatch — per-slot ``pos`` and RoPE state are vmapped scalars, not a shared
-host counter.
+  * **Chunk-granular admission** — `_admit` advances at most ONE prefill
+    chunk per `step()` (`InferenceEngine.begin_chunked_prefill`), so a long
+    prompt overlaps ~n_chunks decode cycles instead of stalling every lane
+    for one monolithic MMM pass, and the ladder-sized chunks keep the number
+    of compiled prefill shapes logarithmic in prompt length.
 
-The pool steps all N lanes every iteration (free lanes compute garbage that is
-never read) — one compiled shape, no re-trace as occupancy fluctuates, the
-same trade the fixed-size PE array makes in silicon.
+  * **Paged pool** — `CachePool` holds *classes* of slots (small/medium/
+    large cache lengths over the same stacked-pytree layout) instead of one
+    global `cache_len`; admission picks the smallest class that fits
+    ``prompt + budget``, so short requests stop paying the longest request's
+    KV memory.
+
+`CachePool` builds each class over `lm.make_decode_cache`: every per-model
+cache kind (KV rings, MXINT4-decoded MoE experts, Mamba conv state, RetNet's
+O(1) retention state, the online RoPE angle memory, the per-sequence
+position) is just a pytree leaf with a leading ``[n_slots]`` axis.  The
+decode step vmaps `lm.forward_decode` over that axis — one dispatch per
+*class* with at least one resident request (free lanes still compute garbage
+that is never read: one compiled shape per class, no re-trace as occupancy
+fluctuates, the same trade the fixed-size PE array makes in silicon).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -52,54 +59,121 @@ class FinishedRequest:
     prompt_len: int
     tokens: list[int]                    # emitted tokens incl. any stop token
     slot: int                            # pool slot it ran in (for tests/stats)
+    cancelled: bool = False              # retired early via `cancel(uid)`
 
 
 class CachePool:
-    """N decode-cache slots as one stacked pytree ([n_slots, ...] per leaf).
+    """Paged decode-cache pool: slot *classes* of increasing cache length.
 
-    Built over `lm.make_decode_cache` (batch=1 per slot), so the slot layout
-    is identical for every cache kind the model zoo produces.  Prefilled
-    batch-1 caches are scattered into a slot with ``write``; the whole pool is
-    advanced in one vmapped decode step by the scheduler.
+    ``classes`` is a sequence of ``(n_slots, cache_len)`` pairs; the legacy
+    single-class form ``CachePool(cfg, n_slots, cache_len)`` still works.
+    Slots carry global ids (stable across classes); each class is one stacked
+    pytree (``[n_slots_c, ...]`` per leaf) over `lm.make_decode_cache`
+    (batch=1 per slot), so the slot layout is identical for every cache kind
+    the model zoo produces.  Prefilled batch-1 caches are scattered into a
+    slot with ``write``; the scheduler advances each class in one vmapped
+    decode step.
     """
 
-    def __init__(self, cfg, n_slots: int, cache_len: int,
+    def __init__(self, cfg, n_slots: int | None = None,
+                 cache_len: int | None = None, *,
+                 classes: Sequence[tuple[int, int]] | None = None,
                  dtype=jnp.float32):
-        if n_slots < 1:
-            raise ValueError("need at least one slot")
+        if classes is None:
+            classes = [(n_slots if n_slots is not None else 4,
+                        cache_len if cache_len is not None else 128)]
+        classes = sorted(classes, key=lambda c: c[1])
+        if not classes or any(n < 1 or length < 1 for n, length in classes):
+            raise ValueError(f"bad cache classes: {classes}")
+        if len({length for _, length in classes}) != len(classes):
+            raise ValueError(f"duplicate class cache_len: {classes}")
         self.cfg = cfg
-        self.n_slots = n_slots
-        self.cache_len = cache_len
-        template = lm.make_decode_cache(cfg, 1, cache_len, dtype)
-        self.store = jax.tree.map(
-            lambda x: jnp.zeros((n_slots,) + x.shape, x.dtype), template)
-        self._free = list(range(n_slots))
+        self.classes = [(int(n), int(length)) for n, length in classes]
+        self.n_slots = sum(n for n, _ in self.classes)
+        self.cache_len = self.classes[-1][1]      # largest class (compat)
+        self.dtype = dtype
+
+        self._stores: dict[int, Params] = {}
+        self._locate: dict[int, tuple[int, int]] = {}   # gid -> (clen, local)
+        self._free: dict[int, list[int]] = {}           # clen -> free gids
+        gid = 0
+        for n, clen in self.classes:
+            template = lm.make_decode_cache(cfg, 1, clen, dtype)
+            self._stores[clen] = jax.tree.map(
+                lambda x: jnp.zeros((n,) + x.shape, x.dtype), template)
+            self._free[clen] = []
+            for local in range(n):
+                self._locate[gid] = (clen, local)
+                self._free[clen].append(gid)
+                gid += 1
+
+    # -- slot accounting ----------------------------------------------------
 
     @property
     def free_slots(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free.values())
 
-    def acquire(self) -> int | None:
-        return self._free.pop(0) if self._free else None
+    def fits(self, min_len: int) -> bool:
+        """Could a request needing `min_len` cache positions EVER be placed?"""
+        return min_len <= self.cache_len
+
+    def slot_len(self, slot: int) -> int:
+        return self._locate[slot][0]
+
+    def locate(self, slot: int) -> tuple[int, int]:
+        return self._locate[slot]
+
+    def acquire(self, min_len: int = 0) -> int | None:
+        """Smallest-class-first placement: the cheapest slot that fits."""
+        for _, clen in self.classes:
+            if clen >= min_len and self._free[clen]:
+                return self._free[clen].pop(0)
+        return None
 
     def release(self, slot: int) -> None:
-        assert 0 <= slot < self.n_slots and slot not in self._free, slot
-        self._free.append(slot)
+        clen, _ = self._locate[slot]
+        assert slot not in self._free[clen], slot
+        self._free[clen].append(slot)
+
+    # -- stacked stores -----------------------------------------------------
+
+    @property
+    def store(self) -> Params:
+        """Legacy single-class view of the stacked store."""
+        if len(self.classes) != 1:
+            raise ValueError("`store` is single-class; use get_store(clen)")
+        return self._stores[self.classes[0][1]]
+
+    def get_store(self, clen: int) -> Params:
+        return self._stores[clen]
+
+    def set_store(self, clen: int, store: Params) -> None:
+        self._stores[clen] = store
 
     def write(self, slot: int, cache: Params) -> None:
         """Scatter one batch-1 cache (e.g. fresh from prefill) into a slot."""
-        self.store = jax.tree.map(
-            lambda pool, c: pool.at[slot].set(c.astype(pool.dtype)),
-            self.store, cache)
+        clen, local = self._locate[slot]
+        self._stores[clen] = jax.tree.map(
+            lambda pool, c: pool.at[local].set(c.astype(pool.dtype)),
+            self._stores[clen], cache)
 
 
 class RequestScheduler:
     """Admit-while-decoding serving loop around one `InferenceEngine`.
 
-    ``step()`` performs one sequencer cycle: (1) admit queued requests into
-    free slots via the MMM prefill path, (2) advance every resident slot one
-    token through the vmapped MVM decode path, (3) retire slots that hit a
-    stop token or their token budget.  ``run()`` drains the queue.
+    ``step()`` performs one sequencer cycle: (1) advance the in-flight
+    admission by at most one prefill chunk (starting the next queued request
+    that fits a free slot class when idle), (2) advance every resident class
+    one token through the vmapped MVM decode path, (3) retire slots that hit
+    a stop token or their token budget.  ``run()`` drains the queue.
+
+    ``on_token(uid, token)`` streams tokens as they are emitted;
+    ``cancel(uid)`` drops a queued request, aborts an in-flight admission, or
+    retires an active slot (its partial output is returned with
+    ``cancelled=True``).
+
+    Admission order is FIFO with skip: a request whose smallest fitting class
+    is momentarily full does not block later requests that fit elsewhere.
 
     Stochastic sampling stays per-request reproducible: each request draws
     from ``fold_in(key, uid)`` regardless of which slot it lands in or what
@@ -108,20 +182,31 @@ class RequestScheduler:
 
     def __init__(self, engine: InferenceEngine, *, n_slots: int = 4,
                  cache_len: int = 128,
+                 classes: Sequence[tuple[int, int]] | None = None,
                  gen: GenerationConfig = GenerationConfig(),
-                 key: jax.Array | None = None):
+                 key: jax.Array | None = None,
+                 chunk_size: int = 32,
+                 on_token: Callable[[int, int], None] | None = None):
         self.engine = engine
         self.gen = gen
-        self.pool = CachePool(engine.cfg, n_slots, cache_len)
+        self.pool = CachePool(engine.cfg, n_slots, cache_len, classes=classes)
         self.base_key = key if key is not None else jax.random.key(0)
+        self.chunk_size = chunk_size
+        self.on_token = on_token
 
         self._queue: list[Request] = []
-        self._active: dict[int, dict] = {}       # slot -> per-request state
+        self._admitting: dict | None = None      # the one in-flight prefill
+        self._active: dict[int, dict] = {}       # gid -> per-request state
         self._finished: list[FinishedRequest] = []
-        # Current token per slot [N, 1, 1] (lane-major so vmap sees [1, 1],
-        # the [B=1, T=1] shape forward_decode expects).
-        self._tokens = jnp.zeros((n_slots, 1, 1), jnp.int32)
-        self._keys = jax.random.split(self.base_key, n_slots)  # set on admit
+        # Per class: current token per slot [N_c, 1, 1] (lane-major so vmap
+        # sees [1, 1], the [B=1, T=1] shape forward_decode expects) and the
+        # per-slot sampling keys (set on admit).
+        self._tokens = {clen: jnp.zeros((n, 1, 1), jnp.int32)
+                        for n, clen in self.pool.classes}
+        self._keys = {clen: jax.random.split(self.base_key, n)
+                      for n, clen in self.pool.classes}
+        self.stats = {"steps": 0, "emitted": 0, "prefill_chunks": 0,
+                      "admitted": 0, "cancelled": 0, "decode_stall_steps": 0}
 
         # Same split-then-sample order as the engine's fused loop, so a
         # request's token stream is identical whether it runs here or through
@@ -144,65 +229,141 @@ class RequestScheduler:
 
     @property
     def pending(self) -> int:
-        return len(self._queue) + len(self._active)
+        return (len(self._queue) + len(self._active)
+                + (1 if self._admitting is not None else 0))
+
+    def cancel(self, uid: int) -> bool:
+        """Drop a queued request / abort its admission / retire its slot."""
+        for i, req in enumerate(self._queue):
+            if req.uid == uid:
+                self._queue.pop(i)
+                self.stats["cancelled"] += 1
+                return True
+        if self._admitting is not None and self._admitting["req"].uid == uid:
+            self.pool.release(self._admitting["slot"])
+            self._admitting = None
+            self.stats["cancelled"] += 1
+            return True
+        for slot, st in self._active.items():
+            if st["req"].uid == uid:
+                self._retire(slot, cancelled=True)
+                self.stats["cancelled"] += 1
+                return True
+        return False
 
     # -- the sequencer cycle ------------------------------------------------
 
-    def _admit(self) -> None:
-        """MMM phase: prefill queued requests into free slots."""
-        while self._queue and self.pool.free_slots:
-            req = self._queue.pop(0)
+    def _start_admission(self) -> None:
+        """Pick the first queued request that fits a free slot class.
+
+        The capacity check happens *before* `pool.acquire`, and any failure
+        after acquisition releases the slot — admission can never leak slots.
+        A request that can never fit raises ValueError (a sizing bug at the
+        call site, not load); the offender is dropped first, so resident
+        lanes and the rest of the queue survive — `run()` again resumes.
+        """
+        for i, req in enumerate(self._queue):
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             budget = req.max_new_tokens or self.gen.max_new_tokens
             # Decode writes cache positions s .. s+budget-1; past-capacity
             # positions would silently clamp onto the last linear-cache slot
             # (gqa_decode), so reject instead of corrupting attention.
-            if prompt.shape[1] + budget > self.pool.cache_len:
+            need = prompt.shape[1] + budget
+            if not self.pool.fits(need):
+                self._queue.pop(i)
                 raise ValueError(
                     f"request {req.uid}: prompt ({prompt.shape[1]}) + "
-                    f"max_new_tokens ({budget}) exceeds the pool cache_len "
-                    f"({self.pool.cache_len})")
-            slot = self.pool.acquire()
-            logits, cache = self.engine.prefill(
-                prompt, cache_len=self.pool.cache_len)
-            self.pool.write(slot, cache)
+                    f"max_new_tokens ({budget}) exceeds every pool class "
+                    f"(largest cache_len {self.pool.cache_len})")
+            slot = self.pool.acquire(need)
+            if slot is None:
+                continue                 # fitting classes all busy: try next
+            self._queue.pop(i)
+            try:
+                prefill = self.engine.begin_chunked_prefill(
+                    prompt, cache_len=self.pool.slot_len(slot),
+                    chunk_size=self.chunk_size,
+                    cache_dtype=self.pool.dtype)
+            except Exception:
+                self.pool.release(slot)
+                raise
+            self._admitting = {"req": req, "slot": slot, "prefill": prefill,
+                               "budget": budget}
+            return
 
-            key = jax.random.fold_in(self.base_key, req.uid)
-            key, sub = jax.random.split(key)
-            tok = sample(logits[0], self.gen.sampling, sub)
-            self._tokens = self._tokens.at[slot, 0, 0].set(tok)
-            self._keys = self._keys.at[slot].set(key)
-            self._active[slot] = {"req": req, "emitted": [], "budget": budget}
+    def _admit(self) -> None:
+        """MMM phase: advance the in-flight admission by at most one chunk."""
+        if self._admitting is None:
+            self._start_admission()
+        if self._admitting is None:
+            return
+        adm = self._admitting
+        logits = adm["prefill"].advance()
+        self.stats["prefill_chunks"] += 1
+        if not adm["prefill"].done:
+            return
+        req, slot = adm["req"], adm["slot"]
+        self.pool.write(slot, adm["prefill"].cache)
+        key = jax.random.fold_in(self.base_key, req.uid)
+        key, sub = jax.random.split(key)
+        tok = sample(logits[0], self.gen.sampling, sub)
+        clen, local = self.pool.locate(slot)
+        self._tokens[clen] = self._tokens[clen].at[local, 0, 0].set(tok)
+        self._keys[clen] = self._keys[clen].at[local].set(key)
+        self._active[slot] = {"req": req, "emitted": [],
+                              "budget": adm["budget"]}
+        self._admitting = None
+        self.stats["admitted"] += 1
 
-    def _retire(self, slot: int) -> None:
+    def _retire(self, slot: int, cancelled: bool = False) -> None:
         st = self._active.pop(slot)
         self._finished.append(FinishedRequest(
             uid=st["req"].uid, prompt_len=len(st["req"].prompt),
-            tokens=st["emitted"], slot=slot))
+            tokens=st["emitted"], slot=slot, cancelled=cancelled))
         self.pool.release(slot)
 
     def step(self) -> int:
         """One admit+decode cycle; returns the number of tokens emitted."""
         self._admit()
+        self.stats["steps"] += 1
         if not self._active:
+            if self._admitting is not None:
+                self.stats["decode_stall_steps"] += 1
             return 0
 
         # Snapshot this step's token per active slot *before* decoding: like
         # the fused loop, the token emitted at step i is the one sampled from
-        # the previous step's (or prefill's) logits.
+        # the previous step's (or prefill's) logits.  One vmapped dispatch
+        # per resident class.
         emitted = 0
-        stepped = np.asarray(jax.device_get(self._tokens[:, 0, 0]))
-        next_toks, self.pool.store, self._keys = self._pool_step(
-            self.engine.params, self._tokens, self.pool.store, self._keys)
-        self._tokens = next_toks[:, None, None]
+        active_classes = sorted({self.pool.locate(s)[0] for s in self._active})
+        stepped: dict[int, np.ndarray] = {}
+        for clen in active_classes:
+            toks = self._tokens[clen]
+            stepped[clen] = np.asarray(jax.device_get(toks[:, 0, 0]))
+            nxt, new_store, self._keys[clen] = self._pool_step(
+                self.engine.params, toks, self.pool.get_store(clen),
+                self._keys[clen])
+            self.pool.set_store(clen, new_store)
+            self._tokens[clen] = nxt[:, None, None]
 
         for slot in list(self._active):
-            st = self._active[slot]
-            tok = int(stepped[slot])
+            st = self._active.get(slot)
+            if st is None:           # retired by an on_token cancel mid-loop
+                continue
+            clen, local = self.pool.locate(slot)
+            tok = int(stepped[clen][local])
             st["emitted"].append(tok)
             emitted += 1
+            if self.on_token is not None:
+                # The callback may cancel() any request — including this one,
+                # which retires the slot before the stop/budget check below.
+                self.on_token(st["req"].uid, tok)
+            if slot not in self._active:
+                continue
             if tok in self.gen.stop_tokens or len(st["emitted"]) >= st["budget"]:
                 self._retire(slot)
+        self.stats["emitted"] += emitted
         return emitted
 
     def run(self) -> dict[int, FinishedRequest]:

@@ -91,6 +91,49 @@ def test_traced_window_hybrid_flags():
                                rtol=1e-5, atol=1e-6)
 
 
+def test_traced_q_offset_matches_full_slice():
+    """Chunked prefill: queries at absolute offset `off` over a cache longer
+    than the valid prefix must equal the same rows of one full flash call —
+    with traced offsets, so every chunk offset shares one compile."""
+    s, off, cap = 24, 16, 40
+    q = jnp.asarray(RNG.normal(size=(2, s, 2, 2, 8)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, s, 2, 8)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, s, 2, 8)).astype(np.float32))
+    full = flash_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=8)
+
+    k_cache = jnp.pad(k, ((0, 0), (0, cap - s), (0, 0), (0, 0)))
+    v_cache = jnp.pad(v, ((0, 0), (0, cap - s), (0, 0), (0, 0)))
+
+    @jax.jit
+    def chunk(q_blk, offset):
+        return flash_attention(q_blk, k_cache, v_cache, causal=True,
+                               q_offset=offset, kv_len=offset + q_blk.shape[1],
+                               q_chunk=8, kv_chunk=8)
+
+    got = chunk(q[:, off:], jnp.int32(off))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, off:]),
+                               rtol=1e-5, atol=2e-6)
+
+
+def test_k_offset_masks_leading_garbage():
+    """Ring linearization: keys handed over with a (possibly negative)
+    k_offset — rows whose absolute position falls outside [0, kv_len) must
+    not contribute, wherever they sit in the buffer."""
+    s, lead = 16, 4
+    q = jnp.asarray(RNG.normal(size=(1, s, 2, 2, 8)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(1, s, 2, 8)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(1, s, 2, 8)).astype(np.float32))
+    full = flash_attention(q, k, v, causal=True, q_chunk=8, kv_chunk=8)
+
+    junk = jnp.full((1, lead, 2, 8), 7.0, jnp.float32)
+    got = flash_attention(q, jnp.concatenate([junk, k], axis=1),
+                          jnp.concatenate([junk, v], axis=1), causal=True,
+                          k_offset=jnp.int32(-lead), kv_len=jnp.int32(s),
+                          q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=1e-5, atol=2e-6)
+
+
 def test_no_quadratic_buffer_in_grad():
     """The custom VJP must not save per-tile score tensors (the A-m1 fix):
     grad temp memory stays far below the dense [Sq, Sk] score matrix."""

@@ -1,0 +1,326 @@
+"""Chunked + bucketed prefill over the paged cache pool (the MMM admission
+path): token identity vs. monolithic prefill per cache architecture, the
+compile ladder, sequencer overlap, paged classes, streaming and cancel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (CachePool, EngineSpec, GenerationConfig,
+                           InferenceEngine, Request, RequestScheduler,
+                           bucket_length, chunk_schedule)
+
+# One arch per serving cache kind: linear KV (dense GQA), sliding-window
+# ring + mamba (hybrid), O(1) retention state, O(1) ssm state.
+ARCHS = ["qwen3-8b", "hymba-1.5b", "retnet-1.3b", "falcon-mamba-7b"]
+
+_ENGINES: dict = {}
+
+
+def fp_engine(arch):
+    """fp-path engines: identity checks isolate the dataflow refactor from
+    per-tensor dynamic activation-quantization granularity (each chunk gets
+    its own A8 scale, a legitimate — finer — quantization difference)."""
+    if arch not in _ENGINES:
+        _ENGINES[arch] = InferenceEngine.from_config(
+            arch, EngineSpec(reduced=True, quantize=False))
+    return _ENGINES[arch]
+
+
+def greedy_continue(engine, logits, cache, n):
+    """Greedy per-token decode from a warm (logits, cache) pair."""
+    toks = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(n):
+        toks.append(int(tok[0, 0]))
+        logits, cache = engine.decode_step(tok, cache)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return toks
+
+
+def _prompt(engine, s, seed=1):
+    return jax.random.randint(jax.random.key(seed), (1, s), 1,
+                              engine.cfg.vocab_size, dtype=jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_chunked_prefill_token_identity(arch):
+    """Chunk-N must continue chunk-N-1's cache and positions exactly: greedy
+    decode after a chunked prefill (uneven ladder: 11 = 4+4+2+1) equals the
+    monolithic path, for every cache kind."""
+    engine = fp_engine(arch)
+    n, s = 6, 11
+    prompts = _prompt(engine, s)
+    lg_m, cache_m = engine.prefill(prompts, cache_len=s + n)
+    lg_c, cache_c = engine.prefill_chunked(prompts, cache_len=s + n,
+                                           chunk_size=4)
+    np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_c),
+                               rtol=2e-4, atol=2e-4)
+    assert (greedy_continue(engine, lg_c, cache_c, n)
+            == greedy_continue(engine, lg_m, cache_m, n)), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_bucketed_prefill_token_identity(arch):
+    """Pad-and-mask bucketing: logits come from the real last token, and the
+    recurrent/conv/ring cache seeds ignore the padded tail (RetNet state is
+    decay-corrected, Mamba dt is zeroed, rings gather real positions only)."""
+    engine = fp_engine(arch)
+    n, s = 6, 11
+    prompts = _prompt(engine, s, seed=2)
+    lg_m, cache_m = engine.prefill(prompts, cache_len=s + n)
+    lg_b, cache_b = engine.prefill(prompts, cache_len=s + n, bucket=True)
+    np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_b),
+                               rtol=2e-4, atol=2e-4)
+    assert (greedy_continue(engine, lg_b, cache_b, n)
+            == greedy_continue(engine, lg_m, cache_m, n)), arch
+
+
+def test_hybrid_full_attention_exact_to_window_boundary():
+    """Hybrid full-attention layers are ring-bounded during chunked
+    admission (the same degradation decode applies; reduced hymba marks
+    every layer full-attn).  Pin the contract edge: identity holds up to
+    prompt == window exactly."""
+    engine = fp_engine("hymba-1.5b")
+    w = engine.cfg.sliding_window
+    n = 4
+    prompts = _prompt(engine, w, seed=3)
+    lg_m, cache_m = engine.prefill(prompts, cache_len=w + n)
+    lg_c, cache_c = engine.prefill_chunked(prompts, cache_len=w + n,
+                                           chunk_size=8)
+    assert (greedy_continue(engine, lg_c, cache_c, n)
+            == greedy_continue(engine, lg_m, cache_m, n))
+
+
+def test_windowed_ring_chunked_beyond_window():
+    """Sliding-window ring for prompts LONGER than the window: chunk outputs
+    must match one monolithic windowed pass (the chunk's earliest queries
+    still window back over keys its own writes evict — regression test for
+    attend-before-evict), and the final ring must equal the monolithic seed.
+
+    Layer-level because reduced hymba marks every layer full-attention
+    (first/middle/last of 2), which legitimately degrades to the ring for
+    prompts > window — this pins the *windowed* path exactly.
+    """
+    from repro import configs
+    from repro.core import online_rope as orp
+    from repro.core.hsa import HSAConfig, HSAEngine
+    from repro.models import layers as L
+    from repro.models.lm import _seed_attn_cache
+    from repro.models.modules import ParamBuilder
+    from repro.serving import chunk_schedule
+
+    cfg = configs.get_config("hymba-1.5b").reduced()
+    w = cfg.sliding_window
+    s, chunk_size = 48, 8
+    assert s > w
+    b = ParamBuilder(key=jax.random.key(0), dtype=jnp.float32)
+    L.gqa_init(b.child("attn"), cfg)
+    p = b.params["attn"]
+    eng = HSAEngine(HSAConfig(prefill_format="fp", decode_format="fp"))
+    th = orp.rope_thetas(cfg.head_dim_, cfg.rope_base)
+    sin, cos = orp.rope_table(jnp.arange(s), th)
+    x = jax.random.normal(jax.random.key(1), (1, s, cfg.d_model)) * 0.2
+
+    mono, (k, v) = L.gqa_apply(p, x, None, eng, "prefill", cfg, causal=True,
+                               window=w, rope_sin=sin, rope_cos=cos)
+    cache = jax.tree.map(jnp.zeros_like, L.gqa_make_cache(cfg, 1, s,
+                                                          jnp.float32))
+    outs, pos = [], 0
+    for c in chunk_schedule(s, chunk_size):
+        o, cache = L.gqa_chunk(p, x[:, pos:pos + c], None, eng, cfg, cache,
+                               jnp.int32(pos), window=w,
+                               rope_sin=sin[pos:pos + c],
+                               rope_cos=cos[pos:pos + c])
+        outs.append(o)
+        pos += c
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
+                               np.asarray(mono), rtol=1e-5, atol=1e-5)
+    ring = _seed_attn_cache(cfg, k, v, s)
+    np.testing.assert_array_equal(np.asarray(ring["k"]),
+                                  np.asarray(cache["k"]))
+
+
+def test_chunked_prefill_matches_generate_quantized():
+    """End-to-end on the paper's deployed formats (W8A8 prefill): the
+    scheduler's whole chunked admission path reproduces engine.generate."""
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=6)
+    prompts = _prompt(engine, 11)
+    want = engine.generate(prompts, gen).tokens[0].tolist()
+    lg, cache = engine.prefill_chunked(prompts, cache_len=11 + 6,
+                                       chunk_size=4)
+    assert greedy_continue(engine, lg, cache, 6) == want
+
+
+def test_bucket_and_chunk_ladders():
+    assert [bucket_length(s) for s in (1, 8, 9, 33, 750)] == [8, 8, 16, 64,
+                                                              1024]
+    assert chunk_schedule(750, 64) == [64] * 11 + [32, 8, 4, 2]
+    assert chunk_schedule(5, 32) == [4, 1]
+    assert chunk_schedule(32, 32) == [32]
+    assert sum(chunk_schedule(1023, 64)) == 1023
+
+
+def test_admitting_k_lengths_compiles_log_not_k():
+    """K distinct prompt lengths through the scheduler must hit the chunk
+    ladder (<= log2-ish shapes), not one prefill compile per length."""
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=2)
+    sched = RequestScheduler(engine, n_slots=2, cache_len=64, gen=gen,
+                             chunk_size=16)
+    lengths = [7, 11, 19, 26, 33, 41, 50, 57]          # K = 8 distinct
+    for uid, s in enumerate(lengths):
+        sched.submit(Request(uid=uid, prompt=list(range(2, 2 + s))))
+    sched.run()
+    chunk_keys = {k for k in engine.prefill_shape_keys if k[0] == "chunk"}
+    # ladder: chunks are 16 or the binary decomposition of remainders
+    assert {k[1] for k in chunk_keys} <= {16, 8, 4, 2, 1}
+    assert len(chunk_keys) <= 5 < len(lengths)
+
+
+def test_long_admission_overlaps_resident_decode():
+    """The LISO property: while a long prompt is chunk-admitted, resident
+    decode lanes keep emitting every cycle (no more than one chunk of MMM
+    work per step())."""
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=8)
+    sched = RequestScheduler(engine, n_slots=2, cache_len=48, gen=gen,
+                             chunk_size=4)
+    # lane 0 gets a larger budget so it stays resident through the admission
+    sched.submit(Request(uid=0, prompt=[3, 4, 5, 6], max_new_tokens=16))
+    while not sched._active:                       # admit the short request
+        sched.step()
+
+    long_prompt = list(range(2, 26))               # 24 tokens -> 6 chunks
+    sched.submit(Request(uid=1, prompt=long_prompt))
+    emitted_during = 0
+    admit_steps = 0
+    while sched.stats["admitted"] < 2:
+        before = len(sched._active[next(iter(sched._active))]["emitted"])
+        sched.step()
+        admit_steps += 1
+        after_active = [s for s in sched._active.values()
+                        if s["req"].uid == 0]
+        if after_active:
+            emitted_during += len(after_active[0]["emitted"]) - before
+    assert admit_steps >= 6                        # one chunk per cycle
+    assert emitted_during >= admit_steps - 1       # lane 0 never starved
+
+    res = sched.run()
+    want = engine.generate(jnp.asarray([long_prompt], jnp.int32), gen)
+    assert res[1].tokens == want.tokens[0].tolist()
+
+
+def test_paged_pool_classes_and_admission_fit():
+    """Short requests land in the small class (stop paying long-request
+    memory); long ones go large; admission picks by prompt + budget."""
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=4)
+    sched = RequestScheduler(engine, classes=[(2, 12), (1, 48)], gen=gen,
+                             chunk_size=8)
+    sched.submit(Request(uid=0, prompt=[2, 3, 4]))           # 3+4 -> class 12
+    sched.submit(Request(uid=1, prompt=list(range(2, 32))))  # 30+4 -> class 48
+    res = sched.run()
+    assert sched.pool.slot_len(res[0].slot) == 12
+    assert sched.pool.slot_len(res[1].slot) == 48
+    # the small class's KV leaves really are smaller
+    pool = sched.pool
+    k_small = jax.tree_util.tree_leaves(pool.get_store(12))[0]
+    k_large = jax.tree_util.tree_leaves(pool.get_store(48))[0]
+    assert k_small.shape[0] == 2 and k_large.shape[0] == 1
+
+
+def test_admission_validation_before_acquire_no_slot_leak():
+    """A request that can never fit raises *before* pool.acquire, leaking
+    nothing; later requests still run."""
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=4)
+    sched = RequestScheduler(engine, n_slots=2, cache_len=16, gen=gen,
+                             chunk_size=8)
+    free_before = sched.pool.free_slots
+    sched.submit(Request(uid=0, prompt=list(range(2, 40))))  # 38+4 > 16
+    with pytest.raises(ValueError, match="exceeds every pool class"):
+        sched.run()
+    assert sched.pool.free_slots == free_before              # no leak
+    sched.submit(Request(uid=1, prompt=[2, 3, 4]))
+    res = sched.run()
+    assert len(res[1].tokens) == 4
+
+
+def test_streaming_callback_and_cancel():
+    """on_token streams every emitted token in order; cancel() drops queued
+    requests, aborts in-flight admissions, and retires active slots."""
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=6)
+    streamed = []
+    sched = RequestScheduler(engine, n_slots=2, cache_len=16, gen=gen,
+                             chunk_size=8,
+                             on_token=lambda uid, tok: streamed.append((uid, tok)))
+    sched.submit(Request(uid=0, prompt=[2, 3, 4]))
+    sched.submit(Request(uid=1, prompt=[5, 6, 7]))
+    sched.submit(Request(uid=2, prompt=[8, 9, 10]))
+
+    for _ in range(3):
+        sched.step()
+    assert sched.cancel(0)                    # active -> retired, slot freed
+    assert sched.cancel(2)                    # still queued -> dropped
+    assert not sched.cancel(99)               # unknown uid
+    res = sched.run()
+
+    assert res[0].cancelled and len(res[0].tokens) < 6
+    assert 2 not in res                       # never ran
+    assert not res[1].cancelled and len(res[1].tokens) == 6
+    assert [t for u, t in streamed if u == 1] == res[1].tokens
+    assert [t for u, t in streamed if u == 0] == res[0].tokens
+
+
+def test_cancel_from_on_token_callback():
+    """cancel() issued from inside the streaming callback (client disconnect
+    / first-response-wins) must not corrupt the retire loop — whether it
+    targets the emitting request or another resident one."""
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=6)
+    sched = RequestScheduler(engine, n_slots=2, cache_len=16, gen=gen,
+                             chunk_size=8)
+    sched.submit(Request(uid=0, prompt=[2, 3, 4]))
+    sched.submit(Request(uid=1, prompt=[5, 6, 7]))
+    while sched.stats["admitted"] < 2:     # both lanes resident first
+        sched.step()
+    counts: dict[int, int] = {}
+
+    def cb(uid, tok):
+        counts[uid] = counts.get(uid, 0) + 1
+        if counts[uid] == 2:
+            sched.cancel(uid)          # self-cancel mid-loop
+            sched.cancel(1 - uid)      # cancel the *other* resident lane
+    sched.on_token = cb
+    res = sched.run()
+    assert res[0].cancelled and res[1].cancelled
+    assert all(len(r.tokens) < gen.max_new_tokens for r in res.values())
+
+
+def test_cache_pool_paged_accounting():
+    from repro import configs
+    cfg = configs.get_config("retnet-1.3b").reduced()
+    pool = CachePool(cfg, classes=[(2, 8), (1, 32)])
+    assert pool.n_slots == 3 and pool.free_slots == 3
+    assert pool.cache_len == 32                       # compat: largest class
+    a = pool.acquire(6)                               # smallest fitting: 8
+    assert pool.slot_len(a) == 8
+    b = pool.acquire(20)                              # must take the 32 class
+    assert pool.slot_len(b) == 32
+    c = pool.acquire(6)
+    assert pool.slot_len(c) == 8
+    assert pool.acquire(6) is None and pool.free_slots == 0
+    assert not pool.fits(64) and pool.fits(32)
+    pool.release(b)
+    assert pool.acquire(2) == b                       # small classes full

@@ -102,7 +102,9 @@ def test_scheduler_slot_reuse_across_staggered_requests(engine):
     for uid, p in prompts.items():
         sched.submit(Request(uid=uid, prompt=p))
 
-    # first cycle: only 2 slots -> request 2 still queued
+    # admissions are chunk-granular (one prefill chunk per cycle): after two
+    # cycles both slots are claimed and request 2 is still queued
+    sched.step()
     sched.step()
     assert sched.pool.free_slots == 0 and len(sched._queue) == 1
     res = sched.run()
