@@ -1,8 +1,13 @@
-"""Serving-path benchmark: the chunked/bucketed admission path end to end.
+"""Serving-path benchmark: the chunked/bucketed admission path end to end,
+plus the speculative multi-token decode path.
 
 Drives the `RequestScheduler` (paged pool + chunk-granular admissions) over a
-mixed LISO/SILO-ish request stream on the reduced RetNet config and writes
-``BENCH_serving.json`` so successive PRs accumulate a perf trajectory:
+mixed LISO/SILO-ish request stream on the reduced RetNet config, then the
+speculative draft/verify loop on a long-output prompt whose greedy
+continuation saturates into repetition (the ngram drafter's best case — and
+the regime the paper's EMA argument cares about: every accepted draft is one
+fewer weight-stream read).  Each run *appends* to ``BENCH_serving.json`` so
+successive PRs accumulate a perf trajectory instead of overwriting it:
 
     tokens_per_s          sustained prompt+output tokens / wall second
     prefill_compiles      distinct prefill shapes dispatched (ladder size —
@@ -10,6 +15,9 @@ mixed LISO/SILO-ish request stream on the reduced RetNet config and writes
     decode_stall_steps    sequencer cycles that did admission work with no
                           resident lane emitting (ramp-up only, ideally)
     steps / prefill_chunks / emitted   raw sequencer counters
+    speculative.tokens_per_step        committed tokens per verify step
+                          (> 2.0 means > 1 accepted draft per weight read)
+    speculative.acceptance_rate        accepted / drafted
 
     PYTHONPATH=src python -m benchmarks.bench_serving [out.json]
 """
@@ -17,6 +25,7 @@ mixed LISO/SILO-ish request stream on the reduced RetNet config and writes
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 
@@ -24,15 +33,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
-                           Request, RequestScheduler)
+                           Request, RequestScheduler, SpeculativeConfig)
 
 N_REQUESTS = 12
 PROMPT_LENGTHS = [6, 11, 23, 37, 48, 75]     # mixed LISO/SILO-ish, 6 distinct
 MAX_NEW_TOKENS = 12
 CHUNK_SIZE = 16
 
+# Speculative leg: reduced starcoder2's greedy continuation of this seed
+# saturates into a repeating tail — the "long repetitive output" regime where
+# prompt-lookup drafting pays (code generation / extraction analogue).
+SPEC_ARCH = "starcoder2-15b"
+SPEC_SEED = 9
+SPEC_MAX_NEW = 96
+SPEC_K = 4
 
-def run(out_path: str = "BENCH_serving.json") -> dict:
+
+def run_scheduler() -> dict:
     engine = InferenceEngine.from_config("retnet-1.3b",
                                          EngineSpec(reduced=True))
     gen = GenerationConfig(max_new_tokens=MAX_NEW_TOKENS)
@@ -56,7 +73,7 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
 
     total_tokens = (sum(lengths)
                     + sum(len(r.tokens) for r in results.values()))
-    record = {
+    return {
         "bench": "serving",
         "arch": engine.cfg.name,
         "n_requests": N_REQUESTS,
@@ -70,8 +87,51 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
         "prefill_chunks": sched.stats["prefill_chunks"],
         "emitted": sched.stats["emitted"],
     }
+
+
+def run_speculative() -> dict:
+    engine = InferenceEngine.from_config(SPEC_ARCH, EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=SPEC_MAX_NEW)
+    prompt = jax.random.randint(jax.random.key(SPEC_SEED), (1, 10), 1,
+                                engine.cfg.vocab_size, dtype=jnp.int32)
+    spec_cfg = SpeculativeConfig(k=SPEC_K)
+    # Warm both programs first: the plain while_loop and the speculative
+    # loop compile separately, and on the reduced model trace+compile is a
+    # large fraction of the decode walls being compared.
+    engine.generate(prompt, gen)
+    engine.generate(prompt, gen, speculative=spec_cfg)
+    base = engine.generate(prompt, gen)
+    spec = engine.generate(prompt, gen, speculative=spec_cfg)
+    return {
+        "arch": engine.cfg.name,
+        "drafter": "ngram",
+        "k": SPEC_K,
+        "max_new_tokens": SPEC_MAX_NEW,
+        "verify_steps": spec.verify_steps,
+        "accepted_drafts": spec.accepted_drafts,
+        "tokens_per_step": round(spec.tokens_per_step, 3),
+        "acceptance_rate": round(spec.acceptance_rate, 3),
+        "baseline_decode_s": round(base.decode_s, 3),
+        "decode_s": round(spec.decode_s, 3),
+    }
+
+
+def run(out_path: str = "BENCH_serving.json") -> dict:
+    record = run_scheduler()
+    record["speculative"] = run_speculative()
+
+    # Append to the trajectory (older single-record files become entry 0).
+    history: list = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                prev = json.load(f)
+            history = prev if isinstance(prev, list) else [prev]
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append(record)
     with open(out_path, "w") as f:
-        json.dump(record, f, indent=2)
+        json.dump(history, f, indent=2)
         f.write("\n")
     print(json.dumps(record, indent=2))
     return record

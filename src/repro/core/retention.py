@@ -66,9 +66,15 @@ def retention_recurrent_step(q_t: jax.Array, k_t: jax.Array, v_t: jax.Array,
 
 def retention_recurrent(q: jax.Array, k: jax.Array, v: jax.Array,
                         gamma: jax.Array,
-                        state: jax.Array | None = None
-                        ) -> tuple[jax.Array, jax.Array]:
-    """Scan the recurrent form over a sequence (oracle for equivalence tests)."""
+                        state: jax.Array | None = None,
+                        return_states: bool = False):
+    """Scan the recurrent form over a sequence (oracle for equivalence tests).
+
+    ``return_states=True`` additionally returns the state *after every step*,
+    stacked on a new axis 1 (``[B, S, H, dk, dv]``) — the per-position state
+    snapshots speculative decode rolls back to when a drafted token is
+    rejected at an arbitrary depth inside the verified block.
+    """
     b, h, s, dk = q.shape
     dv = v.shape[-1]
     if state is None:
@@ -77,10 +83,13 @@ def retention_recurrent(q: jax.Array, k: jax.Array, v: jax.Array,
     def step(st, qkv):
         q_t, k_t, v_t = qkv
         y, st = retention_recurrent_step(q_t, k_t, v_t, st, gamma)
-        return st, y
+        return st, (y, st) if return_states else y
 
     qs, ks, vs = (jnp.moveaxis(t, 2, 0) for t in (q, k, v))
     state, ys = jax.lax.scan(step, state, (qs, ks, vs))
+    if return_states:
+        ys, states = ys
+        return jnp.moveaxis(ys, 0, 2), state, jnp.moveaxis(states, 0, 1)
     return jnp.moveaxis(ys, 0, 2), state
 
 

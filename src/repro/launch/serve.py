@@ -31,7 +31,8 @@ from repro.core import edge_model
 from repro.core.hsa import HSAEngine
 from repro.models.config import ModelConfig
 from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
-                           Request, RequestScheduler, SamplingParams)
+                           Request, RequestScheduler, SamplingParams,
+                           SpeculativeConfig)
 
 
 def generate(cfg: ModelConfig, params, engine: HSAEngine, prompts: jax.Array,
@@ -57,15 +58,18 @@ def _run_scheduler_demo(engine: InferenceEngine, args,
     import time
 
     cfg = engine.cfg
+    spec = (SpeculativeConfig(k=args.draft_k) if args.speculative else None)
     gen = GenerationConfig(
         max_new_tokens=n_out,
         sampling=SamplingParams(temperature=args.temperature,
-                                top_k=args.top_k, top_p=args.top_p))
+                                top_k=args.top_k, top_p=args.top_p),
+        speculative=spec)
     rng = np.random.default_rng(0)
     lengths = [max(2, int(n_in * f)) for f in
                rng.choice([0.25, 0.5, 1.0], size=args.requests)]
-    small = max(2, int(n_in * 0.5)) + n_out
-    large = n_in + n_out
+    extra = spec.k if spec else 0        # verify blocks overrun by k slots
+    small = max(2, int(n_in * 0.5)) + n_out + extra
+    large = n_in + n_out + extra
     classes = ([(args.slots, large)] if small >= large else
                [(max(1, args.slots // 2), small),
                 (max(1, args.slots - args.slots // 2), large)])
@@ -87,6 +91,17 @@ def _run_scheduler_demo(engine: InferenceEngine, args,
           f"{sched.stats['prefill_chunks']} prefill chunks, "
           f"{engine.prefill_compiles} prefill compiles, "
           f"{sched.stats['decode_stall_steps']} decode-stall steps")
+    if spec:
+        for uid in sorted(results):
+            r = results[uid]
+            print(f"[serve]   req {uid}: {len(r.tokens)} tokens in "
+                  f"{r.verify_steps} verify steps "
+                  f"({r.tokens_per_step:.2f} tokens/step, "
+                  f"{r.accepted_drafts} drafts accepted)")
+        vs = max(1, sched.stats["verify_steps"])
+        print(f"[serve] speculative: {sched.stats['accepted_drafts']} drafts "
+              f"accepted over {vs} verify steps "
+              f"({1 + sched.stats['accepted_drafts'] / vs:.2f} tokens/step)")
     print(f"[serve] tokens/s (paper convention, prompt+output): "
           f"{total / dt:.2f}")
 
@@ -114,6 +129,11 @@ def main() -> None:
                     help="scheduler mode: decode lanes in the cache pool")
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="scheduler mode: prefill chunk size (tokens/cycle)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="scheduler mode: multi-token speculative decode "
+                         "(ngram drafter) — prints per-request acceptance")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative mode: drafted tokens per verify step")
     args = ap.parse_args()
 
     scen = edge_model.LISO if args.scenario == "LISO" else edge_model.SILO
@@ -136,8 +156,14 @@ def main() -> None:
     gen = GenerationConfig(
         max_new_tokens=n_out,
         sampling=SamplingParams(temperature=args.temperature,
-                                top_k=args.top_k, top_p=args.top_p))
+                                top_k=args.top_k, top_p=args.top_p),
+        speculative=(SpeculativeConfig(k=args.draft_k)
+                     if args.speculative else None))
     res = engine.generate(prompts, gen, key=jax.random.key(2))
+    if args.speculative:
+        print(f"[serve] speculative: {res.verify_steps} verify steps, "
+              f"{res.accepted_drafts}/{res.drafted} drafts accepted "
+              f"({res.tokens_per_step:.2f} tokens/step)")
     total = n_in + n_out
     t_p, t_d = res.prefill_s, res.decode_s
     print(f"[serve] prefill {t_p*1e3:.0f} ms, decode {t_d*1e3:.0f} ms "

@@ -477,6 +477,28 @@ def gqa_chunk(
     return out, {"k": k_cache, "v": v_cache}
 
 
+def ring_rollback(prev: Params, new: Params, pos: jax.Array, c: int,
+                  n_accept: jax.Array, window: int) -> Params:
+    """Undo rejected speculative writes into a sliding-window ring cache.
+
+    A verify block wrote K/V for chunk positions ``pos .. pos+c-1`` into ring
+    slots ``(pos+i) % window``; each of those writes *evicted* the key that
+    was still serving window position ``pos+i-window``.  A position-pointer
+    rewind alone would therefore leave rejected drafts' keys aliased over
+    live history, so slots written by positions ``>= pos + n_accept`` are
+    restored from the pre-verify ring.  Works on ``{'k','v'}`` pytrees of any
+    leading shape (slot axis at -3), including layer-stacked pool slots.
+    """
+    slots = (pos + jnp.arange(c)) % window
+    restore = jnp.zeros((window,), bool).at[slots].set(
+        jnp.arange(c) >= n_accept)
+
+    def merge(old, cur):
+        return jnp.where(restore[:, None, None], old, cur)
+
+    return jax.tree.map(merge, prev, new)
+
+
 def gqa_make_cache(cfg: ModelConfig, batch: int, cache_len: int,
                    dtype=jnp.bfloat16) -> Params:
     kv, hd = cfg.n_kv_heads, cfg.head_dim_

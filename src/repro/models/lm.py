@@ -481,12 +481,40 @@ def _mtp_loss(params, x, batch, cfg, engine):
     return loss
 
 
+def mtp_decode_step(params: Params, h: jax.Array, tok: jax.Array,
+                    cfg: ModelConfig, engine: HSAEngine
+                    ) -> tuple[jax.Array, jax.Array]:
+    """One depth step of the deepseek-v3 MTP head at *decode* time.
+
+    The training loss `_mtp_loss` predicts token t+2 from ``[x_t ;
+    emb(tok_{t+1})]``; speculative decode chains the same head as a draft
+    model: ``h`` [B, D] is the pre-final-norm hidden at the last committed
+    position, ``tok`` [B] the (pending or previously drafted) next token.
+    Returns (draft logits [B, V], the head's hidden [B, D] to chain deeper).
+    Single-position causal attention needs no cache or RoPE state — a
+    position attends only to itself, and same-position rotations cancel in
+    q·k.  Draft quality is the only thing at stake: verification against the
+    target model makes any drafter sound.
+    """
+    emb = params["embed"][tok].astype(h.dtype)
+    h_in = jnp.concatenate([h, emb], axis=-1)[:, None, :]
+    hx = engine.linear(params["mtp"]["proj"], h_in, "decode")
+    hx, _, _ = _block_apply(params["mtp"]["block"], hx, cfg, engine, "decode",
+                            "moe" if cfg.family == "moe" else "dense")
+    hn = L.norm_full(params["final_norm"], hx, cfg)
+    logits = engine.linear(params["lm_head"], hn, "decode")[:, 0]
+    return logits, hx[:, 0]
+
+
 def forward_prefill(params: Params, batch: Params, cfg: ModelConfig,
-                    engine: HSAEngine, cache_len: int = 0
-                    ) -> tuple[jax.Array, Params]:
+                    engine: HSAEngine, cache_len: int = 0,
+                    return_hidden: bool = False):
     """Prompt processing (MMM phase).  Returns (last logits [B,V], cache).
 
     `cache_len` > prompt length reserves KV slots for subsequent decoding.
+    ``return_hidden`` appends the pre-final-norm hidden state of the last
+    real token ([B, D]) to the return — the MTP self-speculation drafter
+    chains its depth-1 head from it.
 
     Bucketed mode: if ``batch['prompt_len']`` (traced i32 scalar) is present,
     the token array is treated as a prompt of that length right-padded to the
@@ -526,29 +554,34 @@ def forward_prefill(params: Params, batch: Params, cfg: ModelConfig,
     caches["pos"] = pos
     if cfg.rope:
         caches["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base, pos=pos)
+    if return_hidden:
+        return logits, caches, last[:, 0]
     return logits, caches
 
 
 def _block_chunk(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
                  kind: str, cache: Params, pos: jax.Array, *, rope=None,
-                 full_attn=None) -> tuple[jax.Array, Params]:
+                 full_attn=None, collect: bool = False
+                 ) -> tuple[jax.Array, Params]:
     """One chunked-prefill block: [B, C] tokens continuing a warm cache.
 
     The MMM-shaped sibling of `_block_decode`: same per-layer cache-in /
     cache-out contract, but C tokens at once through the prefill dataflow.
+    ``collect`` (speculative verify) makes the recurrent sub-blocks snapshot
+    their state after every position (see `commit_verified_cache`).
     """
     sin, cos = rope if rope is not None else (None, None)
     xs, sig = L.norm_emit(p["ln1"], x, engine, cfg)
 
     if kind == "ssm":
         y, cache = S.mamba_apply(p["mamba"], xs, sig, engine, "prefill", cfg,
-                                 cache=cache)
+                                 cache=cache, collect_states=collect)
         return x + y, cache
 
     if kind == "retnet":
         y, cache = R.retention_apply(p["ret"], xs, sig, engine, "prefill",
                                      cfg, rope_sin=sin, rope_cos=cos,
-                                     cache=cache)
+                                     cache=cache, collect_states=collect)
         x = x + y
         xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
         return x + M.mlp_apply(p["mlp"], xs2, sig2, engine, "prefill"), cache
@@ -564,7 +597,8 @@ def _block_chunk(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
                                      cache["attn"], pos, window=window,
                                      rope_sin=sin, rope_cos=cos)
         m_out, m_cache = S.mamba_apply(p["mamba"], xs, sig, engine, "prefill",
-                                       cfg, cache=cache["mamba"])
+                                       cfg, cache=cache["mamba"],
+                                       collect_states=collect)
         y = 0.5 * (L.norm_full(p["attn_norm"], a_out, cfg)
                    + L.norm_full(p["mamba_norm"], m_out, cfg))
         x = x + y
@@ -583,7 +617,10 @@ def _block_chunk(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
 
     xs2, sig2 = L.norm_emit(p["ln2"], x, engine, cfg)
     if kind == "moe":
-        y, _ = M.moe_apply(p["moe"], xs2, sig2, engine, "prefill", cfg)
+        # collect = speculative verify: rejected draft tokens share this
+        # dispatch with real ones and must not evict them from expert slots.
+        y, _ = M.moe_apply(p["moe"], xs2, sig2, engine, "prefill", cfg,
+                           no_drop=collect)
     else:
         y = M.mlp_apply(p["mlp"], xs2, sig2, engine, "prefill")
     return x + y, new_cache
@@ -605,6 +642,17 @@ def forward_prefill_chunk(params: Params, batch: Params, cache: Params,
     ladder-sized chunks, so recurrent (RetNet/SSM) state needs no pad
     correction here.
     """
+    x, new_cache = _chunk_stack(params, batch, cache, cfg, engine)
+    h = L.norm_full(params["final_norm"], x[:, -1:], cfg)
+    logits = engine.linear(params["lm_head"], h, "prefill")[:, 0]
+    return logits, new_cache
+
+
+def _chunk_stack(params: Params, batch: Params, cache: Params,
+                 cfg: ModelConfig, engine: HSAEngine, collect: bool = False
+                 ) -> tuple[jax.Array, Params]:
+    """Shared chunk-continuation body: run [B, C] tokens against a warm cache
+    and return (pre-final-norm activations [B, C, D], advanced cache)."""
     if cfg.is_encdec:
         raise NotImplementedError("chunked prefill: encoder-decoder models "
                                   "prefill monolithically")
@@ -639,15 +687,97 @@ def forward_prefill_chunk(params: Params, batch: Params, cache: Params,
         def body(xc, per_layer, kind=kind):
             pl, cl, flag = per_layer
             y, c2 = _block_chunk(pl, xc, cfg, engine, kind, cl, pos0,
-                                 rope=rope, full_attn=flag)
+                                 rope=rope, full_attn=flag, collect=collect)
             return y.astype(xc.dtype), c2
 
         x, new_g = jax.lax.scan(body, x, (params[gname], cache[gname], flags))
         new_cache[gname] = new_g
+    return x, new_cache
 
-    h = L.norm_full(params["final_norm"], x[:, -1:], cfg)
-    logits = engine.linear(params["lm_head"], h, "prefill")[:, 0]
-    return logits, new_cache
+
+def forward_verify_chunk(params: Params, batch: Params, cache: Params,
+                         cfg: ModelConfig, engine: HSAEngine
+                         ) -> tuple[jax.Array, jax.Array, Params]:
+    """Speculative verify: score a [B, C] draft block in one MMM dispatch.
+
+    The chunked-prefill machinery already appends C tokens into a warm cache
+    at a traced offset; verify reuses it with two differences: (1) the LM
+    head runs at *every* chunk position — logits[:, i] is the target
+    distribution for the token after draft position i, which is what
+    accept/reject compares against — and (2) recurrent sub-blocks snapshot
+    their state per position (``s_all`` / ``h_all`` / ``conv_ext``) so
+    `commit_verified_cache` can roll the cache back to exactly the accepted
+    prefix.  Also returns the pre-final-norm hidden states [B, C, D] (the
+    MTP drafter chains from the hidden at the acceptance boundary).
+    """
+    x, new_cache = _chunk_stack(params, batch, cache, cfg, engine,
+                                collect=True)
+    h = L.norm_full(params["final_norm"], x, cfg)
+    logits = engine.linear(params["lm_head"], h, "prefill")
+    return logits, x, new_cache
+
+
+def commit_verified_cache(prev: Params, ver: Params, n_accept: jax.Array,
+                          c: int, cfg: ModelConfig) -> Params:
+    """Roll a verified cache back to its accepted prefix (speculative decode).
+
+    ``ver`` is `forward_verify_chunk`'s cache after appending a ``c``-token
+    draft block at ``prev['pos']``; ``n_accept`` (traced, 1..c) is how many
+    of those tokens the target model accepted.  Per cache kind:
+
+      * linear KV / MLA latents — keep the verified buffers and *rewind the
+        position pointer*: decode's validity mask hides the rejected rows and
+        the next block overwrites them.
+      * sliding-window rings — rejected writes aliased live history; restore
+        those slots from the pre-verify ring (`layers.ring_rollback`).
+      * RetNet retention state / Mamba h+conv — recurrent state can't be
+        un-stepped cheaply, so select the per-position snapshot the verify
+        pass collected at the acceptance boundary.
+
+    Leaves carry a leading stacked-layer axis (position axis = 2), matching
+    `forward_prefill_chunk`'s cache layout.
+    """
+    pos0 = prev["pos"]
+    new_pos = pos0 + jnp.asarray(n_accept, jnp.int32)
+    out: Params = {"pos": new_pos}
+    if cfg.rope:
+        out["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base,
+                                     pos=new_pos)
+
+    def at_boundary(x):                       # [L, B, C, ...] -> [L, B, ...]
+        return jax.lax.dynamic_index_in_dim(x, n_accept - 1, axis=2,
+                                            keepdims=False)
+
+    def mamba_commit(g):
+        cw = cfg.conv_width
+        conv = jax.lax.dynamic_slice_in_dim(g["conv_ext"], n_accept,
+                                            cw - 1, axis=2)
+        return {"h": at_boundary(g["h_all"]), "conv": conv}
+
+    def attn_commit(prev_g, ver_g):
+        if cfg.sliding_window:
+            return L.ring_rollback(prev_g, ver_g, pos0, c, n_accept,
+                                   cfg.sliding_window)
+        return ver_g                          # linear: pointer rewind only
+
+    for gname, count, kind in layer_groups(cfg):
+        if kind == "enc":
+            continue
+        if kind == "retnet":
+            out[gname] = {"s": at_boundary(ver[gname]["s_all"])}
+        elif kind == "ssm":
+            out[gname] = mamba_commit(ver[gname])
+        elif kind == "hybrid":
+            out[gname] = {
+                "attn": attn_commit(prev[gname]["attn"], ver[gname]["attn"]),
+                "mamba": mamba_commit(ver[gname]["mamba"]),
+            }
+        elif cfg.attn_type == "mla":
+            out[gname] = {"c_kv": ver[gname]["c_kv"],
+                          "k_rope": ver[gname]["k_rope"]}
+        else:
+            out[gname] = attn_commit(prev[gname], ver[gname])
+    return out
 
 
 def forward_decode(params: Params, tokens: jax.Array, cache: Params,

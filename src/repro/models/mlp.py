@@ -142,7 +142,7 @@ def _moe_core_local(x: jax.Array, idx, gates, wg, wi, wo, e: int, cap: int):
 
 
 def _moe_core_sharded(x, idx, gates, p_experts: Params, cfg: ModelConfig,
-                      mesh, policy) -> jax.Array:
+                      mesh, policy, no_drop: bool = False) -> jax.Array:
     """Expert-parallel MoE via shard_map (the production path).
 
     Tokens are row-sharded over the DP axes and *replicated* over the TP
@@ -166,7 +166,10 @@ def _moe_core_sharded(x, idx, gates, p_experts: Params, cfg: ModelConfig,
         else None
     n_tp = mesh.shape[tp] if tp else 1
     t_loc = t // n_dp
-    cap_loc = _round_cap(int(t_loc * k / e * cfg.capacity_factor) + 1)
+    # no_drop (speculative verify): a token appears at most once per expert,
+    # so cap = t_loc guarantees zero capacity drops.
+    cap_loc = (t_loc if no_drop
+               else _round_cap(int(t_loc * k / e * cfg.capacity_factor) + 1))
 
     from jax.sharding import PartitionSpec as P
 
@@ -248,9 +251,15 @@ def _moe_core_sharded(x, idx, gates, p_experts: Params, cfg: ModelConfig,
 
 
 def moe_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
-              phase: str, cfg: ModelConfig
+              phase: str, cfg: ModelConfig, no_drop: bool = False
               ) -> tuple[jax.Array, jax.Array]:
-    """Returns (output [B,S,D], router aux loss scalar)."""
+    """Returns (output [B,S,D], router aux loss scalar).
+
+    ``no_drop`` disables capacity dropping (cap = tokens): required on the
+    speculative *verify* path, where rejected draft tokens share the dispatch
+    with real tokens and must not evict them from expert slots — per-token
+    decode (cap >= top_k at t=1) never drops, so a verify pass that drops
+    would break greedy token-identity with the baseline loop."""
     from repro.runtime.sharding import current_ctx
 
     bsz, s, d = x_star.shape
@@ -278,9 +287,11 @@ def moe_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
 
     ctx = current_ctx()
     if ctx is not None:
-        y = _moe_core_sharded(x, idx, gates, p["experts"], cfg, *ctx)
+        y = _moe_core_sharded(x, idx, gates, p["experts"], cfg, *ctx,
+                              no_drop=no_drop)
     else:
-        cap = _round_cap(int(t * k / e * cfg.capacity_factor) + 1)
+        cap = (t if no_drop
+               else _round_cap(int(t * k / e * cfg.capacity_factor) + 1))
         wg = _expert_weight(p["experts"], "wg")
         wi = _expert_weight(p["experts"], "wi")
         wo = _expert_weight(p["experts"], "wo")

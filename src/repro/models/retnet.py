@@ -51,7 +51,8 @@ def _project(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
 def retention_apply(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
                     cfg: ModelConfig, *, rope_sin=None, rope_cos=None,
                     cache: Params | None = None,
-                    valid_len: jax.Array | None = None
+                    valid_len: jax.Array | None = None,
+                    collect_states: bool = False
                     ) -> tuple[jax.Array, Params]:
     """Full-sequence (chunkwise) retention.  Returns (out, final-state cache).
 
@@ -61,6 +62,12 @@ def retention_apply(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
     padded tail tokens out of the state: their k/v are zeroed and the final
     state is re-scaled by ``gamma^(valid_len - s)`` to undo the extra decay
     the padded steps applied (exact — see decay recurrence).
+
+    ``collect_states`` (speculative verify; small s) runs the *recurrent*
+    form instead and adds ``'s_all'`` — the state snapshot after every
+    position, ``[B, S, H, dk, dv]`` — to the cache so a rejected draft rolls
+    back to the exact state the accepted prefix produced (re-decaying the
+    final state would amplify fp error by ``gamma^-(s-a)``).
     """
     b, s, d = x_star.shape
     h = cfg.n_heads
@@ -75,8 +82,13 @@ def retention_apply(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
         v = v * keep
     qt, kt, vt = (jnp.moveaxis(t, 2, 1) for t in (q, k, v))   # [B,H,S,d*]
     state0 = cache["s"] if cache is not None else None
+    s_all = None
     chunk = min(128, s)
-    if s % chunk == 0:
+    if collect_states:
+        y, state, s_all = ret.retention_recurrent(qt, kt, vt, gamma,
+                                                  state=state0,
+                                                  return_states=True)
+    elif s % chunk == 0:
         y, state = ops.retention_chunkwise(qt, kt, vt, gamma, chunk=chunk,
                                            state=state0)
     elif state0 is None:
@@ -92,7 +104,10 @@ def retention_apply(p: Params, x_star, sig_inv, engine: HSAEngine, phase: str,
     y = jnp.moveaxis(y, 1, 2).reshape(b, s, 2 * d)
     y = y * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
     out = engine.linear(p["wo"], y, phase)
-    return out, {"s": state}
+    new_cache = {"s": state}
+    if s_all is not None:
+        new_cache["s_all"] = s_all
+    return out, new_cache
 
 
 def retention_decode(p: Params, x_star, sig_inv, engine: HSAEngine,

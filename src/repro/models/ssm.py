@@ -68,7 +68,8 @@ def _conv_causal(x: jax.Array, w: jax.Array, bias: jax.Array,
 def mamba_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
                 phase: str, cfg: ModelConfig,
                 cache: Params | None = None,
-                valid_len: jax.Array | None = None
+                valid_len: jax.Array | None = None,
+                collect_states: bool = False
                 ) -> tuple[jax.Array, Params]:
     """Full-sequence chunked selective scan.  Returns (y, final ssm cache).
 
@@ -78,6 +79,15 @@ def mamba_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
     tokens: their ``dt`` is zeroed (``exp(0·A) = 1`` keeps h, ``dt·B·x = 0``
     adds nothing) and the outgoing conv window is gathered at the last *real*
     token instead of the padded end.
+
+    ``collect_states`` (speculative verify; small s) adds per-position state
+    snapshots to the cache: ``'h_all'`` ``[B, S, di, n]`` (the recurrent h
+    after every token — the associative scan materializes it anyway) and
+    ``'conv_ext'`` ``[B, cw-1+S, di]`` (the carried-in conv window followed
+    by this chunk's pre-conv inputs, so the window as of any accepted length
+    ``a`` is the slice ``[:, a:a+cw-1]``).  Rollback then *restores* the
+    snapshot at the acceptance boundary instead of trying to invert the
+    selective scan.
     """
     bsz, s, _ = x_star.shape
     di, n = cfg.d_inner_, cfg.ssm_state
@@ -118,22 +128,34 @@ def mamba_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
     h0 = (cache["h"] if cache is not None
           else jnp.zeros((bsz, di, n), jnp.float32))
 
-    def chunk_step(h, blk):
-        return scan_block(h, *blk)
-
-    def to_chunks(t):
-        return t[:main].reshape(main // chunk, chunk, *t.shape[1:])
-
-    h_last, ys = jax.lax.scan(
-        chunk_step, h0,
-        (to_chunks(dt_s), to_chunks(xc_s), to_chunks(bc_s), to_chunks(cc_s)))
-    y_main = ys.reshape(main, bsz, di)
-    if rem:
-        h_last, y_rem = scan_block(h_last, dt_s[main:], xc_s[main:],
-                                   bc_s[main:], cc_s[main:])
-        y_seq = jnp.concatenate([y_main, y_rem], axis=0)
+    h_all = None
+    if collect_states:
+        # One un-chunked pass: s is a speculative verify block (<= k+1
+        # tokens), so the full [S, B, di, n] state tensor is tiny and *is*
+        # the product we're after.
+        da_s = jnp.exp(dt_s[..., None] * a)
+        db_s = (dt_s * xc_s)[..., None] * bc_s[..., None, :]
+        a_sc, b_sc = jax.lax.associative_scan(combine, (da_s, db_s), axis=0)
+        h_all = a_sc * h0[None] + b_sc                     # [S, B, di, n]
+        y_seq = jnp.einsum("sbdn,sbn->sbd", h_all, cc_s)
+        h_last = h_all[-1]
     else:
-        y_seq = y_main
+        def chunk_step(h, blk):
+            return scan_block(h, *blk)
+
+        def to_chunks(t):
+            return t[:main].reshape(main // chunk, chunk, *t.shape[1:])
+
+        h_last, ys = jax.lax.scan(
+            chunk_step, h0,
+            (to_chunks(dt_s), to_chunks(xc_s), to_chunks(bc_s), to_chunks(cc_s)))
+        y_main = ys.reshape(main, bsz, di)
+        if rem:
+            h_last, y_rem = scan_block(h_last, dt_s[main:], xc_s[main:],
+                                       bc_s[main:], cc_s[main:])
+            y_seq = jnp.concatenate([y_main, y_rem], axis=0)
+        else:
+            y_seq = y_main
     y = jnp.moveaxis(y_seq, 0, 1)
 
     y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
@@ -150,7 +172,11 @@ def mamba_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
     else:
         conv_state = jax.lax.dynamic_slice(
             pre_ext, (0, valid_len, 0), (bsz, cw - 1, di))
-    return out, {"h": h_last, "conv": conv_state}
+    new_cache = {"h": h_last, "conv": conv_state}
+    if collect_states:
+        new_cache["h_all"] = jnp.moveaxis(h_all, 0, 1)     # [B, S, di, n]
+        new_cache["conv_ext"] = pre_ext
+    return out, new_cache
 
 
 def mamba_decode(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,

@@ -4,12 +4,17 @@ One import gives the whole serving surface:
 
   * `InferenceEngine` / `EngineSpec` — init -> PTQ deploy -> HSA engine ->
     jit-cached prefill + a fused, jitted decode loop (engine.py).
-  * `GenerationConfig` / `SamplingParams` — greedy, temperature, top-k,
-    top-p, stop tokens, max_new_tokens (sampling.py).
+  * `GenerationConfig` / `SamplingParams` / `SpeculativeConfig` — greedy,
+    temperature, top-k, top-p, stop tokens, max_new_tokens, and the
+    multi-token speculative-decode switch (sampling.py).
+  * `NgramDrafter` / `MTPDrafter` / `Drafter` — the draft models behind
+    speculative decode: model-free prompt lookup and deepseek-v3 MTP
+    self-speculation, verified in one MMM dispatch with exact cache
+    rollback (speculative.py).
   * `RequestScheduler` / `CachePool` / `Request` — continuous batching over a
     *paged* slot pool (per-class cache lengths) with chunk-granular MMM
-    admissions overlapping MVM decode, like the paper's sequencer
-    (scheduler.py).
+    admissions overlapping MVM decode, like the paper's sequencer; priority
+    admission and per-slot speculative multi-token steps (scheduler.py).
   * `ChunkedPrefill` / `bucket_length` / `chunk_schedule` — the ladder-
     bucketed, chunked prompt-admission machinery (engine.py).
   * `ServeCell` / `build_serve` — typed sharding/shape plan for multi-chip
@@ -17,19 +22,24 @@ One import gives the whole serving surface:
 """
 
 from repro.serving.cell import (ServeCell, build_serve,
-                                prefill_chunk_step_fn, serving_engine)
+                                prefill_chunk_step_fn, serving_engine,
+                                verify_chunk_step_fn)
 from repro.serving.engine import (ChunkedPrefill, EngineSpec,
                                   GenerationResult, InferenceEngine,
                                   bucket_length, chunk_schedule)
 from repro.serving.sampling import (GREEDY, GenerationConfig, SamplingParams,
-                                    sample)
+                                    SpeculativeConfig, sample)
 from repro.serving.scheduler import (CachePool, FinishedRequest, Request,
                                      RequestScheduler)
+from repro.serving.speculative import (Drafter, MTPDrafter, NgramDrafter,
+                                       make_drafter, ngram_propose)
 
 __all__ = [
-    "CachePool", "ChunkedPrefill", "EngineSpec", "FinishedRequest",
-    "GenerationConfig", "GenerationResult", "GREEDY", "InferenceEngine",
-    "Request", "RequestScheduler", "SamplingParams", "ServeCell",
-    "bucket_length", "build_serve", "chunk_schedule",
-    "prefill_chunk_step_fn", "sample", "serving_engine",
+    "CachePool", "ChunkedPrefill", "Drafter", "EngineSpec",
+    "FinishedRequest", "GenerationConfig", "GenerationResult", "GREEDY",
+    "InferenceEngine", "MTPDrafter", "NgramDrafter", "Request",
+    "RequestScheduler", "SamplingParams", "ServeCell", "SpeculativeConfig",
+    "bucket_length", "build_serve", "chunk_schedule", "make_drafter",
+    "ngram_propose", "prefill_chunk_step_fn", "sample", "serving_engine",
+    "verify_chunk_step_fn",
 ]

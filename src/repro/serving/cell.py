@@ -45,6 +45,12 @@ class ServeCell:
     # shardings are the decode ones (the chunk path is cache-resident).
     prefill_chunk: Callable[[Params, Params, Params],
                             tuple[jax.Array, Params]] | None = None
+    # Speculative verify step (params, batch, cache) -> (all-position logits,
+    # hidden, cache+state-snapshots): scores a k+1-token draft block in one
+    # MMM dispatch (serving/speculative.py drives it in-process; this is the
+    # sharded twin for multi-chip lowering).
+    verify_chunk: Callable[[Params, Params, Params],
+                           tuple[jax.Array, jax.Array, Params]] | None = None
 
     def __getitem__(self, name: str):
         if name not in {f.name for f in dataclasses.fields(self)}:
@@ -89,6 +95,14 @@ def prefill_chunk_step_fn(cfg: ModelConfig, engine: HSAEngine):
     return prefill_chunk
 
 
+def verify_chunk_step_fn(cfg: ModelConfig, engine: HSAEngine):
+    """Speculative verify step: score a [B, k+1] draft block in one MMM
+    dispatch — per-position logits + hidden + rollback state snapshots."""
+    def verify_chunk(params, batch, cache):
+        return lm.forward_verify_chunk(params, batch, cache, cfg, engine)
+    return verify_chunk
+
+
 def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
                 policy=None, kernel_impl: str = "auto",
                 local_batch: int | None = None,
@@ -117,6 +131,8 @@ def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
         decode=decode_step_fn(cfg, engine),
         prefill_chunk=(None if cfg.is_encdec
                        else prefill_chunk_step_fn(cfg, engine)),
+        verify_chunk=(None if cfg.is_encdec or cfg.frontend
+                      else verify_chunk_step_fn(cfg, engine)),
         param_shapes=served_shapes,
         param_axes=served_axes,
         param_shardings=param_shardings,

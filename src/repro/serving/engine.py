@@ -34,7 +34,9 @@ from repro import configs
 from repro.core.hsa import HSAConfig, HSAEngine
 from repro.models import deploy, lm
 from repro.models.config import ModelConfig
-from repro.serving.sampling import GenerationConfig, sample
+from repro.serving import speculative as spec_mod
+from repro.serving.sampling import (GenerationConfig, SpeculativeConfig,
+                                    sample)
 
 Params = dict[str, Any]
 
@@ -115,6 +117,21 @@ class GenerationResult:
     lengths: jax.Array       # i32 [B] — emitted tokens incl. the stop token
     prefill_s: float         # wall-clock MMM phase (includes compile on miss)
     decode_s: float          # wall-clock MVM phase
+    # Speculative-path stats (zero on the plain fused loop):
+    verify_steps: int = 0    # verify dispatches (weight-stream reads)
+    accepted_drafts: int = 0  # drafted tokens the target model accepted
+    drafted: int = 0         # total drafted tokens (verify_steps * k)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Committed tokens per verify step (1.0 means no speculation win)."""
+        if not self.verify_steps:
+            return 1.0
+        return 1.0 + self.accepted_drafts / self.verify_steps
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted_drafts / self.drafted if self.drafted else 0.0
 
 
 class ChunkedPrefill:
@@ -191,10 +208,13 @@ class InferenceEngine:
         self.hsa = hsa or HSAEngine(spec.hsa_config())
 
         self._prefill = jax.jit(self._prefill_impl,
-                                static_argnames=("cache_len",))
+                                static_argnames=("cache_len",
+                                                 "return_hidden"))
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
         self._decode = jax.jit(self._decode_impl)
         self._loop = jax.jit(self._loop_impl, static_argnames=("gen",))
+        self._spec_loop = jax.jit(self._spec_loop_impl,
+                                  static_argnames=("gen",))
         # Distinct prefill-entry shape keys = XLA compiles triggered by this
         # engine's admission paths (the bench/tests watch the ladder keep
         # this ~log-sized as distinct prompt lengths grow).
@@ -233,9 +253,11 @@ class InferenceEngine:
 
     # -- jitted building blocks --------------------------------------------
 
-    def _prefill_impl(self, params, batch, cache_len: int):
+    def _prefill_impl(self, params, batch, cache_len: int,
+                      return_hidden: bool = False):
         return lm.forward_prefill(params, batch, self.cfg, self.hsa,
-                                  cache_len=cache_len)
+                                  cache_len=cache_len,
+                                  return_hidden=return_hidden)
 
     def _prefill_chunk_impl(self, params, batch, cache):
         return lm.forward_prefill_chunk(params, batch, cache, self.cfg,
@@ -288,6 +310,15 @@ class InferenceEngine:
         _, _, cache, _, out, lengths, _ = jax.lax.while_loop(cond, body, state)
         return out, lengths, cache
 
+    def _spec_loop_impl(self, params, logits0, hidden0, hist0, hist_len0,
+                        cache, key, gen: GenerationConfig):
+        """The speculative MVM phase: draft k / verify-in-one-MMM-dispatch /
+        commit-with-rollback, emitting 1..k+1 tokens per while_loop step
+        (serving/speculative.py)."""
+        return spec_mod.speculative_loop(params, logits0, hidden0, hist0,
+                                         hist_len0, cache, key, cfg=self.cfg,
+                                         hsa=self.hsa, gen=gen)
+
     # -- public API ---------------------------------------------------------
 
     @property
@@ -296,8 +327,8 @@ class InferenceEngine:
         return len(self.prefill_shape_keys)
 
     def prefill(self, tokens: jax.Array, *, cache_len: int | None = None,
-                extras: Params | None = None, bucket: bool = False
-                ) -> tuple[jax.Array, Params]:
+                extras: Params | None = None, bucket: bool = False,
+                return_hidden: bool = False):
         """MMM phase: prompts [B, S] -> (last-token logits [B, V], caches).
 
         ``bucket=True`` pads the prompt up to the power-of-two ladder and
@@ -323,7 +354,8 @@ class InferenceEngine:
         else:
             cache_len = cache_len or s
             self.prefill_shape_keys.add(("prefill", s, cache_len))
-        return self._prefill(self.params, batch, cache_len=cache_len)
+        return self._prefill(self.params, batch, cache_len=cache_len,
+                             return_hidden=return_hidden)
 
     def decode_step(self, tokens: jax.Array, cache: Params
                     ) -> tuple[jax.Array, Params]:
@@ -350,14 +382,24 @@ class InferenceEngine:
     def generate(self, prompts: jax.Array,
                  gen: GenerationConfig = GenerationConfig(), *,
                  key: jax.Array | None = None,
-                 extras: Params | None = None) -> GenerationResult:
+                 extras: Params | None = None,
+                 speculative: SpeculativeConfig | None = None
+                 ) -> GenerationResult:
         """Prefill + fused decode.  prompts [B, S_in] -> GenerationResult.
 
         ``key`` seeds stochastic sampling; it is ignored under greedy
         decoding and defaults to a fixed key so greedy calls never touch
-        host RNG state.
+        host RNG state.  ``speculative`` (or ``gen.speculative``) switches
+        the MVM phase to the multi-token draft/verify loop; greedy output is
+        token-identical to the plain loop, stochastic output is distributed
+        identically (see serving/speculative.py).
         """
         prompts = jnp.asarray(prompts, jnp.int32)
+        if speculative is not None:
+            gen = dataclasses.replace(gen, speculative=speculative)
+        if gen.speculative is not None:
+            return self._generate_speculative(prompts, gen, key=key,
+                                              extras=extras)
         cache_len = prompts.shape[1] + gen.max_new_tokens
         if key is None:
             key = jax.random.key(0)
@@ -375,6 +417,49 @@ class InferenceEngine:
         t_decode = time.perf_counter() - t0
         return GenerationResult(tokens=tokens, lengths=lengths,
                                 prefill_s=t_prefill, decode_s=t_decode)
+
+    def _generate_speculative(self, prompts: jax.Array, gen: GenerationConfig,
+                              *, key: jax.Array | None = None,
+                              extras: Params | None = None
+                              ) -> GenerationResult:
+        spec = gen.speculative
+        cfg = self.cfg
+        if cfg.is_encdec or cfg.frontend:
+            raise NotImplementedError("speculative decode targets text "
+                                      "decoder-only models")
+        if cfg.sliding_window and spec.k + 1 > cfg.sliding_window:
+            raise ValueError(
+                f"verify block k+1 ({spec.k + 1}) must fit the sliding "
+                f"window ({cfg.sliding_window}): a larger block would "
+                "overwrite its own ring writes")
+        b, s_in = prompts.shape
+        n = gen.max_new_tokens
+        # Verify may append up to k tokens past the last committed budget
+        # position before rolling back — reserve them.
+        cache_len = s_in + n + spec.k
+        if key is None:
+            key = jax.random.key(0)
+
+        t0 = time.perf_counter()
+        logits, cache, hidden = self.prefill(prompts, cache_len=cache_len,
+                                             extras=extras,
+                                             return_hidden=True)
+        jax.block_until_ready(logits)
+        t_prefill = time.perf_counter() - t0
+
+        hist0 = jnp.zeros((b, s_in + n + spec.k + 1),
+                          jnp.int32).at[:, :s_in].set(prompts)
+        t0 = time.perf_counter()
+        tokens, lengths, _, steps, accepted = self._spec_loop(
+            self.params, logits, hidden, hist0, jnp.int32(s_in), cache, key,
+            gen=gen)
+        jax.block_until_ready(tokens)
+        t_decode = time.perf_counter() - t0
+        steps, accepted = int(steps), int(accepted)
+        return GenerationResult(tokens=tokens, lengths=lengths,
+                                prefill_s=t_prefill, decode_s=t_decode,
+                                verify_steps=steps, accepted_drafts=accepted,
+                                drafted=steps * spec.k)
 
 
 def _is_master_tree(params: Params) -> bool:

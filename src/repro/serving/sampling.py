@@ -44,6 +44,35 @@ class SamplingParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class SpeculativeConfig:
+    """Multi-token speculative decode (serving/speculative.py).
+
+    Each decode step drafts ``k`` tokens, scores them in ONE chunk-shaped
+    verify dispatch (MMM dataflow — one weight-stream read amortized over
+    the whole block instead of one per token), and commits the accepted
+    prefix + one freshly sampled token.  Frozen/hashable so it rides through
+    ``jax.jit`` inside `GenerationConfig`.
+
+    ``drafter``: 'ngram' (model-free prompt-lookup — matches the trailing
+    ``ngram``-gram against the request's own history and proposes its
+    historical continuation) or 'mtp' (deepseek-v3 depth-1 multi-token-
+    prediction head chained ``k`` deep; requires ``cfg.mtp``).
+    """
+
+    k: int = 4                      # drafted tokens per verify step
+    drafter: str = "ngram"          # 'ngram' | 'mtp'
+    ngram: int = 2                  # lookup n-gram length (ngram drafter)
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.drafter not in ("ngram", "mtp"):
+            raise ValueError(f"unknown drafter {self.drafter!r}")
+        if self.ngram < 1:
+            raise ValueError(f"ngram must be >= 1, got {self.ngram}")
+
+
+@dataclasses.dataclass(frozen=True)
 class GenerationConfig:
     """Loop-level generation controls for `InferenceEngine.generate`."""
 
@@ -51,6 +80,7 @@ class GenerationConfig:
     sampling: SamplingParams = SamplingParams()
     stop_tokens: tuple[int, ...] = ()
     pad_token_id: int = 0
+    speculative: SpeculativeConfig | None = None
 
     def __post_init__(self):
         if self.max_new_tokens < 1:

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.serving import speculative as spec_mod
 from repro.serving.engine import InferenceEngine
 from repro.serving.sampling import GenerationConfig, sample
 
@@ -46,11 +47,16 @@ Params = dict[str, Any]
 
 @dataclasses.dataclass
 class Request:
-    """One generation request; `max_new_tokens` overrides the scheduler's."""
+    """One generation request; `max_new_tokens` overrides the scheduler's.
+
+    ``priority``: higher admits first; FIFO among equal priorities (0 is the
+    default class, negative deprioritizes).
+    """
 
     uid: int
     prompt: Any                          # int sequence [S_in]
     max_new_tokens: int | None = None
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -60,6 +66,15 @@ class FinishedRequest:
     tokens: list[int]                    # emitted tokens incl. any stop token
     slot: int                            # pool slot it ran in (for tests/stats)
     cancelled: bool = False              # retired early via `cancel(uid)`
+    # Speculative-decode stats (zero on the per-token path):
+    verify_steps: int = 0                # verify dispatches while resident
+    accepted_drafts: int = 0             # drafted tokens verification accepted
+
+    @property
+    def tokens_per_step(self) -> float:
+        if not self.verify_steps:
+            return 1.0
+        return 1.0 + self.accepted_drafts / self.verify_steps
 
 
 class CachePool:
@@ -206,7 +221,29 @@ class RequestScheduler:
         self._keys = {clen: jax.random.split(self.base_key, n)
                       for n, clen in self.pool.classes}
         self.stats = {"steps": 0, "emitted": 0, "prefill_chunks": 0,
-                      "admitted": 0, "cancelled": 0, "decode_stall_steps": 0}
+                      "admitted": 0, "cancelled": 0, "decode_stall_steps": 0,
+                      "verify_steps": 0, "accepted_drafts": 0}
+
+        # Speculative decode: each slot is its own batch lane, so acceptance
+        # depth is per-request (no lockstep min over the batch like the
+        # engine's fused loop) and each lane carries its own token history
+        # for the prompt-lookup drafter.
+        self._spec = gen.speculative
+        if self._spec is not None:
+            if self._spec.drafter != "ngram":
+                raise ValueError(
+                    "RequestScheduler speculative decode supports the "
+                    "model-free 'ngram' drafter (the MTP drafter needs "
+                    "per-lane hidden state; use engine.generate)")
+            w = engine.cfg.sliding_window
+            if w and self._spec.k + 1 > w:
+                raise ValueError(f"verify block k+1 ({self._spec.k + 1}) "
+                                 f"must fit the sliding window ({w})")
+            cap = self._spec.k + 1
+            self._hist = {clen: jnp.zeros((n, clen + cap), jnp.int32)
+                          for n, clen in self.pool.classes}
+            self._hist_len = {clen: jnp.zeros((n,), jnp.int32)
+                              for n, clen in self.pool.classes}
 
         # Same split-then-sample order as the engine's fused loop, so a
         # request's token stream is identical whether it runs here or through
@@ -222,10 +259,54 @@ class RequestScheduler:
 
         self._pool_step = jax.jit(pool_step)
 
+        # Speculative sibling: per slot, draft k from the lane's history,
+        # verify the k+1 block in ONE chunk-shaped dispatch against the
+        # lane's resident cache, commit the accepted prefix (exact rollback)
+        # and hand the Python side a variable-length token block.  Built on
+        # the same `NgramDrafter`/`verify_block` core as the engine's fused
+        # loop — each lane is a batch-1 instance, so the commit depth is the
+        # lane's own acceptance (no lockstep min over the batch).
+        def spec_pool_step(params, tokens, store, keys, hist, hlen):
+            spec = self._spec
+            k = spec.k
+            drafter = spec_mod.NgramDrafter(k=k, m=spec.ngram)
+
+            def one(tok, cache, key, h, hl):
+                pend = tok[:, 0]                              # [1]
+                dstate = {"hist": h[None, :], "len": hl}
+                drafts = drafter.draft(params, dstate, pend)
+                block = jnp.concatenate([pend[:, None], drafts], axis=1)
+                key, sub = jax.random.split(key)
+                cand, acc, hidden_all, ver = spec_mod.verify_block(
+                    params, block, cache, sub, cfg=engine.cfg,
+                    hsa=engine.hsa, gen=gen)
+                a = acc[0]
+                n_commit = a + 1
+                new_cache = lm.commit_verified_cache(cache, ver, n_commit,
+                                                     k + 1, engine.cfg)
+                nxt = jax.lax.dynamic_index_in_dim(cand[0], a,
+                                                   keepdims=False)
+                dstate = drafter.observe(dstate, block, n_commit, hidden_all,
+                                         nxt[None])
+                return (block[0], n_commit, nxt[None, None], new_cache, key,
+                        dstate["hist"][0], dstate["len"])
+            return jax.vmap(one)(tokens, store, keys, hist, hlen)
+
+        self._spec_pool_step = jax.jit(spec_pool_step)
+
     # -- queue management ---------------------------------------------------
 
-    def submit(self, request: Request) -> None:
-        self._queue.append(request)
+    def submit(self, request: Request, priority: int | None = None) -> None:
+        """Enqueue; ``priority`` (or ``request.priority``) orders admission:
+        higher priorities admit first, FIFO within a level.  A ``priority``
+        argument is submission-scoped: the caller's Request is not mutated
+        (the queue holds a copy carrying the effective priority)."""
+        if priority is not None:
+            request = dataclasses.replace(request, priority=priority)
+        i = len(self._queue)
+        while i > 0 and self._queue[i - 1].priority < request.priority:
+            i -= 1
+        self._queue.insert(i, request)
 
     @property
     def pending(self) -> int:
@@ -268,7 +349,11 @@ class RequestScheduler:
             # Decode writes cache positions s .. s+budget-1; past-capacity
             # positions would silently clamp onto the last linear-cache slot
             # (gqa_decode), so reject instead of corrupting attention.
+            # Speculative verify blocks write up to k tokens past the last
+            # budget position before rolling back — reserve them too.
             need = prompt.shape[1] + budget
+            if self._spec is not None:
+                need += self._spec.k
             if not self.pool.fits(need):
                 self._queue.pop(i)
                 raise ValueError(
@@ -310,8 +395,16 @@ class RequestScheduler:
         clen, local = self.pool.locate(slot)
         self._tokens[clen] = self._tokens[clen].at[local, 0, 0].set(tok)
         self._keys[clen] = self._keys[clen].at[local].set(key)
+        if self._spec is not None:
+            prompt = jnp.asarray(req.prompt, jnp.int32)
+            row = jnp.zeros((self._hist[clen].shape[1],),
+                            jnp.int32).at[:prompt.shape[0]].set(prompt)
+            self._hist[clen] = self._hist[clen].at[local].set(row)
+            self._hist_len[clen] = self._hist_len[clen].at[local].set(
+                prompt.shape[0])
         self._active[slot] = {"req": req, "emitted": [],
-                              "budget": adm["budget"]}
+                              "budget": adm["budget"],
+                              "verify_steps": 0, "accepted_drafts": 0}
         self._admitting = None
         self.stats["admitted"] += 1
 
@@ -319,7 +412,9 @@ class RequestScheduler:
         st = self._active.pop(slot)
         self._finished.append(FinishedRequest(
             uid=st["req"].uid, prompt_len=len(st["req"].prompt),
-            tokens=st["emitted"], slot=slot, cancelled=cancelled))
+            tokens=st["emitted"], slot=slot, cancelled=cancelled,
+            verify_steps=st["verify_steps"],
+            accepted_drafts=st["accepted_drafts"]))
         self.pool.release(slot)
 
     def step(self) -> int:
@@ -331,38 +426,64 @@ class RequestScheduler:
                 self.stats["decode_stall_steps"] += 1
             return 0
 
-        # Snapshot this step's token per active slot *before* decoding: like
-        # the fused loop, the token emitted at step i is the one sampled from
+        # Snapshot this step's token block per active slot *before* decoding:
+        # like the fused loop, the tokens emitted at step i were sampled from
         # the previous step's (or prefill's) logits.  One vmapped dispatch
-        # per resident class.
+        # per resident class.  The per-token path emits a 1-token block; the
+        # speculative path a 1..k+1-token block per slot.
         emitted = 0
         active_classes = sorted({self.pool.locate(s)[0] for s in self._active})
-        stepped: dict[int, np.ndarray] = {}
+        stepped: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         for clen in active_classes:
             toks = self._tokens[clen]
-            stepped[clen] = np.asarray(jax.device_get(toks[:, 0, 0]))
-            nxt, new_store, self._keys[clen] = self._pool_step(
-                self.engine.params, toks, self.pool.get_store(clen),
-                self._keys[clen])
+            if self._spec is not None:
+                (blocks, counts, nxt, new_store, self._keys[clen],
+                 self._hist[clen], self._hist_len[clen]) = \
+                    self._spec_pool_step(
+                        self.engine.params, toks, self.pool.get_store(clen),
+                        self._keys[clen], self._hist[clen],
+                        self._hist_len[clen])
+                stepped[clen] = (np.asarray(jax.device_get(blocks)),
+                                 np.asarray(jax.device_get(counts)))
+                self._tokens[clen] = nxt
+            else:
+                snap = np.asarray(jax.device_get(toks[:, 0, 0]))
+                stepped[clen] = (snap[:, None],
+                                 np.ones(snap.shape[0], np.int64))
+                nxt, new_store, self._keys[clen] = self._pool_step(
+                    self.engine.params, toks, self.pool.get_store(clen),
+                    self._keys[clen])
+                self._tokens[clen] = nxt[:, None, None]
             self.pool.set_store(clen, new_store)
-            self._tokens[clen] = nxt[:, None, None]
 
         for slot in list(self._active):
             st = self._active.get(slot)
             if st is None:           # retired by an on_token cancel mid-loop
                 continue
             clen, local = self.pool.locate(slot)
-            tok = int(stepped[clen][local])
-            st["emitted"].append(tok)
-            emitted += 1
-            if self.on_token is not None:
-                # The callback may cancel() any request — including this one,
-                # which retires the slot before the stop/budget check below.
-                self.on_token(st["req"].uid, tok)
-            if slot not in self._active:
-                continue
-            if tok in self.gen.stop_tokens or len(st["emitted"]) >= st["budget"]:
-                self._retire(slot)
+            blocks, counts = stepped[clen]
+            block = [int(t) for t in blocks[local][:int(counts[local])]]
+            if self._spec is not None:
+                st["verify_steps"] += 1
+                st["accepted_drafts"] += len(block) - 1
+                self.stats["verify_steps"] += 1
+                self.stats["accepted_drafts"] += len(block) - 1
+            for tok in block:
+                st["emitted"].append(tok)
+                emitted += 1
+                if self.on_token is not None:
+                    # The callback may cancel() any request — including this
+                    # one, which retires the slot before the stop/budget
+                    # check below.
+                    self.on_token(st["req"].uid, tok)
+                if slot not in self._active:
+                    break
+                if (tok in self.gen.stop_tokens
+                        or len(st["emitted"]) >= st["budget"]):
+                    # Committed-but-over-budget/post-stop block tokens are
+                    # dropped; the slot retires either way.
+                    self._retire(slot)
+                    break
         self.stats["emitted"] += emitted
         return emitted
 

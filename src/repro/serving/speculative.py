@@ -1,0 +1,304 @@
+"""Multi-token speculative decode — turning the MVM phase back into MMM work.
+
+The paper's premise is that decode is *memory-bound*: every generated token
+re-reads the full MXINT4 weight stream, so external memory accesses per
+token — not compute — cap tokens/s (Sec. II; SLIM, arXiv:2507.09201, makes
+the same edge-DRAM argument).  Speculative decoding amortizes one weight
+pass over a whole block: a cheap **drafter** proposes ``k`` tokens, the
+target model scores all of them in ONE chunk-shaped **verify** dispatch
+(`lm.forward_verify_chunk` — the MMM admission primitive from the chunked-
+prefill path, pointed at a decode-resident cache), and the accepted prefix
+plus one freshly sampled token are committed.  Each verify step emits
+``1..k+1`` tokens for a single weight-stream read.
+
+Drafters (both deterministic proposals):
+
+  * `NgramDrafter` — model-free prompt-lookup: match the trailing n-gram of
+    (history + pending token) against the request's own token history and
+    propose the historical continuation.  Free, and very effective on
+    repetitive output (code, extraction, self-looping generations).
+  * `MTPDrafter` — deepseek-v3 self-speculation: the depth-1 multi-token-
+    prediction head (trained by `lm._mtp_loss`, promoted here from a
+    training-only auxiliary to a decode-time draft model) chained ``k``
+    deep via `lm.mtp_decode_step`.
+
+Acceptance uses **token matching**, which for a *deterministic* drafter is
+exactly Leviathan-style rejection sampling: at every draft position the
+target distribution is sampled once; a draft is accepted while the target's
+sample equals it.  Accept probability is p(draft) (the same coin), and the
+first mismatching sample is already distributed as the rejection-sampling
+residual p(· | · != draft) — so the emitted stream is distributed *exactly*
+as the target model's own autoregressive sampling, and greedy decoding is
+token-identical to the non-speculative fused loop (test-enforced per cache
+architecture, including rollback).
+
+Rollback on rejection is cache-kind-aware (`lm.commit_verified_cache`):
+position-pointer rewind for linear KV / MLA latents, masked slot restore
+for sliding-window rings (`layers.ring_rollback`), and per-position state
+snapshots for RetNet retention / Mamba recurrent state.
+
+MoE caveat: verify dispatches run `moe_apply(no_drop=True)` so rejected
+draft tokens can't evict real tokens from expert capacity — at batch 1 the
+baseline per-token dispatch never drops either, so greedy identity holds
+exactly (test-enforced).  A *batched* MoE baseline can drop under skewed
+routing (cap scales with B) while the verify pass never does; that residual
+capacity-granularity gap is the same class of difference as chunked
+prefill's per-chunk A8 scales — distribution-level behavior, not an error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hsa import HSAEngine
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.serving.sampling import GenerationConfig, SpeculativeConfig, sample
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Drafters
+# ---------------------------------------------------------------------------
+
+
+def ngram_propose(hist: jax.Array, hist_len: jax.Array, tok: jax.Array,
+                  *, k: int, m: int) -> jax.Array:
+    """Prompt-lookup proposal: continue the most recent history match.
+
+    ``hist`` [B, H] is the request's token history (prompt + committed
+    output, zero-padded); ``hist_len`` (traced i32 scalar) its fill level;
+    ``tok`` [B] the pending token (sampled but not yet committed).  The
+    trailing ``m``-gram *ending in the pending token* is matched against
+    every committed window; the ``k`` tokens that followed the most recent
+    occurrence are the draft.  No match (or a match whose continuation runs
+    off the committed end) falls back to repeating the pending token — the
+    degenerate draft that wins exactly on constant/looping output.
+    """
+    b, cap = hist.shape
+    if cap < m + 1:
+        # History can never contain an m-gram plus a continuation token:
+        # degenerate to the repeat-pending-token fallback (shapes are
+        # static, so this is a trace-time branch, not a crash in jnp.max
+        # over an empty window set).
+        return jnp.broadcast_to(tok[:, None], (b, k)).astype(jnp.int32)
+    if m > 1:
+        sidx = hist_len - (m - 1) + jnp.arange(m - 1)
+        sfx = jnp.take(hist, jnp.clip(sidx, 0, cap - 1), axis=1)
+        sfx = jnp.where(sidx[None, :] >= 0, sfx, -1)     # -1 never matches
+        suffix = jnp.concatenate([sfx, tok[:, None]], axis=1)   # [B, m]
+    else:
+        suffix = tok[:, None]
+    starts = jnp.arange(cap - m + 1)
+    win = hist[:, starts[:, None] + jnp.arange(m)[None, :]]     # [B, J, m]
+    ok = jnp.all(win == suffix[:, None, :], axis=-1)
+    ok &= (starts + m <= hist_len)[None, :]      # window fully committed
+    j = jnp.max(jnp.where(ok, starts[None, :], -1), axis=1)     # [B]
+    didx = j[:, None] + m + jnp.arange(k)[None, :]              # [B, k]
+    drafts = jnp.take_along_axis(hist, jnp.clip(didx, 0, cap - 1), axis=1)
+    good = (j >= 0)[:, None] & (didx < hist_len)
+    return jnp.where(good, drafts, tok[:, None]).astype(jnp.int32)
+
+
+class Drafter(Protocol):
+    """Deterministic k-token proposer riding inside the jitted decode loop.
+
+    A drafter owns a pytree ``state`` carried through the speculative
+    ``lax.while_loop``; the loop calls ``draft`` before each verify dispatch
+    and ``observe`` after each commit.  Proposals never affect correctness —
+    verification preserves the target distribution for *any* draft — only
+    the acceptance rate.
+    """
+
+    k: int
+
+    def init(self, hist: jax.Array, hist_len: jax.Array,
+             hidden: jax.Array) -> Params: ...
+
+    def draft(self, params: Params, state: Params,
+              tok: jax.Array) -> jax.Array: ...
+
+    def observe(self, state: Params, block: jax.Array, n_commit: jax.Array,
+                hidden_all: jax.Array, next_tok: jax.Array) -> Params: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class NgramDrafter:
+    """Model-free prompt-lookup drafter (any architecture, zero extra FLOPs)."""
+
+    k: int
+    m: int = 2
+
+    def init(self, hist, hist_len, hidden):
+        return {"hist": hist, "len": jnp.asarray(hist_len, jnp.int32)}
+
+    def draft(self, params, state, tok):
+        return ngram_propose(state["hist"], state["len"], tok,
+                             k=self.k, m=self.m)
+
+    def observe(self, state, block, n_commit, hidden_all, next_tok):
+        hist, hlen = state["hist"], state["len"]
+        b, w = block.shape
+        old = jax.lax.dynamic_slice(hist, (0, hlen), (b, w))
+        keep = jnp.arange(w)[None, :] < n_commit
+        hist = jax.lax.dynamic_update_slice(
+            hist, jnp.where(keep, block, old), (0, hlen))
+        return {"hist": hist, "len": hlen + jnp.asarray(n_commit, jnp.int32)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MTPDrafter:
+    """deepseek-v3 self-speculation: chain the depth-1 MTP head k deep."""
+
+    k: int
+    cfg: ModelConfig
+    hsa: HSAEngine
+
+    def init(self, hist, hist_len, hidden):
+        return {"h": hidden}
+
+    def draft(self, params, state, tok):
+        h = state["h"]
+        drafts = []
+        for _ in range(self.k):
+            logits, h = lm.mtp_decode_step(params, h, tok, self.cfg, self.hsa)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            drafts.append(tok)
+        return jnp.stack(drafts, axis=1)
+
+    def observe(self, state, block, n_commit, hidden_all, next_tok):
+        # Chain the next draft from the hidden at the acceptance boundary:
+        # hidden_all[:, j] is x_t for t = the j-th verified position, and the
+        # pending `next_tok` plays tok_{t+1} in the head's [x_t ; emb] input.
+        h = jax.lax.dynamic_index_in_dim(hidden_all, n_commit - 1, axis=1,
+                                         keepdims=False)
+        return {"h": h}
+
+
+def make_drafter(spec: SpeculativeConfig, cfg: ModelConfig,
+                 hsa: HSAEngine) -> Drafter:
+    if spec.drafter == "mtp":
+        if not cfg.mtp:
+            raise ValueError(f"{cfg.name}: the 'mtp' drafter needs a config "
+                             "with an MTP head (cfg.mtp=True)")
+        return MTPDrafter(k=spec.k, cfg=cfg, hsa=hsa)
+    return NgramDrafter(k=spec.k, m=spec.ngram)
+
+
+# ---------------------------------------------------------------------------
+# The verify/accept core (shared by the engine loop and the scheduler lanes)
+# ---------------------------------------------------------------------------
+
+
+def verify_block(params: Params, block: jax.Array, cache: Params,
+                 key: jax.Array, *, cfg: ModelConfig, hsa: HSAEngine,
+                 gen: GenerationConfig):
+    """Score one [B, k+1] block (pending token + k drafts) and decide.
+
+    One MMM dispatch over the warm cache; the target distribution is sampled
+    at every position (token-matching == Leviathan rejection sampling for
+    deterministic drafters — see module docstring).  Returns
+    ``(cand [B, k+1], acc [B], hidden_all [B, k+1, D], ver_cache)``:
+    ``cand[:, j]`` is the target's sample after consuming block positions
+    0..j, and ``acc`` counts each row's leading draft matches (0..k).  The
+    caller picks a commit depth (lockstep min in the engine loop, per-lane in
+    the scheduler) and passes it to `lm.commit_verified_cache`.
+    """
+    k = block.shape[1] - 1
+    logits_all, hidden_all, ver = lm.forward_verify_chunk(
+        params, {"tokens": block}, cache, cfg, hsa)
+    cand = sample(logits_all, gen.sampling, key)             # [B, k+1]
+    match = (cand[:, :k] == block[:, 1:]).astype(jnp.int32)
+    acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)        # [B] in 0..k
+    return cand, acc, hidden_all, ver
+
+
+# ---------------------------------------------------------------------------
+# The fused speculative decode loop
+# ---------------------------------------------------------------------------
+
+
+def speculative_loop(params: Params, logits0: jax.Array, hidden0: jax.Array,
+                     hist0: jax.Array, hist_len0: jax.Array, cache: Params,
+                     key: jax.Array, *, cfg: ModelConfig, hsa: HSAEngine,
+                     gen: GenerationConfig):
+    """The speculative sibling of `InferenceEngine._loop_impl`.
+
+    One ``lax.while_loop`` whose body drafts ``k`` tokens, verifies the
+    ``k+1``-token block (pending token + drafts) in one MMM dispatch,
+    commits the accepted prefix with exact rollback, and emits a *variable*
+    ``1..k+1`` tokens per step.  Batch rows advance in lockstep: the commit
+    depth is the minimum acceptance over live rows (rows that accepted more
+    simply re-derive those tokens next step — free under greedy, and an
+    unbiased re-sample under stochastic decoding), which keeps the cache's
+    single position pointer valid for the whole batch.
+
+    Returns (tokens [B, max_new_tokens], lengths [B], cache, verify_steps,
+    accepted_drafts) — the last two feed tokens/step + acceptance-rate
+    reporting.
+    """
+    spec = gen.speculative
+    assert spec is not None
+    k = spec.k
+    b = logits0.shape[0]
+    n = gen.max_new_tokens
+    drafter = make_drafter(spec, cfg, hsa)
+    stop = (jnp.asarray(gen.stop_tokens, jnp.int32)
+            if gen.stop_tokens else None)
+
+    def hit_stop(blk):                           # [B, W] -> bool [B, W]
+        if stop is None:
+            return jnp.zeros(blk.shape, bool)
+        return jnp.any(blk[..., None] == stop, axis=-1)
+
+    key, sub = jax.random.split(key)
+    tok0 = sample(logits0, gen.sampling, sub)
+    out0 = jnp.full((b, n + k), gen.pad_token_id, jnp.int32)
+    dstate0 = drafter.init(hist0, hist_len0, hidden0)
+    state = (jnp.int32(0), tok0, cache, jnp.zeros((b,), bool), out0,
+             jnp.zeros((b,), jnp.int32), key, dstate0,
+             jnp.int32(0), jnp.int32(0))
+
+    def cond(st):
+        i, _, _, done, _, _, _, _, _, _ = st
+        return (i < n) & ~jnp.all(done)
+
+    def body(st):
+        i, tok, cache, done, out, lengths, key, dstate, steps, accepted = st
+        drafts = drafter.draft(params, dstate, tok)            # [B, k]
+        block = jnp.concatenate([tok[:, None], drafts], axis=1)
+        key, sub = jax.random.split(key)
+        cand, acc, hidden_all, ver = verify_block(
+            params, block, cache, sub, cfg=cfg, hsa=hsa, gen=gen)
+        # Lockstep commit depth; done rows don't constrain it.
+        a = jnp.min(jnp.where(done, k, acc))                   # scalar
+        n_commit = a + 1
+        cache = lm.commit_verified_cache(cache, ver, n_commit, k + 1, cfg)
+
+        # Emit [tok, d_1..d_a]; stop tokens inside the block pad its tail.
+        cols = jnp.arange(k + 1)
+        valid = (cols[None, :] <= a) & (i + cols[None, :] < n)
+        sh = hit_stop(block) & valid
+        cum = jnp.cumsum(sh.astype(jnp.int32), axis=1)
+        emit = valid & ~done[:, None] & ((cum - sh) == 0)
+        old = jax.lax.dynamic_slice(out, (0, i), (b, k + 1))
+        out = jax.lax.dynamic_update_slice(
+            out, jnp.where(emit, block, old), (0, i))
+        lengths = lengths + jnp.sum(emit, axis=1)
+        done = done | jnp.any(sh & emit, axis=1)
+
+        # The sample at the acceptance boundary is the next pending token:
+        # the corrected draw on a mismatch, the bonus token when all match.
+        tok = jax.lax.dynamic_index_in_dim(cand, a, axis=1, keepdims=False)
+        dstate = drafter.observe(dstate, block, n_commit, hidden_all, tok)
+        return (i + n_commit, tok, cache, done, out, lengths, key, dstate,
+                steps + 1, accepted + a)
+
+    (_, _, cache, _, out, lengths, _, _, steps, accepted) = \
+        jax.lax.while_loop(cond, body, state)
+    return out[:, :n], lengths, cache, steps, accepted

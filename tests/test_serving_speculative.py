@@ -1,0 +1,308 @@
+"""Speculative multi-token decode: greedy token-identity vs. the plain fused
+loop per drafter and per cache architecture (incl. rollback after rejected
+drafts), the ngram drafter, cache rollback helpers, scheduler integration
+with per-slot acceptance stats, and priority admission."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm
+from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
+                           Request, RequestScheduler, SpeculativeConfig,
+                           ngram_propose)
+
+# One arch per serving cache kind the rollback machinery distinguishes:
+# linear KV (dense GQA), sliding-window ring + mamba recurrent (hybrid),
+# O(1) retention state, pure mamba, and MLA latents + MoE (deepseek).
+ARCHS = ["qwen3-8b", "hymba-1.5b", "retnet-1.3b", "falcon-mamba-7b",
+         "deepseek-v3-671b"]
+
+_ENGINES: dict = {}
+
+
+def fp_engine(arch):
+    """fp-path engines: identity checks isolate the speculative machinery
+    from the W8A8-verify vs MXINT4-decode format gap (a quantization
+    granularity difference, not an error — see docs/serving.md)."""
+    if arch not in _ENGINES:
+        _ENGINES[arch] = InferenceEngine.from_config(
+            arch, EngineSpec(reduced=True, quantize=False))
+    return _ENGINES[arch]
+
+
+def _prompt(engine, s, seed=1):
+    return jax.random.randint(jax.random.key(seed), (1, s), 1,
+                              engine.cfg.vocab_size, dtype=jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_greedy_token_identity_ngram(arch):
+    """Greedy speculative decode == the plain fused loop for every cache
+    architecture.  The repetitive prompt makes the ngram drafter propose
+    real candidates, so both full rejections (rollback of all k) and
+    partial/total acceptance paths are crossed."""
+    engine = fp_engine(arch)
+    gen = GenerationConfig(max_new_tokens=14)
+    for seed, prompt in [(0, jnp.asarray([[5, 9, 13] * 4], jnp.int32)),
+                         (1, _prompt(engine, 7))]:
+        base = engine.generate(prompt, gen)
+        spec = engine.generate(prompt, gen,
+                               speculative=SpeculativeConfig(k=3))
+        np.testing.assert_array_equal(np.asarray(base.tokens),
+                                      np.asarray(spec.tokens), err_msg=arch)
+        assert spec.lengths.tolist() == base.lengths.tolist()
+        assert spec.verify_steps >= 1
+        assert spec.drafted == spec.verify_steps * 3
+
+
+def test_greedy_token_identity_mtp_drafter():
+    """The deepseek-v3 MTP head, promoted from a training-only loss to a
+    decode-time draft model, must preserve greedy identity (MLA latent
+    cache + MoE no-drop verify dispatch)."""
+    engine = fp_engine("deepseek-v3-671b")
+    gen = GenerationConfig(max_new_tokens=10)
+    prompts = _prompt(engine, 6)
+    base = engine.generate(prompts, gen)
+    spec = engine.generate(
+        prompts, gen, speculative=SpeculativeConfig(k=2, drafter="mtp"))
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(spec.tokens))
+
+
+def test_mtp_drafter_requires_mtp_head():
+    engine = fp_engine("retnet-1.3b")
+    with pytest.raises(ValueError, match="MTP head"):
+        engine.generate(_prompt(engine, 4),
+                        GenerationConfig(max_new_tokens=2),
+                        speculative=SpeculativeConfig(k=2, drafter="mtp"))
+
+
+def test_verify_block_must_fit_sliding_window():
+    engine = fp_engine("hymba-1.5b")
+    w = engine.cfg.sliding_window
+    with pytest.raises(ValueError, match="sliding window"):
+        engine.generate(_prompt(engine, 4),
+                        GenerationConfig(max_new_tokens=2),
+                        speculative=SpeculativeConfig(k=w))
+
+
+def test_greedy_identity_batched_lockstep():
+    """Batch rows with different acceptance depths advance in lockstep
+    (commit = min over rows) and still reproduce the baseline exactly."""
+    engine = fp_engine("qwen3-8b")
+    gen = GenerationConfig(max_new_tokens=12)
+    prompts = jnp.concatenate(
+        [jnp.asarray([[5, 9, 13] * 3], jnp.int32), _prompt(engine, 9)], 0)
+    base = engine.generate(prompts, gen)
+    spec = engine.generate(prompts, gen, speculative=SpeculativeConfig(k=3))
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(spec.tokens))
+
+
+def test_stop_token_inside_accepted_block():
+    """A stop token that lands mid-block must end the row there: later block
+    tokens become pad and lengths include the stop token."""
+    engine = fp_engine("retnet-1.3b")
+    prompts = _prompt(engine, 5)
+    free = engine.generate(prompts, GenerationConfig(max_new_tokens=8))
+    stop = int(free.tokens[0, 3])
+    gen = GenerationConfig(max_new_tokens=8, stop_tokens=(stop,),
+                           pad_token_id=-1)
+    base = engine.generate(prompts, gen)
+    spec = engine.generate(prompts, gen, speculative=SpeculativeConfig(k=4))
+    np.testing.assert_array_equal(np.asarray(base.tokens),
+                                  np.asarray(spec.tokens))
+    assert spec.lengths.tolist() == base.lengths.tolist()
+
+
+def test_stochastic_speculative_is_deterministic_under_fixed_key():
+    """Stochastic speculative sampling: per-key reproducible, and a
+    different key gives a different stream (the distribution-preservation
+    argument itself is analytic — docs/serving.md)."""
+    engine = fp_engine("retnet-1.3b")
+    from repro.serving import SamplingParams
+    gen = GenerationConfig(
+        max_new_tokens=10,
+        sampling=SamplingParams(temperature=0.9, top_k=50),
+        speculative=SpeculativeConfig(k=3))
+    prompts = _prompt(engine, 5)
+    a = engine.generate(prompts, gen, key=jax.random.key(7)).tokens
+    b = engine.generate(prompts, gen, key=jax.random.key(7)).tokens
+    c = engine.generate(prompts, gen, key=jax.random.key(8)).tokens
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not bool(jnp.all(a == c))
+
+
+def test_ngram_propose_lookup_and_fallback():
+    """The lookup n-gram is (last m-1 committed tokens, pending token)."""
+    hist = jnp.asarray([[5, 1, 8, 5, 1, 9, 5, 0]], jnp.int32)
+    # Pending 1 after committed ...9,5 -> suffix (5, 1), which occurred at
+    # positions 0 and 3; the MOST RECENT match (j=3) wins, so the draft
+    # continues with hist[5:] = [9, 5].
+    drafts = ngram_propose(hist, jnp.int32(7), jnp.asarray([1], jnp.int32),
+                           k=2, m=2)
+    assert drafts.tolist() == [[9, 5]]
+    # Continuation running past committed history falls back to repeating
+    # the pending token: committed [5,1,8,5,1], pending 8 -> suffix (1, 8)
+    # matches at j=1, continues [5, 1, <past history -> 8>].
+    drafts = ngram_propose(hist, jnp.int32(5), jnp.asarray([8], jnp.int32),
+                           k=3, m=2)
+    assert drafts.tolist() == [[5, 1, 8]]
+    # No match at all -> repeat the pending token.
+    drafts = ngram_propose(hist, jnp.int32(7), jnp.asarray([7], jnp.int32),
+                           k=3, m=2)
+    assert drafts.tolist() == [[7, 7, 7]]
+    # n-gram longer than the whole history buffer degrades to the fallback
+    # instead of crashing on an empty window set.
+    drafts = ngram_propose(hist[:, :4], jnp.int32(4),
+                           jnp.asarray([3], jnp.int32), k=2, m=8)
+    assert drafts.tolist() == [[3, 3]]
+
+
+@pytest.mark.parametrize("arch", ["hymba-1.5b", "retnet-1.3b"])
+def test_rollback_restores_exact_state_after_full_rejection(arch):
+    """Force a fully-rejected verify block and check the committed cache
+    continues exactly like a plain decode step: ring slots must be restored
+    (rejected writes alias live history) and recurrent state rolled back to
+    the boundary snapshot."""
+    engine = fp_engine(arch)
+    prompts = _prompt(engine, 9, seed=3)
+    k = 3
+    logits, cache = engine.prefill(prompts, cache_len=9 + 8 + k)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # Reference: one plain decode step.
+    ref_logits, _ = engine.decode_step(tok[:, None], cache)
+
+    # Drafts chosen to mismatch the model's own argmax -> acceptance 0.
+    bad = (tok[:, None] + jnp.asarray([[1, 2, 3]])) % engine.cfg.vocab_size
+    block = jnp.concatenate([tok[:, None], bad], axis=1)
+    la, _, ver = lm.forward_verify_chunk(engine.params, {"tokens": block},
+                                         cache, engine.cfg, engine.hsa)
+    assert int(jnp.argmax(la[0, 0])) != int(bad[0, 0])  # really rejected
+    committed = lm.commit_verified_cache(cache, ver, jnp.int32(1), k + 1,
+                                         engine.cfg)
+    assert int(committed["pos"]) == int(cache["pos"]) + 1
+
+    # The next decode step from the rolled-back cache must match the
+    # baseline continuation bit-for-bit in greedy terms.
+    nxt = jnp.argmax(la[:, 0], -1).astype(jnp.int32)
+    out_spec, _ = lm.forward_decode(engine.params, nxt[:, None], committed,
+                                    engine.cfg, engine.hsa)
+    ref2_logits, _ = engine.decode_step(
+        jnp.argmax(ref_logits, -1).astype(jnp.int32)[:, None],
+        engine.decode_step(tok[:, None], cache)[1])
+    assert int(jnp.argmax(out_spec[0])) == int(jnp.argmax(ref2_logits[0]))
+
+
+def test_scheduler_speculative_matches_engine_generate():
+    """The per-slot speculative lanes reproduce dedicated engine.generate
+    runs and report per-request acceptance stats."""
+    engine = fp_engine("retnet-1.3b")
+    spec = SpeculativeConfig(k=3)
+    gen = GenerationConfig(max_new_tokens=6, speculative=spec)
+    sched = RequestScheduler(engine, n_slots=2, cache_len=32, gen=gen,
+                             chunk_size=8)
+    prompts = {0: [2, 3, 4, 2, 3, 4, 2, 3], 1: [5, 6, 7, 8], 2: [9, 10, 11]}
+    streamed = []
+    sched.on_token = lambda uid, tok: streamed.append((uid, tok))
+    for uid, p in prompts.items():
+        sched.submit(Request(uid=uid, prompt=p))
+    res = sched.run()
+
+    plain = GenerationConfig(max_new_tokens=6)
+    for uid, p in prompts.items():
+        want = engine.generate(jnp.asarray([p], jnp.int32),
+                               plain).tokens[0].tolist()
+        assert res[uid].tokens == want, (uid, res[uid].tokens, want)
+        assert res[uid].verify_steps >= 1
+        assert [t for u, t in streamed if u == uid] == want
+    assert sched.stats["verify_steps"] == sum(
+        r.verify_steps for r in res.values())
+
+
+def test_scheduler_speculative_budget_truncates_block():
+    """A verify block that overruns the token budget is truncated at the
+    budget; the slot retires cleanly."""
+    engine = fp_engine("retnet-1.3b")
+    gen = GenerationConfig(max_new_tokens=5,
+                           speculative=SpeculativeConfig(k=4))
+    sched = RequestScheduler(engine, n_slots=1, cache_len=32, gen=gen,
+                             chunk_size=8)
+    sched.submit(Request(uid=0, prompt=[2, 3, 4]))
+    res = sched.run()
+    want = engine.generate(jnp.asarray([[2, 3, 4]], jnp.int32),
+                           GenerationConfig(max_new_tokens=5))
+    assert res[0].tokens == want.tokens[0].tolist()
+    assert len(res[0].tokens) == 5
+
+
+def test_scheduler_speculative_reserves_verify_overrun():
+    """Admission must account for the k-slot verify overrun: a request that
+    fits without speculation but not with it is rejected loudly."""
+    engine = fp_engine("retnet-1.3b")
+    gen = GenerationConfig(max_new_tokens=4,
+                           speculative=SpeculativeConfig(k=4))
+    sched = RequestScheduler(engine, n_slots=1, cache_len=16, gen=gen,
+                             chunk_size=8)
+    sched.submit(Request(uid=0, prompt=list(range(2, 12))))   # 10+4+4 > 16
+    with pytest.raises(ValueError, match="exceeds every pool class"):
+        sched.run()
+
+
+def test_scheduler_rejects_mtp_drafter():
+    engine = fp_engine("retnet-1.3b")
+    gen = GenerationConfig(
+        max_new_tokens=4,
+        speculative=SpeculativeConfig(k=2, drafter="mtp"))
+    with pytest.raises(ValueError, match="ngram"):
+        RequestScheduler(engine, n_slots=1, cache_len=32, gen=gen)
+
+
+def test_priority_admission_order():
+    """submit(priority=...): higher priorities admit first, FIFO within a
+    level, and priority requests overtake a deep default-priority queue."""
+    engine = fp_engine("retnet-1.3b")
+    gen = GenerationConfig(max_new_tokens=3)
+    sched = RequestScheduler(engine, n_slots=1, cache_len=16, gen=gen,
+                             chunk_size=8)
+    order = []
+    sched.on_token = lambda uid, tok: (order.append(uid)
+                                       if uid not in order else None)
+    sched.submit(Request(uid=0, prompt=[2, 3]))
+    sched.submit(Request(uid=1, prompt=[2, 3]))
+    sched.submit(Request(uid=2, prompt=[2, 3], priority=5))
+    sched.submit(Request(uid=3, prompt=[2, 3]), priority=5)
+    sched.submit(Request(uid=4, prompt=[2, 3]), priority=-1)
+    assert [r.uid for r in sched._queue] == [2, 3, 0, 1, 4]
+    sched.run()
+    assert order == [2, 3, 0, 1, 4]
+
+
+def test_submit_priority_argument_does_not_mutate_request():
+    """submit(priority=...) is submission-scoped: the caller's Request keeps
+    its constructed priority."""
+    engine = fp_engine("retnet-1.3b")
+    sched = RequestScheduler(engine, n_slots=1, cache_len=16,
+                             gen=GenerationConfig(max_new_tokens=2))
+    req = Request(uid=0, prompt=[2, 3])
+    sched.submit(req, priority=5)
+    assert req.priority == 0
+    assert sched._queue[0].priority == 5 and sched._queue[0].uid == 0
+
+
+def test_speculative_stats_on_repetitive_output():
+    """The bench's acceptance property: on a looping greedy continuation the
+    ngram drafter gets > 1 accepted token per verify step (the > 2x
+    weight-read amortization the EMA argument wants)."""
+    engine = InferenceEngine.from_config("starcoder2-15b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=96)
+    prompt = jax.random.randint(jax.random.key(9), (1, 10), 1,
+                                engine.cfg.vocab_size, dtype=jnp.int32)
+    spec = engine.generate(prompt, gen, speculative=SpeculativeConfig(k=4))
+    assert spec.verify_steps < 96                  # fewer reads than tokens
+    assert spec.accepted_drafts > spec.verify_steps   # > 1 accepted/step
+    assert spec.tokens_per_step > 2.0
