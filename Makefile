@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast install serve-demo bench-serving
+.PHONY: test test-fast install serve-demo smoke-host-spill bench-serving
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -18,6 +18,13 @@ install:
 serve-demo:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
 		--arch retnet-1.3b --reduced --scenario SILO --scale 0.1 --batch 2
+
+# Tiny oversubscribed scheduler run: 5 requests over 2 device lanes with the
+# host-memory spill tier + priority preemption (CI smoke leg).
+smoke-host-spill:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
+		--arch retnet-1.3b --reduced --scenario SILO --scale 0.02 \
+		--requests 5 --slots 2 --chunk-size 8 --host-spill
 
 # Serving-path perf trajectory: writes BENCH_serving.json (tokens/s, prefill
 # compiles triggered, decode-stall steps) for PR-over-PR comparison.

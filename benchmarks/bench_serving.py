@@ -18,6 +18,11 @@ successive PRs accumulate a perf trajectory instead of overwriting it:
     speculative.tokens_per_step        committed tokens per verify step
                           (> 2.0 means > 1 accepted draft per weight read)
     speculative.acceptance_rate        accepted / drafted
+    oversubscribed.*      the host-spill leg: requests > device lanes, a
+                          high-priority burst preempting residents to host
+                          memory (spills/fetches/bytes moved each way)
+    git_rev               short rev of the checkout, so trajectory points
+                          correlate with PRs
 
     PYTHONPATH=src python -m benchmarks.bench_serving [out.json]
 """
@@ -26,6 +31,7 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -39,6 +45,26 @@ N_REQUESTS = 12
 PROMPT_LENGTHS = [6, 11, 23, 37, 48, 75]     # mixed LISO/SILO-ish, 6 distinct
 MAX_NEW_TOKENS = 12
 CHUNK_SIZE = 16
+
+# Oversubscribed leg: more requests than device lanes, resolved by the host
+# spill tier + priority preemption instead of hard queueing.
+OVER_REQUESTS = 6
+OVER_LANES = 2
+OVER_PROMPT = 16
+OVER_NEW_TOKENS = 8
+
+
+def git_rev() -> str:
+    """Short git rev of the working tree, so trajectory points correlate
+    with PRs; 'unknown' outside a checkout (e.g. an sdist install)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 # Speculative leg: reduced starcoder2's greedy continuation of this seed
 # saturates into a repeating tail — the "long repetitive output" regime where
@@ -116,9 +142,58 @@ def run_speculative() -> dict:
     }
 
 
+def run_oversubscribed() -> dict:
+    """Host-spill leg: OVER_REQUESTS requests over OVER_LANES device lanes.
+
+    The default-priority residents fill the pool, then a high-priority burst
+    preempts them into the host tier; everything drains (spilled lanes
+    resume bit-exactly), and the record carries the spill/fetch/bytes-moved
+    stats so the trajectory shows the host tier's traffic.
+    """
+    engine = InferenceEngine.from_config("retnet-1.3b",
+                                         EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=OVER_NEW_TOKENS)
+    clen = OVER_PROMPT + OVER_NEW_TOKENS
+    sched = RequestScheduler(engine, classes=[(OVER_LANES, clen)], gen=gen,
+                             chunk_size=CHUNK_SIZE, host_spill=True,
+                             key=jax.random.key(0))
+
+    def submit(uid, priority=0):
+        prompt = jax.random.randint(
+            jax.random.fold_in(jax.random.key(3), uid), (OVER_PROMPT,), 1,
+            engine.cfg.vocab_size, dtype=jnp.int32)
+        sched.submit(Request(uid=uid, prompt=prompt.tolist()),
+                     priority=priority)
+
+    t0 = time.perf_counter()
+    for uid in range(OVER_LANES):
+        submit(uid)
+    while sched.stats["admitted"] < OVER_LANES:    # residents in place
+        sched.step()
+    for uid in range(OVER_LANES, OVER_REQUESTS):   # the high-priority burst
+        submit(uid, priority=1)
+    results = sched.run()
+    wall_s = time.perf_counter() - t0
+
+    assert len(results) == OVER_REQUESTS
+    assert all(len(r.tokens) == OVER_NEW_TOKENS for r in results.values())
+    total = OVER_REQUESTS * (OVER_PROMPT + OVER_NEW_TOKENS)
+    return {
+        "n_requests": OVER_REQUESTS,
+        "device_lanes": OVER_LANES,
+        "wall_s": round(wall_s, 3),
+        "tokens_per_s": round(total / wall_s, 2),
+        "preempted": sched.stats["preempted"],
+        "resumed": sched.stats["resumed"],
+        **sched.pool.spill_stats,
+    }
+
+
 def run(out_path: str = "BENCH_serving.json") -> dict:
     record = run_scheduler()
+    record["git_rev"] = git_rev()
     record["speculative"] = run_speculative()
+    record["oversubscribed"] = run_oversubscribed()
 
     # Append to the trajectory (older single-record files become entry 0).
     history: list = []

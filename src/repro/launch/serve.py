@@ -17,6 +17,9 @@ Continuous-batching mode (`--requests N`) drives the `RequestScheduler`
 instead: N staggered requests with mixed prompt lengths are chunk-admitted
 (`--chunk-size`) into a paged cache pool while resident lanes decode — the
 paper's sequencer behavior, with per-step stats printed at the end.
+`--host-spill` (optionally with `--oversubscribe R`) turns on the pool's
+host-memory tier: a late high-priority burst preempts resident lanes to CPU
+DRAM, and they resume bit-exactly once device lanes free up.
 """
 
 from __future__ import annotations
@@ -70,20 +73,41 @@ def _run_scheduler_demo(engine: InferenceEngine, args,
     extra = spec.k if spec else 0        # verify blocks overrun by k slots
     small = max(2, int(n_in * 0.5)) + n_out + extra
     large = n_in + n_out + extra
-    classes = ([(args.slots, large)] if small >= large else
-               [(max(1, args.slots // 2), small),
-                (max(1, args.slots - args.slots // 2), large)])
+    # A 1-slot pool cannot split into two classes (the max(1, ...) guards
+    # would silently double it, under-delivering --oversubscribe's ratio).
+    classes = ([(args.slots, large)] if small >= large or args.slots < 2 else
+               [(args.slots // 2, small),
+                (args.slots - args.slots // 2, large)])
     sched = RequestScheduler(engine, classes=classes, gen=gen,
                              chunk_size=args.chunk_size,
+                             host_spill=args.host_spill,
                              key=jax.random.key(2))
-    for uid, s in enumerate(lengths):
+
+    def make_request(uid: int, s: int) -> Request:
         prompt = jax.random.randint(jax.random.fold_in(jax.random.key(1), uid),
                                     (s,), 1, cfg.vocab_size, dtype=jnp.int32)
-        sched.submit(Request(uid=uid, prompt=prompt.tolist()))
+        return Request(uid=uid, prompt=prompt.tolist())
+
     print(f"[serve] scheduler: {args.requests} requests, prompt lengths "
           f"{sorted(set(lengths))}, classes {classes}, "
-          f"chunk={args.chunk_size}")
+          f"chunk={args.chunk_size}"
+          + (", host-spill preemption on" if args.host_spill else ""))
     t0 = time.perf_counter()
+    if args.host_spill and args.requests > 1:
+        # Oversubscription demo: fill the pool with default-priority
+        # residents first, then a late high-priority burst that preempts
+        # them into the host tier (they resume once lanes free up).
+        n_burst = max(1, args.requests // 3)
+        for uid, s in list(enumerate(lengths))[:-n_burst]:
+            sched.submit(make_request(uid, s))
+        while sched.stats["admitted"] < min(args.requests - n_burst,
+                                            sched.pool.n_slots):
+            sched.step()
+        for uid, s in list(enumerate(lengths))[-n_burst:]:
+            sched.submit(make_request(uid, s), priority=1)
+    else:
+        for uid, s in enumerate(lengths):
+            sched.submit(make_request(uid, s))
     results = sched.run()
     dt = time.perf_counter() - t0
     total = sum(len(r.tokens) for r in results.values()) + sum(lengths)
@@ -91,6 +115,12 @@ def _run_scheduler_demo(engine: InferenceEngine, args,
           f"{sched.stats['prefill_chunks']} prefill chunks, "
           f"{engine.prefill_compiles} prefill compiles, "
           f"{sched.stats['decode_stall_steps']} decode-stall steps")
+    if args.host_spill:
+        ss = sched.pool.spill_stats
+        print(f"[serve] host tier: {sched.stats['preempted']} preempted / "
+              f"{sched.stats['resumed']} resumed, {ss['spills']} spills "
+              f"({ss['bytes_to_host']} B to host), {ss['fetches']} fetches "
+              f"({ss['bytes_to_device']} B back)")
     if spec:
         for uid in sorted(results):
             r = results[uid]
@@ -134,7 +164,21 @@ def main() -> None:
                          "(ngram drafter) — prints per-request acceptance")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="speculative mode: drafted tokens per verify step")
+    ap.add_argument("--host-spill", action="store_true",
+                    help="scheduler mode: enable the host-memory spill tier "
+                         "— a late high-priority burst preempts resident "
+                         "lanes to CPU DRAM instead of queueing behind them")
+    ap.add_argument("--oversubscribe", type=float, default=0.0,
+                    help="scheduler mode: request-to-lane ratio — shrinks "
+                         "the pool to ~requests/R device lanes so demand "
+                         "exceeds device capacity (pair with --host-spill)")
     args = ap.parse_args()
+    if args.oversubscribe:
+        if args.oversubscribe <= 1.0:
+            ap.error("--oversubscribe is a request-to-lane ratio and must "
+                     "be > 1.0 (omit it to disable)")
+        if args.requests > 0:
+            args.slots = max(1, round(args.requests / args.oversubscribe))
 
     scen = edge_model.LISO if args.scenario == "LISO" else edge_model.SILO
     n_in = max(2, int(scen.tokens_in * args.scale))

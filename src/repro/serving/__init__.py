@@ -14,7 +14,10 @@ One import gives the whole serving surface:
   * `RequestScheduler` / `CachePool` / `Request` — continuous batching over a
     *paged* slot pool (per-class cache lengths) with chunk-granular MMM
     admissions overlapping MVM decode, like the paper's sequencer; priority
-    admission and per-slot speculative multi-token steps (scheduler.py).
+    admission, per-slot speculative multi-token steps, and a host-memory
+    spill tier (`host_spill=True`) that preempts low-priority lanes to CPU
+    DRAM and resumes them bit-exactly — oversubscription instead of a hard
+    admission failure (scheduler.py).
   * `ChunkedPrefill` / `bucket_length` / `chunk_schedule` — the ladder-
     bucketed, chunked prompt-admission machinery (engine.py).
   * `ServeCell` / `build_serve` — typed sharding/shape plan for multi-chip
@@ -26,7 +29,8 @@ from repro.serving.cell import (ServeCell, build_serve,
                                 verify_chunk_step_fn)
 from repro.serving.engine import (ChunkedPrefill, EngineSpec,
                                   GenerationResult, InferenceEngine,
-                                  bucket_length, chunk_schedule)
+                                  bucket_length, chunk_schedule,
+                                  pytree_nbytes)
 from repro.serving.sampling import (GREEDY, GenerationConfig, SamplingParams,
                                     SpeculativeConfig, sample)
 from repro.serving.scheduler import (CachePool, FinishedRequest, Request,
@@ -40,6 +44,6 @@ __all__ = [
     "InferenceEngine", "MTPDrafter", "NgramDrafter", "Request",
     "RequestScheduler", "SamplingParams", "ServeCell", "SpeculativeConfig",
     "bucket_length", "build_serve", "chunk_schedule", "make_drafter",
-    "ngram_propose", "prefill_chunk_step_fn", "sample", "serving_engine",
-    "verify_chunk_step_fn",
+    "ngram_propose", "prefill_chunk_step_fn", "pytree_nbytes", "sample",
+    "serving_engine", "verify_chunk_step_fn",
 ]

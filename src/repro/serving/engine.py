@@ -24,6 +24,7 @@ Usage::
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any
 
@@ -44,6 +45,13 @@ Params = dict[str, Any]
 # to powers of two >= this floor, so K distinct lengths hit at most
 # ~log2(max_len) cached prefill compiles instead of K.
 MIN_BUCKET = 8
+
+
+def pytree_nbytes(tree) -> int:
+    """Total bytes across a pytree's array (or ShapeDtypeStruct) leaves —
+    the currency of the host-spill tier's transfer accounting."""
+    return sum(math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(tree))
 
 
 def bucket_length(s: int, min_bucket: int = MIN_BUCKET) -> int:
@@ -213,6 +221,8 @@ class InferenceEngine:
         self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
         self._decode = jax.jit(self._decode_impl)
         self._loop = jax.jit(self._loop_impl, static_argnames=("gen",))
+        self._resume_loop = jax.jit(self._resume_loop_impl,
+                                    static_argnames=("gen",))
         self._spec_loop = jax.jit(self._spec_loop_impl,
                                   static_argnames=("gen",))
         # Distinct prefill-entry shape keys = XLA compiles triggered by this
@@ -276,7 +286,19 @@ class InferenceEngine:
         sequence has hit a stop token — the remaining slots stay
         ``pad_token_id``.
         """
-        b = logits0.shape[0]
+        key, sub = jax.random.split(key)
+        tok0 = sample(logits0, gen.sampling, sub)
+        return self._loop_from(params, tok0, cache, key, gen)
+
+    def _resume_loop_impl(self, params, tok0, cache, key,
+                          gen: GenerationConfig):
+        """The fused loop entered from a *pending token* instead of prefill
+        logits — the host-spill warm-resume path: the first emitted token is
+        ``tok0`` itself (it was sampled before the preemption)."""
+        return self._loop_from(params, tok0, cache, key, gen)
+
+    def _loop_from(self, params, tok0, cache, key, gen: GenerationConfig):
+        b = tok0.shape[0]
         n = gen.max_new_tokens
         stop = (jnp.asarray(gen.stop_tokens, jnp.int32)
                 if gen.stop_tokens else None)
@@ -286,8 +308,6 @@ class InferenceEngine:
                 return jnp.zeros((b,), bool)
             return jnp.any(tok[:, None] == stop[None, :], axis=-1)
 
-        key, sub = jax.random.split(key)
-        tok0 = sample(logits0, gen.sampling, sub)
         out0 = jnp.full((b, n), gen.pad_token_id, jnp.int32)
         state = (jnp.int32(0), tok0, cache, jnp.zeros((b,), bool), out0,
                  jnp.zeros((b,), jnp.int32), key)
@@ -417,6 +437,42 @@ class InferenceEngine:
         t_decode = time.perf_counter() - t0
         return GenerationResult(tokens=tokens, lengths=lengths,
                                 prefill_s=t_prefill, decode_s=t_decode)
+
+    def resume_generate(self, pending: jax.Array, cache: Params,
+                        gen: GenerationConfig = GenerationConfig(), *,
+                        key: jax.Array | None = None) -> GenerationResult:
+        """Warm-resume the fused MVM loop from a pending token and a warm
+        decode cache — the host-spill re-entry point: no prefill runs and no
+        prefill shape compiles; the cache (e.g. fetched back from the pool's
+        host tier) is consumed as-is.
+
+        ``pending`` is i32 ``[B]`` (or a scalar for a batch-1 cache): the
+        token sampled *before* the interruption, which becomes the first
+        emitted token — matching the fused loop's convention that step i's
+        token was sampled from step i-1's logits.  Under greedy decoding the
+        resumed stream is token-identical to the uninterrupted run.
+        """
+        pending = jnp.asarray(pending, jnp.int32)
+        if pending.ndim == 0:
+            pending = pending[None]
+        if key is None:
+            key = jax.random.key(0)
+        t0 = time.perf_counter()
+        tokens, lengths, _ = self._resume_loop(self.params, pending, cache,
+                                               key, gen=gen)
+        jax.block_until_ready(tokens)
+        return GenerationResult(tokens=tokens, lengths=lengths,
+                                prefill_s=0.0,
+                                decode_s=time.perf_counter() - t0)
+
+    def cache_nbytes(self, cache_len: int, *, batch: int = 1,
+                     dtype=jnp.float32) -> int:
+        """Bytes of one decode cache at ``cache_len`` — what a `CachePool`
+        lane holds on device and what one host spill moves.  Computed from
+        abstract shapes (`jax.eval_shape`): no cache is materialized."""
+        tree = jax.eval_shape(
+            lambda: lm.make_decode_cache(self.cfg, batch, cache_len, dtype))
+        return pytree_nbytes(tree)
 
     def _generate_speculative(self, prompts: jax.Array, gen: GenerationConfig,
                               *, key: jax.Array | None = None,

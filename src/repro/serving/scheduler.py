@@ -18,6 +18,14 @@ paper's LISO scenario (750-token prompts entering a busy decode batch):
     ``prompt + budget``, so short requests stop paying the longest request's
     KV memory.
 
+  * **Host spill tier + preemption** — the capacity rung below the device
+    slots is host DRAM (the paper's edge memory hierarchy): `CachePool.spill`
+    parks a slot's whole cache pytree in host memory bit-exactly and frees
+    its lane, `fetch` restores it, and with ``host_spill=True`` the
+    scheduler preempts the lowest-priority resident lane when a
+    higher-priority request finds the pool full — oversubscription instead
+    of a hard admission failure.
+
 `CachePool` builds each class over `lm.make_decode_cache`: every per-model
 cache kind (KV rings, MXINT4-decoded MoE experts, Mamba conv state, RetNet's
 O(1) retention state, the online RoPE angle memory, the per-sequence
@@ -39,7 +47,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.serving import speculative as spec_mod
-from repro.serving.engine import InferenceEngine
+from repro.serving.engine import InferenceEngine, pytree_nbytes
 from repro.serving.sampling import GenerationConfig, sample
 
 Params = dict[str, Any]
@@ -64,7 +72,8 @@ class FinishedRequest:
     uid: int
     prompt_len: int
     tokens: list[int]                    # emitted tokens incl. any stop token
-    slot: int                            # pool slot it ran in (for tests/stats)
+    slot: int                            # pool slot handle (for tests/stats)
+    cache_len: int = 0                   # cache class the request ran in
     cancelled: bool = False              # retired early via `cancel(uid)`
     # Speculative-decode stats (zero on the per-token path):
     verify_steps: int = 0                # verify dispatches while resident
@@ -78,16 +87,25 @@ class FinishedRequest:
 
 
 class CachePool:
-    """Paged decode-cache pool: slot *classes* of increasing cache length.
+    """Paged decode-cache pool: slot *classes* of increasing cache length,
+    backed by a device tier and a host (CPU DRAM) spill tier.
 
     ``classes`` is a sequence of ``(n_slots, cache_len)`` pairs; the legacy
     single-class form ``CachePool(cfg, n_slots, cache_len)`` still works.
-    Slots carry global ids (stable across classes); each class is one stacked
-    pytree (``[n_slots_c, ...]`` per leaf) over `lm.make_decode_cache`
-    (batch=1 per slot), so the slot layout is identical for every cache kind
-    the model zoo produces.  Prefilled batch-1 caches are scattered into a
-    slot with ``write``; the scheduler advances each class in one vmapped
-    decode step.
+    Each class is one stacked pytree (``[n_slots_c, ...]`` per leaf) over
+    `lm.make_decode_cache` (batch=1 per slot), so the slot layout is
+    identical for every cache kind the model zoo produces.  Prefilled
+    batch-1 caches are scattered into a slot with ``write``; the scheduler
+    advances each class in one vmapped decode step.
+
+    Slot ids are *request-lifetime handles*, not lane indices: ``acquire``
+    binds a fresh id to a free device lane in the smallest fitting class,
+    ``spill`` moves the slot's whole cache pytree to host memory via
+    ``jax.device_put`` (freeing the lane for another request — this is what
+    lets the pool oversubscribe its device capacity), and ``fetch`` binds a
+    free lane again and restores the cache bit-exactly.  ``residency(slot)``
+    reports which tier a slot lives in; ``spill_stats`` counts spills,
+    fetches, and bytes moved each way.
     """
 
     def __init__(self, cfg, n_slots: int | None = None,
@@ -109,46 +127,154 @@ class CachePool:
         self.dtype = dtype
 
         self._stores: dict[int, Params] = {}
-        self._locate: dict[int, tuple[int, int]] = {}   # gid -> (clen, local)
-        self._free: dict[int, list[int]] = {}           # clen -> free gids
-        gid = 0
+        self._lanes: dict[int, list[int]] = {}          # clen -> free lanes
+        self._lane_of: dict[int, tuple[int, int]] = {}  # sid -> (clen, lane)
+        self._class_of: dict[int, int] = {}             # live sid -> clen
+        self._host: dict[int, Params] = {}              # sid -> host cache
+        # Slot ids are issued monotonically, so "released" vs "unknown" is a
+        # generation check against _next_sid — no per-request tombstones, so
+        # a long-running pool's bookkeeping stays O(live slots).
+        self._next_sid = 0
         for n, clen in self.classes:
             template = lm.make_decode_cache(cfg, 1, clen, dtype)
             self._stores[clen] = jax.tree.map(
                 lambda x: jnp.zeros((n,) + x.shape, x.dtype), template)
-            self._free[clen] = []
-            for local in range(n):
-                self._locate[gid] = (clen, local)
-                self._free[clen].append(gid)
-                gid += 1
+            self._lanes[clen] = list(range(n))
+        # The spill target: host CPU memory.  On a CPU-only backend the
+        # "transfer" is a same-device copy — the tiering logic (and its
+        # bit-exactness) is identical, which is what the tests pin.
+        try:
+            self._host_device = jax.devices("cpu")[0]
+        except RuntimeError:                             # no cpu backend
+            self._host_device = None
+        leaf = jax.tree.leaves(self._stores[self.classes[0][1]])[0]
+        self._device = getattr(leaf, "device", None) or next(iter(
+            leaf.devices()))
+        self.spill_stats = {"spills": 0, "fetches": 0,
+                            "bytes_to_host": 0, "bytes_to_device": 0}
 
     # -- slot accounting ----------------------------------------------------
 
     @property
     def free_slots(self) -> int:
-        return sum(len(f) for f in self._free.values())
+        """Free *device lanes* (host-resident slots hold no lane)."""
+        return sum(len(f) for f in self._lanes.values())
+
+    @property
+    def host_resident(self) -> int:
+        return len(self._host)
+
+    @property
+    def host_bytes(self) -> int:
+        """Bytes currently parked in the host tier."""
+        return sum(pytree_nbytes(c) for c in self._host.values())
+
+    @property
+    def device_bytes(self) -> int:
+        """Bytes of the device-resident stacked stores (all lanes)."""
+        return sum(pytree_nbytes(s) for s in self._stores.values())
 
     def fits(self, min_len: int) -> bool:
         """Could a request needing `min_len` cache positions EVER be placed?"""
         return min_len <= self.cache_len
 
     def slot_len(self, slot: int) -> int:
-        return self._locate[slot][0]
+        """Cache length of a *live* (device- or host-resident) slot."""
+        if slot not in self._class_of:
+            raise ValueError(f"slot {slot} is not live ({self._where(slot)})")
+        return self._class_of[slot]
 
     def locate(self, slot: int) -> tuple[int, int]:
-        return self._locate[slot]
+        """(cache_len, lane) of a *device-resident* slot."""
+        if slot not in self._lane_of:
+            raise ValueError(f"slot {slot} is not device-resident "
+                             f"({self._where(slot)})")
+        return self._lane_of[slot]
+
+    def residency(self, slot: int) -> str:
+        """'device' | 'host' for a live slot; ValueError otherwise."""
+        where = self._where(slot)
+        if where not in ("device", "host"):
+            raise ValueError(f"slot {slot} is not resident ({where})")
+        return where
+
+    def _where(self, slot: int) -> str:
+        if slot in self._lane_of:
+            return "device"
+        if slot in self._host:
+            return "host"
+        return "released" if 0 <= slot < self._next_sid else "unknown"
+
+    def has_free_lane(self, clen: int) -> bool:
+        return bool(self._lanes[clen])
 
     def acquire(self, min_len: int = 0) -> int | None:
-        """Smallest-class-first placement: the cheapest slot that fits."""
+        """Smallest-class-first placement: the cheapest free lane that fits.
+
+        Returns a fresh slot id bound to that lane, or None when every
+        fitting class is busy (the caller may then `spill` a victim).
+        """
         for _, clen in self.classes:
-            if clen >= min_len and self._free[clen]:
-                return self._free[clen].pop(0)
+            if clen >= min_len and self._lanes[clen]:
+                lane = self._lanes[clen].pop(0)
+                sid = self._next_sid
+                self._next_sid += 1
+                self._lane_of[sid] = (clen, lane)
+                self._class_of[sid] = clen
+                return sid
         return None
 
     def release(self, slot: int) -> None:
-        clen, _ = self._locate[slot]
-        assert slot not in self._free[clen], slot
-        self._free[clen].append(slot)
+        """Retire a slot: free its device lane, or drop its host copy."""
+        if slot in self._lane_of:
+            clen, lane = self._lane_of.pop(slot)
+            self._lanes[clen].append(lane)
+        elif slot in self._host:
+            del self._host[slot]
+        elif 0 <= slot < self._next_sid:
+            raise ValueError(f"slot {slot} double-released")
+        else:
+            raise ValueError(f"release of unknown slot id {slot}")
+        del self._class_of[slot]
+
+    # -- host spill tier ----------------------------------------------------
+
+    def spill(self, slot: int) -> None:
+        """Move a slot's full cache pytree (KV/rings, recurrent state, RoPE
+        angle memory, position) to host memory and free its device lane.
+
+        The transfer is bit-exact (`jax.device_put` round trip); the freed
+        lane's stale contents are overwritten by the next `write`.
+        """
+        if slot in self._host:
+            raise ValueError(f"slot {slot} already spilled")
+        clen, lane = self.locate(slot)
+        cache = jax.tree.map(lambda x: x[lane], self._stores[clen])
+        host = jax.block_until_ready(
+            jax.device_put(cache, self._host_device))
+        del self._lane_of[slot]
+        self._lanes[clen].append(lane)
+        self._host[slot] = host
+        self.spill_stats["spills"] += 1
+        self.spill_stats["bytes_to_host"] += pytree_nbytes(host)
+
+    def fetch(self, slot: int) -> None:
+        """Bind a spilled slot to a free lane in its class and restore its
+        cache to the device, bit-exactly.  The caller checks
+        ``has_free_lane(slot_len(slot))`` first (or handles the raise)."""
+        if slot not in self._host:
+            raise ValueError(f"slot {slot} is not spilled to host "
+                             f"({self._where(slot)})")
+        clen = self._class_of[slot]
+        if not self._lanes[clen]:
+            raise ValueError(f"no free lane in class {clen} to fetch "
+                             f"slot {slot} into")
+        host = self._host.pop(slot)
+        lane = self._lanes[clen].pop(0)
+        self._lane_of[slot] = (clen, lane)
+        self.spill_stats["fetches"] += 1
+        self.spill_stats["bytes_to_device"] += pytree_nbytes(host)
+        self.write(slot, jax.device_put(host, self._device))
 
     # -- stacked stores -----------------------------------------------------
 
@@ -166,11 +292,27 @@ class CachePool:
         self._stores[clen] = store
 
     def write(self, slot: int, cache: Params) -> None:
-        """Scatter one batch-1 cache (e.g. fresh from prefill) into a slot."""
-        clen, local = self._locate[slot]
+        """Scatter one batch-1 cache (e.g. fresh from prefill) into a slot.
+
+        The incoming pytree must match the slot class's structure and leaf
+        shapes — a cache built for another class would silently corrupt the
+        stacked store otherwise.
+        """
+        clen, lane = self.locate(slot)
+        store = self._stores[clen]
+        if jax.tree.structure(cache) != jax.tree.structure(store):
+            raise ValueError(
+                f"cache pytree structure does not match slot {slot}'s "
+                f"class (cache_len {clen})")
+        for p, c in zip(jax.tree.leaves(store), jax.tree.leaves(cache)):
+            if tuple(p.shape[1:]) != tuple(jnp.shape(c)):
+                raise ValueError(
+                    f"cache leaf shape {tuple(jnp.shape(c))} does not match "
+                    f"slot {slot}'s class shape {tuple(p.shape[1:])} "
+                    f"(cache_len {clen})")
         self._stores[clen] = jax.tree.map(
-            lambda pool, c: pool.at[local].set(c.astype(pool.dtype)),
-            self._stores[clen], cache)
+            lambda pool, c: pool.at[lane].set(c.astype(pool.dtype)),
+            store, cache)
 
 
 class RequestScheduler:
@@ -190,6 +332,15 @@ class RequestScheduler:
     Admission order is FIFO with skip: a request whose smallest fitting class
     is momentarily full does not block later requests that fit elsewhere.
 
+    ``host_spill=True`` adds priority preemption over the pool's host tier:
+    when a queued request finds no free lane, the lowest-priority (tie:
+    oldest-admitted) resident lane of *strictly lower* priority is spilled —
+    its cache pytree moves to host memory (``CachePool.spill``) along with
+    its sampling key, pending token, and speculative history — and parks on
+    a resumable list.  Resume re-enters the vmapped decode through the
+    pool's ``fetch`` + slot ``write``: no re-prefill, no new compiles, and
+    greedy output is token-identical to an unpreempted run.
+
     Stochastic sampling stays per-request reproducible: each request draws
     from ``fold_in(key, uid)`` regardless of which slot it lands in or what
     else shares the batch.
@@ -201,17 +352,21 @@ class RequestScheduler:
                  gen: GenerationConfig = GenerationConfig(),
                  key: jax.Array | None = None,
                  chunk_size: int = 32,
+                 host_spill: bool = False,
                  on_token: Callable[[int, int], None] | None = None):
         self.engine = engine
         self.gen = gen
         self.pool = CachePool(engine.cfg, n_slots, cache_len, classes=classes)
         self.base_key = key if key is not None else jax.random.key(0)
         self.chunk_size = chunk_size
+        self.host_spill = host_spill
         self.on_token = on_token
 
         self._queue: list[Request] = []
         self._admitting: dict | None = None      # the one in-flight prefill
-        self._active: dict[int, dict] = {}       # gid -> per-request state
+        self._active: dict[int, dict] = {}       # sid -> per-request state
+        self._preempted: list[dict] = []         # parked, host-resident
+        self._seq = 0                            # admission order stamp
         self._finished: list[FinishedRequest] = []
         # Per class: current token per slot [N_c, 1, 1] (lane-major so vmap
         # sees [1, 1], the [B=1, T=1] shape forward_decode expects) and the
@@ -222,7 +377,8 @@ class RequestScheduler:
                       for n, clen in self.pool.classes}
         self.stats = {"steps": 0, "emitted": 0, "prefill_chunks": 0,
                       "admitted": 0, "cancelled": 0, "decode_stall_steps": 0,
-                      "verify_steps": 0, "accepted_drafts": 0}
+                      "verify_steps": 0, "accepted_drafts": 0,
+                      "preempted": 0, "resumed": 0}
 
         # Speculative decode: each slot is its own batch lane, so acceptance
         # depth is per-request (no lockstep min over the batch like the
@@ -300,21 +456,53 @@ class RequestScheduler:
         """Enqueue; ``priority`` (or ``request.priority``) orders admission:
         higher priorities admit first, FIFO within a level.  A ``priority``
         argument is submission-scoped: the caller's Request is not mutated
-        (the queue holds a copy carrying the effective priority)."""
+        (the queue holds a copy carrying the effective priority).
+
+        Sizing is validated *here*, at the submission boundary: a request
+        whose ``max_new_tokens`` is invalid or that could never fit any pool
+        class raises immediately, so the drain loop (`run`) can never throw
+        mid-flight and abandon queued + resident work.
+        """
         if priority is not None:
             request = dataclasses.replace(request, priority=priority)
+        if request.max_new_tokens is not None and request.max_new_tokens < 1:
+            raise ValueError(f"request {request.uid}: max_new_tokens must be "
+                             f">= 1, got {request.max_new_tokens}")
+        need, budget = self._request_need(request)
+        if not self.pool.fits(need):
+            # Decode writes cache positions s .. s+budget-1; past-capacity
+            # positions would silently clamp onto the last linear-cache slot
+            # (gqa_decode), so reject instead of corrupting attention.
+            # Speculative verify blocks write up to k tokens past the last
+            # budget position before rolling back — reserved in `need` too.
+            raise ValueError(
+                f"request {request.uid}: prompt ({len(request.prompt)}) + "
+                f"max_new_tokens ({budget}) exceeds every pool class "
+                f"(largest cache_len {self.pool.cache_len})")
         i = len(self._queue)
         while i > 0 and self._queue[i - 1].priority < request.priority:
             i -= 1
         self._queue.insert(i, request)
 
+    def _request_need(self, req: Request) -> tuple[int, int]:
+        """(cache positions needed, effective token budget).  An explicit
+        ``max_new_tokens`` always wins — ``0`` must not silently fall back
+        to the scheduler default (it is rejected at submit)."""
+        budget = (req.max_new_tokens if req.max_new_tokens is not None
+                  else self.gen.max_new_tokens)
+        need = len(req.prompt) + budget
+        if self._spec is not None:
+            need += self._spec.k
+        return need, budget
+
     @property
     def pending(self) -> int:
-        return (len(self._queue) + len(self._active)
+        return (len(self._queue) + len(self._active) + len(self._preempted)
                 + (1 if self._admitting is not None else 0))
 
     def cancel(self, uid: int) -> bool:
-        """Drop a queued request / abort its admission / retire its slot."""
+        """Drop a queued request / abort its admission / retire its slot —
+        including a preempted slot parked in the host tier."""
         for i, req in enumerate(self._queue):
             if req.uid == uid:
                 self._queue.pop(i)
@@ -330,40 +518,57 @@ class RequestScheduler:
                 self._retire(slot, cancelled=True)
                 self.stats["cancelled"] += 1
                 return True
+        for entry in self._preempted:
+            if entry["req"].uid == uid:
+                self._preempted.remove(entry)
+                clen = self.pool.slot_len(entry["slot"])
+                self.pool.release(entry["slot"])   # drops the host copy
+                self._finished.append(FinishedRequest(
+                    uid=uid, prompt_len=len(entry["req"].prompt),
+                    tokens=entry["emitted"], slot=entry["slot"],
+                    cache_len=clen, cancelled=True,
+                    verify_steps=entry["verify_steps"],
+                    accepted_drafts=entry["accepted_drafts"]))
+                self.stats["cancelled"] += 1
+                return True
         return False
 
     # -- the sequencer cycle ------------------------------------------------
 
     def _start_admission(self) -> None:
-        """Pick the first queued request that fits a free slot class.
+        """Pick the next admission: resume a parked (preempted) request or
+        start the first queued request that fits a free slot class.
 
-        The capacity check happens *before* `pool.acquire`, and any failure
-        after acquisition releases the slot — admission can never leak slots.
-        A request that can never fit raises ValueError (a sizing bug at the
-        call site, not load); the offender is dropped first, so resident
-        lanes and the rest of the queue survive — `run()` again resumes.
+        Sizing was validated at `submit`, so this loop never throws under
+        load — the drain loop cannot abandon queued + resident work.  Any
+        failure after acquisition releases the slot (no slot leaks).
+
+        With ``host_spill``, a queued request that finds no free lane may
+        preempt the lowest-priority (tie: oldest-admitted) resident lane of
+        strictly lower priority — `_preempt` spills it to the pool's host
+        tier and parks it.  Parked requests resume ahead of queued arrivals
+        at the same or lower priority; a strictly higher-priority arrival
+        admits first (and may itself preempt).
         """
+        best_queued = self._queue[0].priority if self._queue else None
+        for entry in self._resume_order():
+            if (best_queued is not None
+                    and best_queued > entry["req"].priority):
+                break              # the higher-priority arrival admits first
+            if self._try_resume(entry):
+                return
         for i, req in enumerate(self._queue):
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            budget = req.max_new_tokens or self.gen.max_new_tokens
-            # Decode writes cache positions s .. s+budget-1; past-capacity
-            # positions would silently clamp onto the last linear-cache slot
-            # (gqa_decode), so reject instead of corrupting attention.
-            # Speculative verify blocks write up to k tokens past the last
-            # budget position before rolling back — reserve them too.
-            need = prompt.shape[1] + budget
-            if self._spec is not None:
-                need += self._spec.k
-            if not self.pool.fits(need):
-                self._queue.pop(i)
-                raise ValueError(
-                    f"request {req.uid}: prompt ({prompt.shape[1]}) + "
-                    f"max_new_tokens ({budget}) exceeds every pool class "
-                    f"(largest cache_len {self.pool.cache_len})")
+            need, budget = self._request_need(req)
             slot = self.pool.acquire(need)
+            if slot is None and self.host_spill:
+                victim = self._pick_victim(req.priority, need)
+                if victim is not None:
+                    self._preempt(victim)
+                    slot = self.pool.acquire(need)
             if slot is None:
                 continue                 # fitting classes all busy: try next
             self._queue.pop(i)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             try:
                 prefill = self.engine.begin_chunked_prefill(
                     prompt, cache_len=self.pool.slot_len(slot),
@@ -375,6 +580,79 @@ class RequestScheduler:
             self._admitting = {"req": req, "slot": slot, "prefill": prefill,
                                "budget": budget}
             return
+        # Nothing queued could start: resume any parked request that fits,
+        # ignoring the priority gate above — it only *defers* resumes behind
+        # admissible higher-priority arrivals, and must never deadlock the
+        # drain loop when those arrivals cannot be placed yet.
+        for entry in self._resume_order():
+            if self._try_resume(entry):
+                return
+
+    # -- host-spill preemption ---------------------------------------------
+
+    def _resume_order(self) -> list[dict]:
+        """Parked requests in resume order: priority desc, admission asc."""
+        return sorted(self._preempted,
+                      key=lambda e: (-e["req"].priority, e["seq"]))
+
+    def _pick_victim(self, priority: int, need: int) -> int | None:
+        """Lowest-priority (tie: oldest-admitted) resident lane strictly
+        below `priority` whose slot class could hold `need` positions."""
+        best = None
+        for slot, st in self._active.items():
+            if st["req"].priority >= priority:
+                continue
+            if self.pool.slot_len(slot) < need:
+                continue
+            rank = (st["req"].priority, st["seq"])
+            if best is None or rank < best[0]:
+                best = (rank, slot)
+        return None if best is None else best[1]
+
+    def _preempt(self, slot: int) -> None:
+        """Spill a resident lane to the host tier and park it, resumable
+        bit-exactly: cache pytree (via `CachePool.spill`), sampling key,
+        pending token, and — on the speculative path — the lane's draft
+        history all survive the round trip."""
+        st = self._active.pop(slot)
+        clen, lane = self.pool.locate(slot)
+        entry = {"req": st["req"], "slot": slot, "seq": st["seq"],
+                 "budget": st["budget"], "emitted": st["emitted"],
+                 "verify_steps": st["verify_steps"],
+                 "accepted_drafts": st["accepted_drafts"],
+                 "token": int(self._tokens[clen][lane, 0, 0]),
+                 "key": self._keys[clen][lane]}
+        if self._spec is not None:
+            entry["hist"] = jax.device_get(self._hist[clen][lane])
+            entry["hist_len"] = int(self._hist_len[clen][lane])
+        self.pool.spill(slot)
+        self._preempted.append(entry)
+        self.stats["preempted"] += 1
+
+    def _try_resume(self, entry: dict) -> bool:
+        """Fetch a parked request's cache back into a free lane of its class
+        and rejoin the vmapped decode — no re-prefill, no new compiles (the
+        slot `write` is the same scatter admission uses)."""
+        slot = entry["slot"]
+        if not self.pool.has_free_lane(self.pool.slot_len(slot)):
+            return False
+        self.pool.fetch(slot)
+        clen, lane = self.pool.locate(slot)
+        self._tokens[clen] = self._tokens[clen].at[lane, 0, 0].set(
+            entry["token"])
+        self._keys[clen] = self._keys[clen].at[lane].set(entry["key"])
+        if self._spec is not None:
+            self._hist[clen] = self._hist[clen].at[lane].set(
+                jnp.asarray(entry["hist"]))
+            self._hist_len[clen] = self._hist_len[clen].at[lane].set(
+                entry["hist_len"])
+        self._active[slot] = {"req": entry["req"], "emitted": entry["emitted"],
+                              "budget": entry["budget"], "seq": entry["seq"],
+                              "verify_steps": entry["verify_steps"],
+                              "accepted_drafts": entry["accepted_drafts"]}
+        self._preempted.remove(entry)
+        self.stats["resumed"] += 1
+        return True
 
     def _admit(self) -> None:
         """MMM phase: advance the in-flight admission by at most one chunk."""
@@ -403,8 +681,9 @@ class RequestScheduler:
             self._hist_len[clen] = self._hist_len[clen].at[local].set(
                 prompt.shape[0])
         self._active[slot] = {"req": req, "emitted": [],
-                              "budget": adm["budget"],
+                              "budget": adm["budget"], "seq": self._seq,
                               "verify_steps": 0, "accepted_drafts": 0}
+        self._seq += 1
         self._admitting = None
         self.stats["admitted"] += 1
 
@@ -412,7 +691,8 @@ class RequestScheduler:
         st = self._active.pop(slot)
         self._finished.append(FinishedRequest(
             uid=st["req"].uid, prompt_len=len(st["req"].prompt),
-            tokens=st["emitted"], slot=slot, cancelled=cancelled,
+            tokens=st["emitted"], slot=slot,
+            cache_len=self.pool.slot_len(slot), cancelled=cancelled,
             verify_steps=st["verify_steps"],
             accepted_drafts=st["accepted_drafts"]))
         self.pool.release(slot)

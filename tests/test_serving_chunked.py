@@ -227,8 +227,8 @@ def test_paged_pool_classes_and_admission_fit():
     sched.submit(Request(uid=0, prompt=[2, 3, 4]))           # 3+4 -> class 12
     sched.submit(Request(uid=1, prompt=list(range(2, 32))))  # 30+4 -> class 48
     res = sched.run()
-    assert sched.pool.slot_len(res[0].slot) == 12
-    assert sched.pool.slot_len(res[1].slot) == 48
+    assert res[0].cache_len == 12
+    assert res[1].cache_len == 48
     # the small class's KV leaves really are smaller
     pool = sched.pool
     k_small = jax.tree_util.tree_leaves(pool.get_store(12))[0]
@@ -237,17 +237,17 @@ def test_paged_pool_classes_and_admission_fit():
 
 
 def test_admission_validation_before_acquire_no_slot_leak():
-    """A request that can never fit raises *before* pool.acquire, leaking
-    nothing; later requests still run."""
+    """A request that can never fit raises at submit() — before any
+    pool.acquire, leaking nothing; the drain loop itself never throws and
+    later requests still run."""
     engine = InferenceEngine.from_config("retnet-1.3b",
                                          EngineSpec(reduced=True))
     gen = GenerationConfig(max_new_tokens=4)
     sched = RequestScheduler(engine, n_slots=2, cache_len=16, gen=gen,
                              chunk_size=8)
     free_before = sched.pool.free_slots
-    sched.submit(Request(uid=0, prompt=list(range(2, 40))))  # 38+4 > 16
     with pytest.raises(ValueError, match="exceeds every pool class"):
-        sched.run()
+        sched.submit(Request(uid=0, prompt=list(range(2, 40))))  # 38+4 > 16
     assert sched.pool.free_slots == free_before              # no leak
     sched.submit(Request(uid=1, prompt=[2, 3, 4]))
     res = sched.run()
@@ -323,4 +323,6 @@ def test_cache_pool_paged_accounting():
     assert pool.acquire(6) is None and pool.free_slots == 0
     assert not pool.fits(64) and pool.fits(32)
     pool.release(b)
-    assert pool.acquire(2) == b                       # small classes full
+    d = pool.acquire(2)                # small classes full: reuses b's lane
+    assert d is not None and pool.slot_len(d) == 32
+    assert pool.free_slots == 0

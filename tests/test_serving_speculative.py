@@ -247,9 +247,8 @@ def test_scheduler_speculative_reserves_verify_overrun():
                            speculative=SpeculativeConfig(k=4))
     sched = RequestScheduler(engine, n_slots=1, cache_len=16, gen=gen,
                              chunk_size=8)
-    sched.submit(Request(uid=0, prompt=list(range(2, 12))))   # 10+4+4 > 16
     with pytest.raises(ValueError, match="exceeds every pool class"):
-        sched.run()
+        sched.submit(Request(uid=0, prompt=list(range(2, 12))))  # 10+4+4 > 16
 
 
 def test_scheduler_rejects_mtp_drafter():
