@@ -3,7 +3,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast install serve-demo smoke-host-spill bench-serving
+.PHONY: test test-fast install serve-demo smoke-host-spill smoke-sharded \
+	bench-serving
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -25,6 +26,15 @@ smoke-host-spill:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
 		--arch retnet-1.3b --reduced --scenario SILO --scale 0.02 \
 		--requests 5 --slots 2 --chunk-size 8 --host-spill
+
+# Tiny multi-chip smoke: a 2x2 virtual-device (data, model) mesh serving
+# 3 requests through one device lane with the host-spill tier — a sharded
+# generate plus one preemption/resume round trip (CI multi-device leg).
+smoke-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
+		--arch retnet-1.3b --reduced --scenario SILO --scale 0.02 \
+		--requests 3 --slots 1 --chunk-size 8 --host-spill --mesh 2,2
 
 # Serving-path perf trajectory: writes BENCH_serving.json (tokens/s, prefill
 # compiles triggered, decode-stall steps) for PR-over-PR comparison.

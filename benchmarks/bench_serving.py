@@ -21,6 +21,11 @@ successive PRs accumulate a perf trajectory instead of overwriting it:
     oversubscribed.*      the host-spill leg: requests > device lanes, a
                           high-priority burst preempting residents to host
                           memory (spills/fetches/bytes moved each way)
+    sharded.*             the multi-chip leg: the same generate on a 2x2
+                          (data, model) mesh of virtual host devices —
+                          device count, axis shape, and per-device vs
+                          global cache bytes per record (subprocess: the
+                          XLA device-count flag must precede jax init)
     git_rev               short rev of the checkout, so trajectory points
                           correlate with PRs
 
@@ -33,6 +38,7 @@ import json
 import os
 import subprocess
 import sys
+import textwrap
 import time
 
 import jax
@@ -189,11 +195,74 @@ def run_oversubscribed() -> dict:
     }
 
 
+SHARDED_MESH = "2,2"
+SHARDED_DEVICES = 4
+SHARDED_PROMPT = 16
+SHARDED_NEW_TOKENS = 8
+
+
+def run_sharded() -> dict:
+    """Multi-chip leg: a warm sharded generate on a 2x2 virtual-device mesh.
+
+    Subprocess because ``--xla_force_host_platform_device_count`` must be
+    set before any jax initialization (this process already holds a
+    single-device jax).  Failure degrades to an ``error`` record instead of
+    sinking the whole trajectory append.
+    """
+    code = textwrap.dedent(f"""
+        import json, time
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving import (EngineSpec, GenerationConfig,
+                                   InferenceEngine)
+
+        mesh = make_serving_mesh({SHARDED_MESH!r})
+        eng = InferenceEngine.from_config("retnet-1.3b",
+                                          EngineSpec(reduced=True), mesh=mesh)
+        prompts = jax.random.randint(jax.random.key(1),
+                                     (1, {SHARDED_PROMPT}), 1,
+                                     eng.cfg.vocab_size, dtype=jnp.int32)
+        gen = GenerationConfig(max_new_tokens={SHARDED_NEW_TOKENS})
+        eng.generate(prompts, gen)                       # warm/compile
+        t0 = time.perf_counter()
+        eng.generate(prompts, gen)
+        wall = time.perf_counter() - t0
+        clen = {SHARDED_PROMPT} + {SHARDED_NEW_TOKENS}
+        print("BENCH_SHARDED " + json.dumps({{
+            "devices": jax.device_count(),
+            "mesh_axes": {{a: int(n) for a, n in
+                           zip(mesh.axis_names, mesh.devices.shape)}},
+            "wall_s": round(wall, 3),
+            "tokens_per_s": round(
+                ({SHARDED_PROMPT} + {SHARDED_NEW_TOKENS}) / wall, 2),
+            "cache_nbytes_global": eng.cache_nbytes(clen),
+        }}))
+    """)
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={SHARDED_DEVICES}",
+        PYTHONPATH=os.pathsep.join(
+            [os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                          "src")]
+            + ([os.environ["PYTHONPATH"]] if os.environ.get("PYTHONPATH")
+               else [])))
+    try:
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=1200)
+    except subprocess.SubprocessError as e:
+        return {"error": repr(e)}
+    for line in out.stdout.splitlines():
+        if line.startswith("BENCH_SHARDED "):
+            return json.loads(line[len("BENCH_SHARDED "):])
+    return {"error": (out.stderr or "no output")[-500:]}
+
+
 def run(out_path: str = "BENCH_serving.json") -> dict:
     record = run_scheduler()
     record["git_rev"] = git_rev()
     record["speculative"] = run_speculative()
     record["oversubscribed"] = run_oversubscribed()
+    record["sharded"] = run_sharded()
 
     # Append to the trajectory (older single-record files become entry 0).
     history: list = []

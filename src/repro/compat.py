@@ -40,6 +40,25 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
                       check_rep=check_vma, **kw)
 
 
+def jit_sharded(fn, *, in_shardings=None, out_shardings=None, **kwargs):
+    """``jax.jit`` with explicit shardings across versions.
+
+    Modern jax spells the placement kwargs ``in_shardings``/``out_shardings``;
+    the pre-0.4.x pjit-era spelling was ``in_axis_resources`` /
+    ``out_axis_resources``.  The sharded serving engine funnels every
+    placement-carrying jit through here so a jax upgrade (or downgrade onto
+    an edge image) stays a one-file change.
+    """
+    import inspect
+    params = inspect.signature(jax.jit).parameters
+    if "in_shardings" in params or any(
+            p.kind == inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return jax.jit(fn, in_shardings=in_shardings,
+                       out_shardings=out_shardings, **kwargs)
+    return jax.jit(fn, in_axis_resources=in_shardings,
+                   out_axis_resources=out_shardings, **kwargs)
+
+
 def tpu_compiler_params(**kwargs):
     """``pltpu.CompilerParams`` / ``pltpu.TPUCompilerParams`` across versions."""
     cls = getattr(pltpu, "CompilerParams", None)

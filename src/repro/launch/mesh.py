@@ -42,3 +42,32 @@ def make_mesh_by_name(name: str):
         "tiny": lambda: make_tiny_mesh(multi_pod=False),
         "tiny_multi": lambda: make_tiny_mesh(multi_pod=True),
     }[name]()
+
+
+def make_serving_mesh(spec: str):
+    """Mesh for `serve.py --mesh`: a named mesh, or an explicit ``dp,tp``
+    (also ``dpXtp``) shape over the (data, model) axes — ``data`` replicates
+    the weight stream across request groups, ``model`` tensor-shards it
+    (heads/mlp/vocab) plus the cache length axis where divisible.
+
+    A bare integer means pure tensor parallelism (``1,tp``): the common
+    multi-chip edge deployment where one request's weight stream is split
+    across chips rather than batched.
+    """
+    import re
+
+    try:
+        return make_mesh_by_name(spec.strip())
+    except KeyError:
+        pass
+    try:
+        parts = [int(p) for p in re.split(r"[x,]", spec.strip().lower()) if p]
+    except ValueError:
+        parts = []
+    if len(parts) == 1:
+        parts = [1, parts[0]]
+    if len(parts) != 2 or any(p < 1 for p in parts):
+        raise ValueError(f"--mesh wants 'dp,tp' (e.g. 2,2) or a named mesh, "
+                         f"got {spec!r}")
+    dp, tp = parts
+    return _mesh((dp, tp), ("data", "model"))

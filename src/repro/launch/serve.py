@@ -172,6 +172,11 @@ def main() -> None:
                     help="scheduler mode: request-to-lane ratio — shrinks "
                          "the pool to ~requests/R device lanes so demand "
                          "exceeds device capacity (pair with --host-spill)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve sharded on a device mesh: 'dp,tp' (e.g. 2,2 "
+                         "— axes data,model) or a named mesh from "
+                         "launch.mesh; needs dp*tp devices (CPU smoke: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
     if args.oversubscribe:
         if args.oversubscribe <= 1.0:
@@ -186,7 +191,15 @@ def main() -> None:
 
     spec = EngineSpec(quantize=not args.no_quant, reduced=args.reduced,
                       fuse_rmsnorm=not args.unfused_norm)
-    engine = InferenceEngine.from_config(args.arch, spec)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.mesh)
+        axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        print(f"[serve] mesh: {axes} over {mesh.size} "
+              f"{mesh.devices.flat[0].platform} devices "
+              f"(params + cache sharded per ServeCell)")
+    engine = InferenceEngine.from_config(args.arch, spec, mesh=mesh)
     cfg = engine.cfg
     if args.requests > 0:
         return _run_scheduler_demo(engine, args, n_in, n_out)

@@ -35,9 +35,23 @@ from repro.models import retnet as R
 from repro.models import ssm as S
 from repro.models.config import ModelConfig
 from repro.models.modules import ParamBuilder, stack_layers
-from repro.runtime.sharding import constrain
+from repro.runtime.sharding import constrain, constrain_tree, current_ctx
 
 Params = dict[str, Any]
+
+
+def _constrain_cache(cache: Params, cfg: ModelConfig) -> Params:
+    """Pin a decode-cache pytree onto the active mesh policy (`cache_axes`).
+
+    A no-op outside a `sharding_ctx` — the single-device serving path and
+    the scheduler's vmapped per-lane steps (which trace without a context)
+    pay nothing.  Inside the sharded engine's traces this is what keeps the
+    cache on-mesh across prefill chunks, the fused decode while_loop carry,
+    and speculative verify/rollback, instead of silently replicating.
+    """
+    if current_ctx() is None:
+        return cache
+    return constrain_tree(cache, cache_axes(cfg))
 
 
 # ---------------------------------------------------------------------------
@@ -554,6 +568,7 @@ def forward_prefill(params: Params, batch: Params, cfg: ModelConfig,
     caches["pos"] = pos
     if cfg.rope:
         caches["rope"] = orp.init_state(_rope_dim(cfg), cfg.rope_base, pos=pos)
+    caches = _constrain_cache(caches, cfg)
     if return_hidden:
         return logits, caches, last[:, 0]
     return logits, caches
@@ -645,7 +660,7 @@ def forward_prefill_chunk(params: Params, batch: Params, cache: Params,
     x, new_cache = _chunk_stack(params, batch, cache, cfg, engine)
     h = L.norm_full(params["final_norm"], x[:, -1:], cfg)
     logits = engine.linear(params["lm_head"], h, "prefill")[:, 0]
-    return logits, new_cache
+    return logits, _constrain_cache(new_cache, cfg)
 
 
 def _chunk_stack(params: Params, batch: Params, cache: Params,
@@ -714,7 +729,10 @@ def forward_verify_chunk(params: Params, batch: Params, cache: Params,
                                 collect=True)
     h = L.norm_full(params["final_norm"], x, cfg)
     logits = engine.linear(params["lm_head"], h, "prefill")
-    return logits, x, new_cache
+    # State snapshots (`s_all`/`h_all`/`conv_ext`) have no cache_axes entry
+    # and pass through unconstrained; `commit_verified_cache` pins the
+    # committed cache it derives from them.
+    return logits, x, _constrain_cache(new_cache, cfg)
 
 
 def commit_verified_cache(prev: Params, ver: Params, n_accept: jax.Array,
@@ -777,7 +795,7 @@ def commit_verified_cache(prev: Params, ver: Params, n_accept: jax.Array,
                           "k_rope": ver[gname]["k_rope"]}
         else:
             out[gname] = attn_commit(prev[gname], ver[gname])
-    return out
+    return _constrain_cache(out, cfg)
 
 
 def forward_decode(params: Params, tokens: jax.Array, cache: Params,
@@ -812,7 +830,7 @@ def forward_decode(params: Params, tokens: jax.Array, cache: Params,
 
     h = L.norm_full(params["final_norm"], x, cfg)
     logits = engine.linear(params["lm_head"], h, "decode")[:, 0]
-    return logits, new_cache
+    return logits, _constrain_cache(new_cache, cfg)
 
 
 def make_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,

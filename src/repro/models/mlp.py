@@ -286,7 +286,14 @@ def moe_apply(p: Params, x_star: jax.Array, sig_inv, engine: HSAEngine,
     aux = jnp.sum(me * ce) * e * cfg.router_aux_coef
 
     ctx = current_ctx()
-    if ctx is not None:
+    if ctx is not None and phase == "train":
+        # Expert-parallel dispatch (shard_map over the DP axes) assumes
+        # data-sharded activation rows: T divisible, per-shard capacity.
+        # Serving traces (prefill/decode under the sharded engine) run the
+        # local dispatch instead — batches are tiny/replicated, per-shard
+        # capacity would break greedy identity with the single-device
+        # engine, and GSPMD still tensor-shards the expert FFN einsums over
+        # the 'experts'/'mlp' axes of the weights.
         y = _moe_core_sharded(x, idx, gates, p["experts"], cfg, *ctx,
                               no_drop=no_drop)
     else:

@@ -159,6 +159,60 @@ def shardings_from_specs(specs: Params, mesh: Mesh) -> Params:
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def stacked_axes(axes: Params, n_lead: int = 1) -> Params:
+    """Prepend ``n_lead`` unsharded leading dims to every axes tuple in a
+    logical-axes tree — the pool's ``[n_slots, ...]`` slot stacking: lanes
+    are an addressing dim, never a distribution dim."""
+    if isinstance(axes, dict):
+        return {k: stacked_axes(v, n_lead) for k, v in axes.items()}
+    if isinstance(axes, tuple):
+        return (None,) * n_lead + axes
+    return axes
+
+
+def _is_sharding(x) -> bool:
+    return isinstance(x, jax.sharding.Sharding)
+
+
+def shardings_key(tree) -> tuple:
+    """Hashable identity of a shardings pytree — the jit-cache key the
+    sharded engine uses so one `jax.jit` object (and its compile cache) is
+    reused across calls that resolve to the same placement."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_sharding)
+    return (treedef, tuple(leaves))
+
+
+def sharding_mismatches(tree: Params, shardings: Params) -> list[str]:
+    """Array leaves whose actual sharding is not equivalent to the expected
+    one — the `jax.debug.visualize_array_sharding`-style on-mesh check, as
+    data.  ``shardings`` may be a prefix tree (a single sharding standing
+    for a whole subtree, as `tree_shardings` emits for non-dict nodes).
+    Returns human-readable mismatch descriptions; empty means fully placed.
+    """
+    bad: list[str] = []
+
+    def check(leaf, expect, path):
+        if not (_is_sharding(expect) and hasattr(leaf, "sharding")):
+            return
+        if not leaf.sharding.is_equivalent_to(expect, leaf.ndim):
+            bad.append(f"{'/'.join(map(str, path))}: "
+                       f"{leaf.sharding} != {expect}")
+
+    def rec(t, s, path):
+        if isinstance(t, dict):
+            for k, v in t.items():
+                rec(v, s[k] if isinstance(s, dict) else s, path + (k,))
+        elif hasattr(t, "ndim") and hasattr(t, "sharding"):
+            check(t, s, path)
+        else:                        # non-dict pytree node: one sharding
+            for i, leaf in enumerate(jax.tree.leaves(t)):
+                if hasattr(leaf, "sharding"):
+                    check(leaf, s, path + (f"[{i}]",))
+
+    rec(tree, shardings, ())
+    return bad
+
+
 # ---------------------------------------------------------------------------
 # Activation sharding constraints (logical): a contextvar carries the active
 # (mesh, policy) so model code can annotate intermediates ('seq'-parallel

@@ -22,6 +22,10 @@ One import gives the whole serving surface:
     bucketed, chunked prompt-admission machinery (engine.py).
   * `ServeCell` / `build_serve` — typed sharding/shape plan for multi-chip
     deployments (cell.py; `runtime.serve_step` re-exports it).
+    `InferenceEngine.from_config(mesh=...)` *executes* the plan: params
+    under the cell's shardings, caches under `lm.cache_axes`, every jit
+    issued with explicit in/out shardings — greedy token-identical to the
+    single-device engine per cache arch (tests/test_serving_sharded.py).
 """
 
 from repro.serving.cell import (ServeCell, build_serve,

@@ -51,11 +51,32 @@ class ServeCell:
     # sharded twin for multi-chip lowering).
     verify_chunk: Callable[[Params, Params, Params],
                            tuple[jax.Array, jax.Array, Params]] | None = None
+    # The planning inputs, retained so the in-process `InferenceEngine` can
+    # re-resolve shardings for shapes other than the planning shape (the
+    # dataclass's `cache_shardings` is for `cache_shapes` exactly).
+    cfg: ModelConfig | None = None
+    mesh: Mesh | None = None
 
     def __getitem__(self, name: str):
         if name not in {f.name for f in dataclasses.fields(self)}:
             raise KeyError(name)
         return getattr(self, name)
+
+    def cache_shardings_for(self, cache: Params) -> Params:
+        """NamedSharding tree for ANY cache pytree (concrete or abstract) of
+        this model under the cell's policy — same rules engine that produced
+        `cache_shardings`, resolved against the given tree's shapes (the
+        divisibility fallback is shape-dependent)."""
+        from repro.runtime import sharding as shd   # deferred: import cycle
+        if self.cfg is None or self.mesh is None:
+            raise ValueError("cell was built without cfg/mesh retention; "
+                             "rebuild via build_serve on a current checkout")
+        return shd.tree_shardings(cache, lm.cache_axes(self.cfg), self.mesh,
+                                  self.policy)
+
+    def place_params(self, params: Params) -> Params:
+        """`jax.device_put` a live param tree under `param_shardings`."""
+        return jax.device_put(params, self.param_shardings)
 
 
 def serving_engine(kernel_impl: str = "auto") -> HSAEngine:
@@ -64,9 +85,17 @@ def serving_engine(kernel_impl: str = "auto") -> HSAEngine:
                                kernel_impl=kernel_impl))
 
 
-def deployed_shapes(cfg: ModelConfig) -> tuple[Params, Params]:
-    """(serving param ShapeDtypeStructs, their axes) — no allocation."""
+def deployed_shapes(cfg: ModelConfig,
+                    quantize: bool = True) -> tuple[Params, Params]:
+    """(serving param ShapeDtypeStructs, their axes) — no allocation.
+
+    ``quantize=False`` plans for fp master weights (the ablation / identity-
+    test deployment): same tree the engine serves when
+    ``EngineSpec(quantize=False)``.
+    """
     params_abs, axes, paths = lm.init(cfg, jax.random.key(0), abstract=True)
+    if not quantize:
+        return params_abs, axes
     served = jax.eval_shape(
         lambda p: deploy.deploy_quantize(p, paths), params_abs)
     served_axes = deploy.deployed_axes(axes, paths)
@@ -106,7 +135,7 @@ def verify_chunk_step_fn(cfg: ModelConfig, engine: HSAEngine):
 def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
                 policy=None, kernel_impl: str = "auto",
                 local_batch: int | None = None,
-                cache_dtype=jnp.bfloat16) -> ServeCell:
+                cache_dtype=jnp.bfloat16, quantize: bool = True) -> ServeCell:
     """Shardings + shapes for one serving cell (prefill or decode kind)."""
     from repro.runtime import sharding as shd   # deferred: avoid import cycle
 
@@ -114,7 +143,7 @@ def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
     engine = serving_engine(kernel_impl)
     batch = local_batch or shape.global_batch
 
-    served_shapes, served_axes = deployed_shapes(cfg)
+    served_shapes, served_axes = deployed_shapes(cfg, quantize=quantize)
     param_shardings = shd.tree_shardings(served_shapes, served_axes, mesh,
                                          policy)
 
@@ -139,4 +168,6 @@ def build_serve(cfg: ModelConfig, mesh: Mesh, shape: InputShape,
         cache_shapes=cache_shapes,
         cache_shardings=cache_shardings,
         policy=policy,
+        cfg=cfg,
+        mesh=mesh,
     )

@@ -23,18 +23,22 @@ Usage::
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import math
 import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import configs
+from repro import compat, configs
 from repro.core.hsa import HSAConfig, HSAEngine
 from repro.models import deploy, lm
-from repro.models.config import ModelConfig
+from repro.models.config import InputShape, ModelConfig
+from repro.runtime import sharding as shd
 from repro.serving import speculative as spec_mod
 from repro.serving.sampling import (GenerationConfig, SpeculativeConfig,
                                     sample)
@@ -47,11 +51,25 @@ Params = dict[str, Any]
 MIN_BUCKET = 8
 
 
-def pytree_nbytes(tree) -> int:
+def pytree_nbytes(tree, *, per_device: bool = False) -> int:
     """Total bytes across a pytree's array (or ShapeDtypeStruct) leaves —
-    the currency of the host-spill tier's transfer accounting."""
-    return sum(math.prod(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
-               for leaf in jax.tree.leaves(tree))
+    the currency of the host-spill tier's transfer accounting.
+
+    ``per_device=True`` reports what ONE chip holds: sharded leaves count
+    their local shard (`sharding.shard_shape`) instead of the global array —
+    the number that has to fit a single device's DRAM on a mesh.  Unsharded
+    / abstract leaves count in full either way.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        n = math.prod(leaf.shape)
+        if per_device and getattr(leaf, "sharding", None) is not None:
+            try:
+                n = math.prod(leaf.sharding.shard_shape(leaf.shape))
+            except (AttributeError, ValueError):
+                pass                       # odd sharding: count globally
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
 
 
 def bucket_length(s: int, min_bucket: int = MIN_BUCKET) -> int:
@@ -168,8 +186,9 @@ class ChunkedPrefill:
         self.engine = engine
         self.tokens = tokens
         self.schedule = chunk_schedule(s, chunk_size)
-        self.cache = lm.make_decode_cache(engine.cfg, tokens.shape[0],
-                                          cache_len, cache_dtype, start_pos=0)
+        self.cache = engine.shard_cache(
+            lm.make_decode_cache(engine.cfg, tokens.shape[0], cache_len,
+                                 cache_dtype, start_pos=0))
         self.cache_len = cache_len
         self.logits: jax.Array | None = None
         self._off = 0
@@ -191,9 +210,8 @@ class ChunkedPrefill:
         chunk = self.tokens[:, self._off:self._off + c]
         eng = self.engine
         eng.prefill_shape_keys.add(("chunk", c, self.cache_len))
-        self.logits, self.cache = eng._prefill_chunk(eng.params,
-                                                     {"tokens": chunk},
-                                                     self.cache)
+        self.logits, self.cache = eng._run_prefill_chunk({"tokens": chunk},
+                                                         self.cache)
         self._off += c
         self._next += 1
         return self.logits if self.done else None
@@ -209,11 +227,36 @@ class InferenceEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params: Params, spec: EngineSpec,
-                 hsa: HSAEngine | None = None):
+                 hsa: HSAEngine | None = None, *, mesh: Mesh | None = None,
+                 policy: "shd.ShardingPolicy | None" = None, cell=None):
         self.cfg = cfg
-        self.params = params
         self.spec = spec
         self.hsa = hsa or HSAEngine(spec.hsa_config())
+
+        # Multi-chip serving: with a mesh, the whole stack runs sharded —
+        # params live under the `ServeCell` shardings, caches under
+        # `lm.cache_axes` resolved by the same rules engine, and every jit
+        # below is re-issued through `compat.jit_sharded` with explicit
+        # in/out shardings (see `_sjit`), so prefill -> decode -> spill ->
+        # resume never bounces through an unsharded host round trip.
+        self.mesh = mesh
+        self.cell = cell
+        self.policy = None
+        self._cache_axes = lm.cache_axes(cfg)
+        if mesh is not None:
+            self.policy = (policy or (cell.policy if cell is not None
+                                      else None) or shd.ShardingPolicy())
+            if cell is not None:
+                self.param_shardings = cell.param_shardings
+            else:
+                axes = self._infer_param_axes(params)
+                self.param_shardings = shd.tree_shardings(params, axes, mesh,
+                                                          self.policy)
+            params = jax.device_put(params, self.param_shardings)
+            self._rep = NamedSharding(mesh, P())
+            self._sjits: dict = {}
+            self._csh_cache: dict = {}
+        self.params = params
 
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("cache_len",
@@ -237,6 +280,8 @@ class InferenceEngine:
                     spec: EngineSpec = EngineSpec(), *,
                     params: Params | None = None,
                     linear_paths: list[tuple[str, ...]] | None = None,
+                    mesh: Mesh | None = None,
+                    policy: "shd.ShardingPolicy | None" = None,
                     ) -> "InferenceEngine":
         """Build the serving stack: init (or adopt) params, PTQ-deploy, wire
         the HSA engine.
@@ -246,6 +291,13 @@ class InferenceEngine:
         ``linear_paths`` from `lm.init`) to serve trained weights; otherwise
         fresh ones are initialized from ``spec.seed``.  Already-deployed
         trees (no master ``'w'`` under the lm_head) are adopted as-is.
+
+        ``mesh`` switches the engine to multi-chip serving: a `ServeCell`
+        plan is built (``engine.cell``), params are `jax.device_put` under
+        its shardings, and every generate path (plain, chunked prefill,
+        speculative, warm resume) runs with explicit in/out shardings on the
+        mesh — greedy output stays token-identical to the single-device
+        engine (tests/test_serving_sharded.py).
         """
         if isinstance(cfg, str):
             cfg = configs.get_config(cfg)
@@ -259,7 +311,16 @@ class InferenceEngine:
                 _, _, linear_paths = lm.init(cfg, jax.random.key(spec.seed),
                                              abstract=True)
             params = deploy.deploy_quantize(params, linear_paths)
-        return cls(cfg, params, spec)
+        cell = None
+        if mesh is not None:
+            from repro.serving import cell as cell_mod   # deferred: cycle
+            cell = cell_mod.build_serve(
+                cfg, mesh,
+                InputShape("serve", seq_len=128, global_batch=1,
+                           kind="decode"),
+                policy=policy, kernel_impl=spec.kernel_impl,
+                quantize=not _is_master_tree(params))
+        return cls(cfg, params, spec, mesh=mesh, policy=policy, cell=cell)
 
     # -- jitted building blocks --------------------------------------------
 
@@ -339,6 +400,143 @@ class InferenceEngine:
                                          hist_len0, cache, key, cfg=self.cfg,
                                          hsa=self.hsa, gen=gen)
 
+    # -- multi-chip placement -----------------------------------------------
+
+    def _infer_param_axes(self, params: Params) -> Params:
+        """Logical axes matching ``params``' deployment state (master fp
+        tree vs PTQ-deployed tree) — used when no `ServeCell` was built."""
+        _, axes, paths = lm.init(self.cfg, jax.random.key(self.spec.seed),
+                                 abstract=True)
+        if not _is_master_tree(params):
+            axes = deploy.deployed_axes(axes, paths)
+        return axes
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
+
+    def cache_shardings(self, cache: Params) -> Params:
+        """NamedSharding tree for a cache pytree under the cell's policy
+        (`lm.cache_axes` through the divisibility-fallback rules engine).
+
+        Memoized by (treedef, leaf shapes) — the full resolution is a
+        Python tree walk, and per-token callers (`decode_step`) would
+        otherwise pay it on every emitted token.
+        """
+        leaves, treedef = jax.tree.flatten(cache)
+        key = (treedef, tuple(jnp.shape(l) for l in leaves))
+        sh = self._csh_cache.get(key)
+        if sh is None:
+            sh = shd.tree_shardings(cache, self._cache_axes, self.mesh,
+                                    self.policy)
+            self._csh_cache[key] = sh
+        return sh
+
+    def shard_cache(self, cache: Params) -> Params:
+        """Place a cache pytree on the mesh (no-op on a single device)."""
+        if self.mesh is None:
+            return cache
+        return jax.device_put(cache, self.cache_shardings(cache))
+
+    def _trace_ctx(self):
+        """Sharding context active while a sharded jit traces, so model-
+        internal logical constraints (`shd.constrain`) resolve on-mesh."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return shd.sharding_ctx(self.mesh, self.policy)
+
+    def _sjit(self, name, impl, in_shardings, out_shardings, *,
+              donate_argnums=()):
+        """`compat.jit_sharded` with a per-placement cache: one jit object
+        (hence one XLA compile cache) per distinct (name, shardings) key, so
+        varying cache shapes reuse jits whenever they resolve to the same
+        placement instead of re-tracing every call.
+
+        ``impl`` must take positional dynamic args only (pjit rejects kwargs
+        under explicit in_shardings) — static knobs are pre-bound with
+        `functools.partial` and folded into ``name``.
+        """
+        key = (name, donate_argnums, shd.shardings_key(in_shardings),
+               shd.shardings_key(out_shardings))
+        fn = self._sjits.get(key)
+        if fn is None:
+            fn = compat.jit_sharded(impl, in_shardings=in_shardings,
+                                    out_shardings=out_shardings,
+                                    donate_argnums=donate_argnums)
+            self._sjits[key] = fn
+        return fn
+
+    def _batch_shardings(self, batch: Params) -> Params:
+        """Input placement for a token batch: leading dim over the DP axes
+        where divisible (B=1 serving falls through to replicated)."""
+        return shd.shardings_from_specs(
+            shd.batch_specs(batch, self.mesh, self.policy), self.mesh)
+
+    def _sharded_prefill(self, batch: Params, cache_len: int,
+                         return_hidden: bool):
+        impl = functools.partial(self._prefill_impl, cache_len=cache_len,
+                                 return_hidden=return_hidden)
+        with self._trace_ctx():
+            out_abs = jax.eval_shape(impl, self.params, batch)
+        csh = self.cache_shardings(out_abs[1])
+        out_sh = (self._rep, csh) + ((self._rep,) if return_hidden else ())
+        fn = self._sjit(("prefill", cache_len, return_hidden), impl,
+                        (self.param_shardings, self._batch_shardings(batch)),
+                        out_sh)
+        with self._trace_ctx():
+            return fn(self.params, batch)
+
+    def _run_prefill_chunk(self, batch: Params, cache: Params):
+        """Chunk step dispatcher: sharded, the resident cache is a donated
+        arg with matching in/out shardings (in-place on-mesh append)."""
+        if self.mesh is None:
+            return self._prefill_chunk(self.params, batch, cache)
+        csh = self.cache_shardings(cache)
+        fn = self._sjit("prefill_chunk", self._prefill_chunk_impl,
+                        (self.param_shardings, self._batch_shardings(batch),
+                         csh),
+                        (self._rep, csh), donate_argnums=(2,))
+        with self._trace_ctx():
+            return fn(self.params, batch, cache)
+
+    def _run_loop(self, logits0, cache, key, gen: GenerationConfig):
+        if self.mesh is None:
+            return self._loop(self.params, logits0, cache, key, gen=gen)
+        csh = self.cache_shardings(cache)
+        fn = self._sjit(("loop", gen),
+                        functools.partial(self._loop_impl, gen=gen),
+                        (self.param_shardings, self._rep, csh, self._rep),
+                        (self._rep, self._rep, csh))
+        with self._trace_ctx():
+            return fn(self.params, logits0, cache, key)
+
+    def _run_resume_loop(self, tok0, cache, key, gen: GenerationConfig):
+        if self.mesh is None:
+            return self._resume_loop(self.params, tok0, cache, key, gen=gen)
+        cache = self.shard_cache(cache)       # e.g. fetched from host tier
+        csh = self.cache_shardings(cache)
+        fn = self._sjit(("resume_loop", gen),
+                        functools.partial(self._resume_loop_impl, gen=gen),
+                        (self.param_shardings, self._rep, csh, self._rep),
+                        (self._rep, self._rep, csh))
+        with self._trace_ctx():
+            return fn(self.params, tok0, cache, key)
+
+    def _run_spec_loop(self, logits0, hidden0, hist0, hist_len0, cache, key,
+                       gen: GenerationConfig):
+        if self.mesh is None:
+            return self._spec_loop(self.params, logits0, hidden0, hist0,
+                                   hist_len0, cache, key, gen=gen)
+        csh = self.cache_shardings(cache)
+        rep = self._rep
+        fn = self._sjit(("spec_loop", gen),
+                        functools.partial(self._spec_loop_impl, gen=gen),
+                        (self.param_shardings, rep, rep, rep, rep, csh, rep),
+                        (rep, rep, csh, rep, rep))
+        with self._trace_ctx():
+            return fn(self.params, logits0, hidden0, hist0, hist_len0,
+                      cache, key)
+
     # -- public API ---------------------------------------------------------
 
     @property
@@ -374,13 +572,22 @@ class InferenceEngine:
         else:
             cache_len = cache_len or s
             self.prefill_shape_keys.add(("prefill", s, cache_len))
+        if self.mesh is not None:
+            return self._sharded_prefill(batch, cache_len, return_hidden)
         return self._prefill(self.params, batch, cache_len=cache_len,
                              return_hidden=return_hidden)
 
     def decode_step(self, tokens: jax.Array, cache: Params
                     ) -> tuple[jax.Array, Params]:
         """One MVM step: tokens [B, 1] + warm cache -> (logits [B, V], cache)."""
-        return self._decode(self.params, tokens, cache)
+        if self.mesh is None:
+            return self._decode(self.params, tokens, cache)
+        csh = self.cache_shardings(cache)
+        fn = self._sjit("decode", self._decode_impl,
+                        (self.param_shardings, self._rep, csh),
+                        (self._rep, csh))
+        with self._trace_ctx():
+            return fn(self.params, tokens, cache)
 
     def begin_chunked_prefill(self, tokens: jax.Array, *, cache_len: int,
                               chunk_size: int = 32,
@@ -431,8 +638,7 @@ class InferenceEngine:
         t_prefill = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        tokens, lengths, _ = self._loop(self.params, logits, cache, key,
-                                        gen=gen)
+        tokens, lengths, _ = self._run_loop(logits, cache, key, gen)
         jax.block_until_ready(tokens)
         t_decode = time.perf_counter() - t0
         return GenerationResult(tokens=tokens, lengths=lengths,
@@ -458,8 +664,7 @@ class InferenceEngine:
         if key is None:
             key = jax.random.key(0)
         t0 = time.perf_counter()
-        tokens, lengths, _ = self._resume_loop(self.params, pending, cache,
-                                               key, gen=gen)
+        tokens, lengths, _ = self._run_resume_loop(pending, cache, key, gen)
         jax.block_until_ready(tokens)
         return GenerationResult(tokens=tokens, lengths=lengths,
                                 prefill_s=0.0,
@@ -506,9 +711,8 @@ class InferenceEngine:
         hist0 = jnp.zeros((b, s_in + n + spec.k + 1),
                           jnp.int32).at[:, :s_in].set(prompts)
         t0 = time.perf_counter()
-        tokens, lengths, _, steps, accepted = self._spec_loop(
-            self.params, logits, hidden, hist0, jnp.int32(s_in), cache, key,
-            gen=gen)
+        tokens, lengths, _, steps, accepted = self._run_spec_loop(
+            logits, hidden, hist0, jnp.int32(s_in), cache, key, gen)
         jax.block_until_ready(tokens)
         t_decode = time.perf_counter() - t0
         steps, accepted = int(steps), int(accepted)

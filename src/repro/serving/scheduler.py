@@ -111,7 +111,7 @@ class CachePool:
     def __init__(self, cfg, n_slots: int | None = None,
                  cache_len: int | None = None, *,
                  classes: Sequence[tuple[int, int]] | None = None,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None, policy=None):
         if classes is None:
             classes = [(n_slots if n_slots is not None else 4,
                         cache_len if cache_len is not None else 128)]
@@ -126,6 +126,17 @@ class CachePool:
         self.cache_len = self.classes[-1][1]      # largest class (compat)
         self.dtype = dtype
 
+        # Multi-chip pool: with a mesh, every class store lives sharded under
+        # `lm.cache_axes` (lane axis never sharded — it is addressing, not
+        # distribution), spill gathers a slot to host memory, and fetch
+        # re-places it under the same cache shardings bit-exactly.
+        from repro.runtime import sharding as shd
+        self.mesh = mesh
+        self.policy = (policy or shd.ShardingPolicy()) if mesh is not None \
+            else None
+        self._axes = lm.cache_axes(cfg)
+        self._store_shardings: dict[int, Params] = {}
+
         self._stores: dict[int, Params] = {}
         self._lanes: dict[int, list[int]] = {}          # clen -> free lanes
         self._lane_of: dict[int, tuple[int, int]] = {}  # sid -> (clen, lane)
@@ -137,8 +148,14 @@ class CachePool:
         self._next_sid = 0
         for n, clen in self.classes:
             template = lm.make_decode_cache(cfg, 1, clen, dtype)
-            self._stores[clen] = jax.tree.map(
+            store = jax.tree.map(
                 lambda x: jnp.zeros((n,) + x.shape, x.dtype), template)
+            if mesh is not None:
+                sh = shd.tree_shardings(store, shd.stacked_axes(self._axes),
+                                        mesh, self.policy)
+                store = jax.device_put(store, sh)
+                self._store_shardings[clen] = sh
+            self._stores[clen] = store
             self._lanes[clen] = list(range(n))
         # The spill target: host CPU memory.  On a CPU-only backend the
         # "transfer" is a same-device copy — the tiering logic (and its
@@ -147,9 +164,12 @@ class CachePool:
             self._host_device = jax.devices("cpu")[0]
         except RuntimeError:                             # no cpu backend
             self._host_device = None
-        leaf = jax.tree.leaves(self._stores[self.classes[0][1]])[0]
-        self._device = getattr(leaf, "device", None) or next(iter(
-            leaf.devices()))
+        if mesh is None:
+            leaf = jax.tree.leaves(self._stores[self.classes[0][1]])[0]
+            self._device = getattr(leaf, "device", None) or next(iter(
+                leaf.devices()))
+        else:
+            self._device = None          # fetch re-places by sharding tree
         self.spill_stats = {"spills": 0, "fetches": 0,
                             "bytes_to_host": 0, "bytes_to_device": 0}
 
@@ -171,8 +191,29 @@ class CachePool:
 
     @property
     def device_bytes(self) -> int:
-        """Bytes of the device-resident stacked stores (all lanes)."""
+        """Bytes of the device-resident stacked stores (all lanes, global
+        across the mesh — the whole distributed working set)."""
         return sum(pytree_nbytes(s) for s in self._stores.values())
+
+    @property
+    def device_bytes_per_device(self) -> int:
+        """Bytes ONE chip holds of the stacked stores: sharded leaves count
+        their local shard only — the number that must fit a single edge
+        device's DRAM.  Equals `device_bytes` on a single device."""
+        return sum(pytree_nbytes(s, per_device=True)
+                   for s in self._stores.values())
+
+    def slot_shardings(self, slot: int) -> Params:
+        """NamedSharding tree for one slot's batch-1 cache pytree (what
+        `fetch` restores a host-resident slot under)."""
+        from repro.runtime import sharding as shd
+        if self.mesh is None:
+            raise ValueError("slot_shardings needs a mesh-backed pool")
+        template = jax.eval_shape(
+            lambda: lm.make_decode_cache(self.cfg, 1, self.slot_len(slot),
+                                         self.dtype))
+        return shd.tree_shardings(template, self._axes, self.mesh,
+                                  self.policy)
 
     def fits(self, min_len: int) -> bool:
         """Could a request needing `min_len` cache positions EVER be placed?"""
@@ -250,8 +291,14 @@ class CachePool:
             raise ValueError(f"slot {slot} already spilled")
         clen, lane = self.locate(slot)
         cache = jax.tree.map(lambda x: x[lane], self._stores[clen])
-        host = jax.block_until_ready(
-            jax.device_put(cache, self._host_device))
+        if self.mesh is not None:
+            # Sharded slot: gather every leaf's shards into one host copy
+            # (device_get is the cross-sharding-safe gather on every jax
+            # this repo targets; device_put onto one device is not).
+            host = jax.device_get(cache)
+        else:
+            host = jax.block_until_ready(
+                jax.device_put(cache, self._host_device))
         del self._lane_of[slot]
         self._lanes[clen].append(lane)
         self._host[slot] = host
@@ -274,7 +321,12 @@ class CachePool:
         self._lane_of[slot] = (clen, lane)
         self.spill_stats["fetches"] += 1
         self.spill_stats["bytes_to_device"] += pytree_nbytes(host)
-        self.write(slot, jax.device_put(host, self._device))
+        if self.mesh is not None:
+            # Re-place under the slot's cache shardings — the round trip
+            # restores both the bits and the distribution.
+            self.write(slot, jax.device_put(host, self.slot_shardings(slot)))
+        else:
+            self.write(slot, jax.device_put(host, self._device))
 
     # -- stacked stores -----------------------------------------------------
 
@@ -289,6 +341,11 @@ class CachePool:
         return self._stores[clen]
 
     def set_store(self, clen: int, store: Params) -> None:
+        if self.mesh is not None:
+            # Keep the stacked-store placement invariant regardless of what
+            # sharding the producing computation's outputs resolved to (a
+            # no-op when they already match).
+            store = jax.device_put(store, self._store_shardings[clen])
         self._stores[clen] = store
 
     def write(self, slot: int, cache: Params) -> None:
@@ -310,9 +367,12 @@ class CachePool:
                     f"cache leaf shape {tuple(jnp.shape(c))} does not match "
                     f"slot {slot}'s class shape {tuple(p.shape[1:])} "
                     f"(cache_len {clen})")
-        self._stores[clen] = jax.tree.map(
-            lambda pool, c: pool.at[lane].set(c.astype(pool.dtype)),
-            store, cache)
+        new = jax.tree.map(
+            lambda pool, c: pool.at[lane].set(
+                jnp.asarray(c).astype(pool.dtype)), store, cache)
+        if self.mesh is not None:
+            new = jax.device_put(new, self._store_shardings[clen])
+        self._stores[clen] = new
 
 
 class RequestScheduler:
@@ -356,7 +416,9 @@ class RequestScheduler:
                  on_token: Callable[[int, int], None] | None = None):
         self.engine = engine
         self.gen = gen
-        self.pool = CachePool(engine.cfg, n_slots, cache_len, classes=classes)
+        self.pool = CachePool(engine.cfg, n_slots, cache_len, classes=classes,
+                              mesh=getattr(engine, "mesh", None),
+                              policy=getattr(engine, "policy", None))
         self.base_key = key if key is not None else jax.random.key(0)
         self.chunk_size = chunk_size
         self.host_spill = host_spill

@@ -1,0 +1,123 @@
+"""Shared serving-test harness.
+
+One place for the per-cache-architecture engine factory, the greedy
+token-identity loop, and the prompt builders that the serving test modules
+(`test_serving_chunked.py`, `test_serving_speculative.py`,
+`test_serving_spill.py`, `test_serving_sharded.py`) previously each
+copy-pasted.
+
+Importable two ways:
+
+  * as a pytest conftest — the ``cache_arch`` param fixture fans a test out
+    over every serving cache kind;
+  * as a plain module (``import conftest``) from the multi-device subprocess
+    tests, which run with this directory on PYTHONPATH — so the sharded
+    cross-arch identity checks reuse exactly the same loop instead of a
+    third copy.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import EngineSpec, InferenceEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# One arch per serving cache kind the pool / spill / rollback machinery
+# distinguishes: linear KV (dense GQA), sliding-window ring + mamba recurrent
+# (hybrid), O(1) retention state, O(1) ssm state, MoE experts.
+SERVING_ARCHS = ["qwen3-8b", "hymba-1.5b", "retnet-1.3b",
+                 "falcon-mamba-7b", "olmoe-1b-7b"]
+# Chunked-vs-monolithic identity excludes MoE: expert-capacity dropping is
+# per-dispatch, so chunk boundaries legitimately change routing there.
+CHUNKED_ARCHS = SERVING_ARCHS[:4]
+# Speculative identity swaps MoE-only olmoe for deepseek (MLA latent cache +
+# MoE + the MTP head the self-speculation drafter needs).
+SPECULATIVE_ARCHS = CHUNKED_ARCHS + ["deepseek-v3-671b"]
+
+_ENGINES: dict = {}
+
+
+def fp_engine(arch: str, *, mesh=None) -> InferenceEngine:
+    """Reduced fp-path engine, cached per (arch, mesh identity).
+
+    fp weights so identity checks isolate the machinery under test (chunk
+    boundaries, spill round trips, sharded dataflow) from per-tensor dynamic
+    activation-quantization granularity — a legitimate, finer quantization
+    difference, not an error (docs/serving.md).
+    """
+    key = (arch, id(mesh))
+    if key not in _ENGINES:
+        _ENGINES[key] = InferenceEngine.from_config(
+            arch, EngineSpec(reduced=True, quantize=False), mesh=mesh)
+    return _ENGINES[key]
+
+
+def prompt_ids(engine: InferenceEngine, s: int, seed: int = 1) -> jax.Array:
+    """Deterministic [1, S] i32 prompt in the engine's vocab."""
+    return jax.random.randint(jax.random.key(seed), (1, s), 1,
+                              engine.cfg.vocab_size, dtype=jnp.int32)
+
+
+def prompt_list(engine: InferenceEngine, s: int, seed: int = 1) -> list[int]:
+    """Deterministic length-S prompt as a python list (scheduler requests)."""
+    return prompt_ids(engine, s, seed)[0].tolist()
+
+
+def greedy_continue(engine: InferenceEngine, logits, cache, n: int
+                    ) -> list[int]:
+    """THE identity loop: greedy per-token decode from a warm
+    (logits, cache) pair — the oracle every admission-path refactor
+    (chunked, bucketed, sharded, spilled) is compared against."""
+    toks = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for _ in range(n):
+        toks.append(int(tok[0, 0]))
+        logits, cache = engine.decode_step(tok, cache)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return toks
+
+
+def _tokens_of(x):
+    if hasattr(x, "tokens"):                       # GenerationResult
+        x = x.tokens
+    return np.asarray(jax.device_get(x))
+
+
+def assert_tokens_identical(got, want, msg: str = "") -> None:
+    """Greedy token-identity assertion over lists / arrays /
+    `GenerationResult`s — the single spelling of "this refactor changed
+    nothing the user can see"."""
+    np.testing.assert_array_equal(_tokens_of(got), _tokens_of(want),
+                                  err_msg=msg)
+
+
+@pytest.fixture(params=SERVING_ARCHS)
+def cache_arch(request) -> str:
+    """Fan a test out over every serving cache architecture."""
+    return request.param
+
+
+def run_in_devices(code: str, devices: int = 4, timeout: int = 1800) -> str:
+    """Run python code in a subprocess with N virtual CPU devices.
+
+    The flag must be set before any jax init, so multi-device tests cannot
+    run in the main pytest process (it keeps 1 device).  The subprocess gets
+    this directory on PYTHONPATH so ``import conftest`` reuses this harness.
+    """
+    paths = [os.path.join(REPO, "src"), os.path.join(REPO, "tests")]
+    if os.environ.get("PYTHONPATH"):
+        paths.append(os.environ["PYTHONPATH"])
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.pathsep.join(paths))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout

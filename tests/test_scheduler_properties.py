@@ -1,0 +1,174 @@
+"""Property tests for `RequestScheduler`/`CachePool` invariants: random
+acquire/release/spill/fetch sequences never leak lanes or host copies,
+admission never exceeds class capacity, and queue order is FIFO within a
+priority level.  Skips without hypothesis (pip install -e .[test])."""
+
+import jax
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests skip without it
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.serving import (CachePool, EngineSpec, GenerationConfig,
+                           InferenceEngine, Request, RequestScheduler)
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+# RetNet: O(1) retention state, so per-example pool construction is cheap.
+_CFG = configs.get_config("retnet-1.3b").reduced()
+_ENGINE: list = []
+
+
+def engine():
+    if not _ENGINE:
+        _ENGINE.append(InferenceEngine.from_config(
+            "retnet-1.3b", EngineSpec(reduced=True, quantize=False)))
+    return _ENGINE[0]
+
+
+# -- CachePool: slot accounting under random op sequences ---------------------
+
+# An op is (kind, value): acquire with a min_len, or release/spill/fetch of
+# the i-th live/spilled slot (modulo the current population).
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["acquire", "release", "spill", "fetch"]),
+              st.integers(min_value=0, max_value=40)),
+    min_size=1, max_size=40)
+
+
+@settings(**SETTINGS)
+@given(ops=_OPS)
+def test_pool_never_leaks_or_overadmits(ops):
+    """After ANY op sequence: free lanes + device residents == n_slots per
+    class, host residents match the model, `residency` agrees, and acquire
+    never hands out a lane in a full or too-small class."""
+    classes = [(2, 8), (1, 32)]
+    pool = CachePool(_CFG, classes=classes)
+    device: dict[int, int] = {}            # sid -> clen (model state)
+    host: dict[int, int] = {}
+
+    for kind, v in ops:
+        if kind == "acquire":
+            need = v
+            sid = pool.acquire(need)
+            fits = [c for n, c in classes if c >= need]
+            expect_free = any(
+                sum(1 for cl in device.values() if cl == c) < dict(
+                    (cc, nn) for nn, cc in classes)[c]
+                for c in fits)
+            if sid is None:
+                assert not expect_free      # only refuses when really full
+            else:
+                clen = pool.slot_len(sid)
+                assert clen >= need and clen in fits
+                device[sid] = clen
+        elif kind == "release" and (device or host):
+            sid = sorted(list(device) + list(host))[v % (len(device)
+                                                         + len(host))]
+            pool.release(sid)
+            device.pop(sid, None)
+            host.pop(sid, None)
+        elif kind == "spill" and device:
+            sid = sorted(device)[v % len(device)]
+            pool.spill(sid)
+            host[sid] = device.pop(sid)
+        elif kind == "fetch" and host:
+            sid = sorted(host)[v % len(host)]
+            clen = host[sid]
+            busy = sum(1 for cl in device.values() if cl == clen)
+            cap = dict((c, n) for n, c in classes)[clen]
+            if busy < cap:
+                pool.fetch(sid)
+                device[sid] = host.pop(sid)
+            else:
+                with pytest.raises(ValueError, match="no free lane"):
+                    pool.fetch(sid)
+
+        # Invariants after every op: residency sums match the model.
+        by_class = {c: n for n, c in classes}
+        assert pool.free_slots == pool.n_slots - len(device)
+        assert pool.host_resident == len(host)
+        for sid, clen in device.items():
+            assert pool.residency(sid) == "device"
+            assert pool.slot_len(sid) == clen
+        for sid, clen in host.items():
+            assert pool.residency(sid) == "host"
+        for c, n in by_class.items():
+            assert sum(1 for cl in device.values() if cl == c) <= n
+
+
+@settings(**SETTINGS)
+@given(needs=st.lists(st.integers(min_value=0, max_value=32),
+                      min_size=1, max_size=12))
+def test_pool_never_admits_over_capacity(needs):
+    """Unbounded acquire pressure: per-class admissions never exceed the
+    class's lane count, and every refusal is a genuine full-pool state."""
+    classes = [(2, 8), (2, 32)]
+    pool = CachePool(_CFG, classes=classes)
+    admitted: list[int] = []
+    for need in needs:
+        sid = pool.acquire(need)
+        if sid is not None:
+            admitted.append(pool.slot_len(sid))
+    for n, clen in classes:
+        assert admitted.count(clen) <= n
+    assert pool.free_slots == pool.n_slots - len(admitted)
+
+
+# -- RequestScheduler: priority queue + drain invariants ----------------------
+
+
+@settings(**SETTINGS)
+@given(priorities=st.lists(st.integers(min_value=-2, max_value=2),
+                           min_size=1, max_size=16))
+def test_submit_is_fifo_within_priority(priorities):
+    """Queue order after random submits: priorities non-increasing, and uids
+    strictly increasing (arrival order) within each priority level."""
+    sched = RequestScheduler(engine(), n_slots=1, cache_len=16,
+                             gen=GenerationConfig(max_new_tokens=2))
+    for uid, pri in enumerate(priorities):
+        sched.submit(Request(uid=uid, prompt=[2, 3]), priority=pri)
+    queue = [(r.priority, r.uid) for r in sched._queue]
+    assert [p for p, _ in queue] == sorted((p for p, _ in queue),
+                                           reverse=True)
+    for level in set(priorities):
+        uids = [u for p, u in queue if p == level]
+        assert uids == sorted(uids)
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_scheduler_random_submit_cancel_preempt_never_leaks(data):
+    """Random submit/cancel/priority/preempt traffic, then drain: every
+    non-cancelled request finishes with its full budget, every lane is free,
+    nothing stays parked in the host tier, and spills == fetches + dropped
+    (cancelled-while-parked) entries."""
+    n = data.draw(st.integers(min_value=2, max_value=5), label="n_requests")
+    pris = data.draw(st.lists(st.integers(min_value=0, max_value=3),
+                              min_size=n, max_size=n), label="priorities")
+    cancel = data.draw(st.sets(st.integers(min_value=0, max_value=n - 1),
+                               max_size=2), label="cancel")
+    sched = RequestScheduler(engine(), classes=[(1, 8)],
+                             gen=GenerationConfig(max_new_tokens=3),
+                             chunk_size=4, host_spill=True)
+    for uid in range(n):
+        sched.submit(Request(uid=uid, prompt=[2 + uid, 3, 4]),
+                     priority=pris[uid])
+        sched.step()                     # interleave admission with arrivals
+    for uid in cancel:
+        sched.cancel(uid)
+    res = sched.run()
+
+    assert sched.pool.free_slots == sched.pool.n_slots      # no lane leak
+    assert sched.pool.host_resident == 0                    # no parked leak
+    assert sched.pending == 0
+    for uid in range(n):
+        if uid in cancel and uid not in res:
+            continue                     # cancelled before any admission
+        assert uid in res
+        if not res[uid].cancelled:
+            assert len(res[uid].tokens) == 3, uid
+    st_ = sched.pool.spill_stats
+    assert st_["fetches"] <= st_["spills"]
+    assert sched.stats["resumed"] <= sched.stats["preempted"]

@@ -6,42 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import (CHUNKED_ARCHS as ARCHS, assert_tokens_identical,
+                      fp_engine, greedy_continue, prompt_ids as _prompt)
 
 from repro.serving import (CachePool, EngineSpec, GenerationConfig,
                            InferenceEngine, Request, RequestScheduler,
                            bucket_length, chunk_schedule)
-
-# One arch per serving cache kind: linear KV (dense GQA), sliding-window
-# ring + mamba (hybrid), O(1) retention state, O(1) ssm state.
-ARCHS = ["qwen3-8b", "hymba-1.5b", "retnet-1.3b", "falcon-mamba-7b"]
-
-_ENGINES: dict = {}
-
-
-def fp_engine(arch):
-    """fp-path engines: identity checks isolate the dataflow refactor from
-    per-tensor dynamic activation-quantization granularity (each chunk gets
-    its own A8 scale, a legitimate — finer — quantization difference)."""
-    if arch not in _ENGINES:
-        _ENGINES[arch] = InferenceEngine.from_config(
-            arch, EngineSpec(reduced=True, quantize=False))
-    return _ENGINES[arch]
-
-
-def greedy_continue(engine, logits, cache, n):
-    """Greedy per-token decode from a warm (logits, cache) pair."""
-    toks = []
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    for _ in range(n):
-        toks.append(int(tok[0, 0]))
-        logits, cache = engine.decode_step(tok, cache)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    return toks
-
-
-def _prompt(engine, s, seed=1):
-    return jax.random.randint(jax.random.key(seed), (1, s), 1,
-                              engine.cfg.vocab_size, dtype=jnp.int32)
 
 
 @pytest.mark.parametrize("arch", ARCHS)
@@ -57,8 +27,8 @@ def test_chunked_prefill_token_identity(arch):
                                            chunk_size=4)
     np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_c),
                                rtol=2e-4, atol=2e-4)
-    assert (greedy_continue(engine, lg_c, cache_c, n)
-            == greedy_continue(engine, lg_m, cache_m, n)), arch
+    assert_tokens_identical(greedy_continue(engine, lg_c, cache_c, n),
+                            greedy_continue(engine, lg_m, cache_m, n), arch)
 
 
 @pytest.mark.parametrize("arch", ARCHS)
@@ -73,8 +43,8 @@ def test_bucketed_prefill_token_identity(arch):
     lg_b, cache_b = engine.prefill(prompts, cache_len=s + n, bucket=True)
     np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_b),
                                rtol=2e-4, atol=2e-4)
-    assert (greedy_continue(engine, lg_b, cache_b, n)
-            == greedy_continue(engine, lg_m, cache_m, n)), arch
+    assert_tokens_identical(greedy_continue(engine, lg_b, cache_b, n),
+                            greedy_continue(engine, lg_m, cache_m, n), arch)
 
 
 def test_hybrid_full_attention_exact_to_window_boundary():
@@ -89,8 +59,8 @@ def test_hybrid_full_attention_exact_to_window_boundary():
     lg_m, cache_m = engine.prefill(prompts, cache_len=w + n)
     lg_c, cache_c = engine.prefill_chunked(prompts, cache_len=w + n,
                                            chunk_size=8)
-    assert (greedy_continue(engine, lg_c, cache_c, n)
-            == greedy_continue(engine, lg_m, cache_m, n))
+    assert_tokens_identical(greedy_continue(engine, lg_c, cache_c, n),
+                            greedy_continue(engine, lg_m, cache_m, n))
 
 
 def test_windowed_ring_chunked_beyond_window():
@@ -152,7 +122,7 @@ def test_chunked_prefill_matches_generate_quantized():
     want = engine.generate(prompts, gen).tokens[0].tolist()
     lg, cache = engine.prefill_chunked(prompts, cache_len=11 + 6,
                                        chunk_size=4)
-    assert greedy_continue(engine, lg, cache, 6) == want
+    assert_tokens_identical(greedy_continue(engine, lg, cache, 6), want)
 
 
 def test_bucket_and_chunk_ladders():
@@ -213,7 +183,7 @@ def test_long_admission_overlaps_resident_decode():
 
     res = sched.run()
     want = engine.generate(jnp.asarray([long_prompt], jnp.int32), gen)
-    assert res[1].tokens == want.tokens[0].tolist()
+    assert_tokens_identical(res[1].tokens, want.tokens[0])
 
 
 def test_paged_pool_classes_and_admission_fit():

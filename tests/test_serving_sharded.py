@@ -1,0 +1,177 @@
+"""Sharded multi-chip serving: cross-arch identity vs. the single-device
+engine.
+
+`InferenceEngine.from_config(mesh=...)` must be a pure *distribution* change:
+on a 2x2 (data, model) mesh of virtual host devices, every generate path —
+plain fused loop, chunked prefill, speculative draft/verify, and scheduler
+preempt/resume through the host spill tier — is greedy token-identical to
+the single-device engine per cache architecture, while params stay under the
+`ServeCell` shardings and cache leaves stay under `cache_shardings`
+throughout decode (is_equivalent_to checks on every leaf, the
+`jax.debug.visualize_array_sharding` assertion made mechanical).
+
+All tests run in subprocesses (`conftest.run_in_devices`): the
+``--xla_force_host_platform_device_count`` flag must precede jax init, and
+the main pytest process keeps its single device.  One subprocess per arch
+covers every path, so the two engines (and jax itself) are built once per
+arch instead of once per (arch, path).  The identity loop itself lives in
+`tests/conftest.py` — the same harness the in-process serving modules use —
+imported by the subprocess via PYTHONPATH.
+"""
+
+_PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+import conftest
+from repro.launch.mesh import make_serving_mesh
+from repro.runtime import sharding as shd
+from repro.serving import GenerationConfig, Request, RequestScheduler, \
+    SpeculativeConfig
+
+mesh = make_serving_mesh("2,2")
+assert mesh.size == 4
+
+
+def engines(arch):
+    return conftest.fp_engine(arch), conftest.fp_engine(arch, mesh=mesh)
+
+
+def assert_on_mesh(engine, cache, what):
+    bad = shd.sharding_mismatches(cache, engine.cache_shardings(cache))
+    assert not bad, (what, bad)
+"""
+
+
+def test_sharded_identity_all_paths(cache_arch):
+    """Per cache arch: plain generate, chunked prefill, bucketed prefill,
+    speculative decode, and scheduler preempt/resume are all greedy
+    token-identical between the sharded and the single-device engine, with
+    params/cache pinned on-mesh throughout."""
+    from conftest import run_in_devices
+    out = run_in_devices(_PRELUDE + f"""
+arch = {cache_arch!r}
+single, shardy = engines(arch)
+gen = GenerationConfig(max_new_tokens=6)
+prompts = conftest.prompt_ids(single, 11)
+
+# -- plain fused-loop generate + the on-mesh invariant ----------------------
+conftest.assert_tokens_identical(shardy.generate(prompts, gen),
+                                 single.generate(prompts, gen), arch)
+bad = shd.sharding_mismatches(shardy.params, shardy.param_shardings)
+assert not bad, bad                       # params under ServeCell shardings
+assert shardy.cell is not None and shardy.cell.mesh is mesh
+logits, cache = shardy.prefill(prompts, cache_len=11 + 6)
+assert_on_mesh(shardy, cache, "prefill")
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+for i in range(3):                        # cache stays on-mesh while decoding
+    logits, cache = shardy.decode_step(tok, cache)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert_on_mesh(shardy, cache, f"decode step {{i}}")
+print("PLAIN_OK", arch)
+
+# -- chunked prefill (same ladder both sides; MoE chunk boundaries match) ---
+p2 = conftest.prompt_ids(single, 11, seed=2)
+lg_s, cache_s = single.prefill_chunked(p2, cache_len=17, chunk_size=4)
+lg_m, cache_m = shardy.prefill_chunked(p2, cache_len=17, chunk_size=4)
+assert_on_mesh(shardy, cache_m, "chunked prefill")
+conftest.assert_tokens_identical(
+    conftest.greedy_continue(shardy, lg_m, cache_m, 6),
+    conftest.greedy_continue(single, lg_s, cache_s, 6), arch)
+print("CHUNKED_OK", arch)
+
+# -- bucketed prefill (pad-and-mask ladder, traced prompt_len) --------------
+lg_s, cache_s = single.prefill(p2, cache_len=17, bucket=True)
+lg_m, cache_m = shardy.prefill(p2, cache_len=17, bucket=True)
+assert_on_mesh(shardy, cache_m, "bucketed prefill")
+conftest.assert_tokens_identical(
+    conftest.greedy_continue(shardy, lg_m, cache_m, 6),
+    conftest.greedy_continue(single, lg_s, cache_s, 6), arch)
+print("BUCKET_OK", arch)
+
+# -- speculative draft/verify over the sharded cache ------------------------
+sgen = GenerationConfig(max_new_tokens=10)
+spec = SpeculativeConfig(k=2)
+for seed, sp in [(0, jnp.asarray([[5, 9, 13] * 4], jnp.int32)),
+                 (1, conftest.prompt_ids(single, 7))]:
+    a = single.generate(sp, sgen, speculative=spec)
+    b = shardy.generate(sp, sgen, speculative=spec)
+    conftest.assert_tokens_identical(b, a, f"{{arch}} seed {{seed}}")
+    assert b.verify_steps >= 1
+print("SPEC_OK", arch)
+
+# -- scheduler preempt/resume through the host spill tier -------------------
+p0 = conftest.prompt_list(single, 8, seed=11)
+p1 = conftest.prompt_list(single, 8, seed=12)
+
+
+def drain(engine, preempt):
+    sched = RequestScheduler(engine, classes=[(1, 8 + 6)], gen=gen,
+                             chunk_size=8, host_spill=preempt)
+    sched.submit(Request(uid=0, prompt=p0))
+    if preempt:
+        while not sched._active:
+            sched.step()
+        sched.step()
+        sched.submit(Request(uid=1, prompt=p1), priority=5)
+    else:
+        sched.submit(Request(uid=1, prompt=p1))
+    res = sched.run()
+    return {{u: r.tokens for u, r in res.items()}}, sched
+
+
+base, _ = drain(single, False)
+pre, sched = drain(shardy, True)
+assert sched.stats["preempted"] >= 1
+assert sched.stats["resumed"] == sched.stats["preempted"]
+assert sched.pool.host_resident == 0
+assert pre == base, (arch, pre, base)
+for clen in dict(sched.pool.classes).values():
+    bad = shd.sharding_mismatches(sched.pool.get_store(clen),
+                                  sched.pool._store_shardings[clen])
+    assert not bad, (arch, bad)           # pool stores still on-mesh
+print("PREEMPT_OK", arch)
+""")
+    for mark in ("PLAIN_OK", "CHUNKED_OK", "BUCKET_OK", "SPEC_OK",
+                 "PREEMPT_OK"):
+        assert mark in out, (cache_arch, mark, out[-2000:])
+
+
+def test_sharded_resume_generate_warm_identity():
+    """`resume_generate` re-enters the sharded fused loop from a pending
+    token + warm on-mesh cache: same stream as the single-device generate,
+    no new prefill shapes."""
+    from conftest import run_in_devices
+    out = run_in_devices(_PRELUDE + """
+single, shardy = engines("retnet-1.3b")
+gen = GenerationConfig(max_new_tokens=6)
+prompts = conftest.prompt_ids(single, 9, seed=31)
+want = single.generate(prompts, gen)
+logits, cache = shardy.prefill(prompts, cache_len=9 + 6)
+shapes_before = set(shardy.prefill_shape_keys)
+tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+got = shardy.resume_generate(tok0, cache, gen)
+conftest.assert_tokens_identical(got, want)
+assert shardy.prefill_shape_keys == shapes_before
+print("SHARDED_RESUME_OK")
+""")
+    assert "SHARDED_RESUME_OK" in out
+
+
+def test_sharded_quantized_deployment_serves():
+    """The paper deployment (W8A8 prefill / MXINT4 decode) also runs on the
+    mesh: deployed-quantized param tree placed under the cell's (deployed)
+    shardings, sharded generate == single-device quantized generate."""
+    from conftest import run_in_devices
+    out = run_in_devices(_PRELUDE + """
+from repro.serving import EngineSpec, InferenceEngine
+single = InferenceEngine.from_config("retnet-1.3b", EngineSpec(reduced=True))
+shardy = InferenceEngine.from_config("retnet-1.3b", EngineSpec(reduced=True),
+                                     mesh=mesh)
+bad = shd.sharding_mismatches(shardy.params, shardy.param_shardings)
+assert not bad, bad
+gen = GenerationConfig(max_new_tokens=6)
+prompts = conftest.prompt_ids(single, 11)
+conftest.assert_tokens_identical(shardy.generate(prompts, gen),
+                                 single.generate(prompts, gen))
+print("SHARDED_QUANT_OK")
+""")
+    assert "SHARDED_QUANT_OK" in out

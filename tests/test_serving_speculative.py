@@ -7,34 +7,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import (SPECULATIVE_ARCHS as ARCHS, assert_tokens_identical,
+                      fp_engine, prompt_ids as _prompt)
 
 from repro.models import lm
 from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
                            Request, RequestScheduler, SpeculativeConfig,
                            ngram_propose)
-
-# One arch per serving cache kind the rollback machinery distinguishes:
-# linear KV (dense GQA), sliding-window ring + mamba recurrent (hybrid),
-# O(1) retention state, pure mamba, and MLA latents + MoE (deepseek).
-ARCHS = ["qwen3-8b", "hymba-1.5b", "retnet-1.3b", "falcon-mamba-7b",
-         "deepseek-v3-671b"]
-
-_ENGINES: dict = {}
-
-
-def fp_engine(arch):
-    """fp-path engines: identity checks isolate the speculative machinery
-    from the W8A8-verify vs MXINT4-decode format gap (a quantization
-    granularity difference, not an error — see docs/serving.md)."""
-    if arch not in _ENGINES:
-        _ENGINES[arch] = InferenceEngine.from_config(
-            arch, EngineSpec(reduced=True, quantize=False))
-    return _ENGINES[arch]
-
-
-def _prompt(engine, s, seed=1):
-    return jax.random.randint(jax.random.key(seed), (1, s), 1,
-                              engine.cfg.vocab_size, dtype=jnp.int32)
 
 
 @pytest.mark.parametrize("arch", ARCHS)
@@ -50,8 +29,7 @@ def test_greedy_token_identity_ngram(arch):
         base = engine.generate(prompt, gen)
         spec = engine.generate(prompt, gen,
                                speculative=SpeculativeConfig(k=3))
-        np.testing.assert_array_equal(np.asarray(base.tokens),
-                                      np.asarray(spec.tokens), err_msg=arch)
+        assert_tokens_identical(spec, base, arch)
         assert spec.lengths.tolist() == base.lengths.tolist()
         assert spec.verify_steps >= 1
         assert spec.drafted == spec.verify_steps * 3
@@ -67,8 +45,7 @@ def test_greedy_token_identity_mtp_drafter():
     base = engine.generate(prompts, gen)
     spec = engine.generate(
         prompts, gen, speculative=SpeculativeConfig(k=2, drafter="mtp"))
-    np.testing.assert_array_equal(np.asarray(base.tokens),
-                                  np.asarray(spec.tokens))
+    assert_tokens_identical(spec, base)
 
 
 def test_mtp_drafter_requires_mtp_head():
@@ -97,8 +74,7 @@ def test_greedy_identity_batched_lockstep():
         [jnp.asarray([[5, 9, 13] * 3], jnp.int32), _prompt(engine, 9)], 0)
     base = engine.generate(prompts, gen)
     spec = engine.generate(prompts, gen, speculative=SpeculativeConfig(k=3))
-    np.testing.assert_array_equal(np.asarray(base.tokens),
-                                  np.asarray(spec.tokens))
+    assert_tokens_identical(spec, base)
 
 
 def test_stop_token_inside_accepted_block():
@@ -112,8 +88,7 @@ def test_stop_token_inside_accepted_block():
                            pad_token_id=-1)
     base = engine.generate(prompts, gen)
     spec = engine.generate(prompts, gen, speculative=SpeculativeConfig(k=4))
-    np.testing.assert_array_equal(np.asarray(base.tokens),
-                                  np.asarray(spec.tokens))
+    assert_tokens_identical(spec, base)
     assert spec.lengths.tolist() == base.lengths.tolist()
 
 
@@ -131,7 +106,7 @@ def test_stochastic_speculative_is_deterministic_under_fixed_key():
     a = engine.generate(prompts, gen, key=jax.random.key(7)).tokens
     b = engine.generate(prompts, gen, key=jax.random.key(7)).tokens
     c = engine.generate(prompts, gen, key=jax.random.key(8)).tokens
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert_tokens_identical(a, b)
     assert not bool(jnp.all(a == c))
 
 
@@ -216,7 +191,7 @@ def test_scheduler_speculative_matches_engine_generate():
     for uid, p in prompts.items():
         want = engine.generate(jnp.asarray([p], jnp.int32),
                                plain).tokens[0].tolist()
-        assert res[uid].tokens == want, (uid, res[uid].tokens, want)
+        assert_tokens_identical(res[uid].tokens, want, str(uid))
         assert res[uid].verify_steps >= 1
         assert [t for u, t in streamed if u == uid] == want
     assert sched.stats["verify_steps"] == sum(
@@ -235,7 +210,7 @@ def test_scheduler_speculative_budget_truncates_block():
     res = sched.run()
     want = engine.generate(jnp.asarray([[2, 3, 4]], jnp.int32),
                            GenerationConfig(max_new_tokens=5))
-    assert res[0].tokens == want.tokens[0].tolist()
+    assert_tokens_identical(res[0].tokens, want.tokens[0])
     assert len(res[0].tokens) == 5
 
 

@@ -8,30 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import (assert_tokens_identical, fp_engine,
+                      prompt_list as _prompt_list, run_in_devices)
 
 from repro.models import lm
 from repro.serving import (CachePool, EngineSpec, GenerationConfig,
                            InferenceEngine, Request, RequestScheduler,
                            SpeculativeConfig, pytree_nbytes)
-
-# One arch per serving cache kind: linear KV (dense GQA), sliding-window
-# ring + mamba (hybrid), O(1) retention state, O(1) ssm state, MoE experts.
-ARCHS = ["qwen3-8b", "hymba-1.5b", "retnet-1.3b", "falcon-mamba-7b",
-         "olmoe-1b-7b"]
-
-_ENGINES: dict = {}
-
-
-def fp_engine(arch):
-    if arch not in _ENGINES:
-        _ENGINES[arch] = InferenceEngine.from_config(
-            arch, EngineSpec(reduced=True, quantize=False))
-    return _ENGINES[arch]
-
-
-def _prompt_list(engine, s, seed=1):
-    return jax.random.randint(jax.random.key(seed), (s,), 1,
-                              engine.cfg.vocab_size, dtype=jnp.int32).tolist()
 
 
 def _slot_snapshot(pool, sid):
@@ -42,12 +25,11 @@ def _slot_snapshot(pool, sid):
 # -- spill / fetch round trip ------------------------------------------------
 
 
-@pytest.mark.parametrize("arch", ARCHS)
-def test_spill_fetch_roundtrip_bit_exact(arch):
+def test_spill_fetch_roundtrip_bit_exact(cache_arch):
     """A slot's full cache pytree (KV/rings, recurrent state, RoPE angle
     memory, position) survives the host round trip bit-exactly, and the
     lane is genuinely free while the slot is host-resident."""
-    engine = fp_engine(arch)
+    engine = fp_engine(cache_arch)
     pool = CachePool(engine.cfg, classes=[(2, 16)])
     _, cache = engine.prefill(jnp.asarray([_prompt_list(engine, 10)],
                                           jnp.int32), cache_len=16)
@@ -110,12 +92,11 @@ def _drain(engine, arch_gen, preempt: bool, *, classes, chunk_size=8,
     return {u: r.tokens for u, r in res.items()}, sched
 
 
-@pytest.mark.parametrize("arch", ARCHS)
-def test_preemption_resume_token_identity(arch):
+def test_preemption_resume_token_identity(cache_arch):
     """Greedy output with host-spill preemption enabled is token-identical
     to the no-spill run for every cache architecture: the preempted lane's
     cache + sampling key + pending token survive the host round trip."""
-    engine = fp_engine(arch)
+    engine = fp_engine(cache_arch)
     gen = GenerationConfig(max_new_tokens=6)
     p0 = _prompt_list(engine, 8, seed=11)
     p1 = _prompt_list(engine, 8, seed=12)
@@ -127,7 +108,7 @@ def test_preemption_resume_token_identity(arch):
     assert pre_sched.stats["preempted"] >= 1        # it really happened
     assert pre_sched.stats["resumed"] == pre_sched.stats["preempted"]
     assert pre_sched.pool.host_resident == 0        # nothing left parked
-    assert pre == base, arch
+    assert pre == base, cache_arch
 
 
 def test_preemption_resume_identity_speculative():
@@ -250,7 +231,7 @@ def test_engine_resume_generate_warm_identity():
     shapes_before = set(engine.prefill_shape_keys)
     tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
     got = engine.resume_generate(tok0, cache, gen)
-    assert got.tokens.tolist() == want.tolist()
+    assert_tokens_identical(got, want)
     assert got.prefill_s == 0.0
     assert engine.prefill_shape_keys == shapes_before
 
@@ -337,3 +318,51 @@ def test_submit_rejects_never_fitting_request_and_run_never_throws():
     res = sched.run()                                # drains untouched
     assert sorted(res) == [0, 2]
     assert all(len(r.tokens) == 4 for r in res.values())
+
+
+# -- sharded spill round trip (multi-device subprocess) -----------------------
+
+
+def test_sharded_spill_roundtrip_restores_shardings():
+    """On a 2x2 mesh, `spill` gathers a *sharded* slot pytree to host and
+    `fetch` re-places it bit-exactly under the original cache shardings, for
+    every cache architecture; per-device byte accounting stays below the
+    global footprint.  Subprocess: the virtual-device flag must precede any
+    jax init (the main pytest process keeps 1 device)."""
+    out = run_in_devices("""
+import jax, numpy as np, jax.numpy as jnp
+import conftest
+from repro.launch.mesh import make_serving_mesh
+from repro.runtime import sharding as shd
+from repro.serving import CachePool
+
+mesh = make_serving_mesh("2,2")
+for arch in conftest.SERVING_ARCHS:
+    engine = conftest.fp_engine(arch, mesh=mesh)
+    pool = CachePool(engine.cfg, classes=[(2, 16)], mesh=mesh,
+                     policy=engine.policy)
+    _, cache = engine.prefill(conftest.prompt_ids(engine, 10), cache_len=16)
+    sid = pool.acquire(12)
+    pool.write(sid, cache)
+    clen, lane = pool.locate(sid)
+    before = jax.tree.map(lambda x: np.asarray(x[lane]), pool.get_store(clen))
+
+    pool.spill(sid)
+    assert pool.residency(sid) == "host" and pool.host_bytes > 0, arch
+    pool.fetch(sid)
+    clen, lane = pool.locate(sid)
+    after = jax.tree.map(lambda x: np.asarray(x[lane]), pool.get_store(clen))
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, b, err_msg=arch)   # bit-exact
+
+    bad = shd.sharding_mismatches(pool.get_store(clen),
+                                  pool._store_shardings[clen])
+    assert not bad, (arch, bad)                    # shardings restored
+    assert 0 < pool.device_bytes_per_device < pool.device_bytes, arch
+    st = pool.spill_stats
+    assert st["bytes_to_host"] == st["bytes_to_device"] > 0, arch
+    print("ARCH_OK", arch)
+print("SHARDED_SPILL_OK")
+""")
+    assert "SHARDED_SPILL_OK" in out
+    assert out.count("ARCH_OK") == 5
