@@ -4,7 +4,7 @@
 PY ?= python
 
 .PHONY: test test-fast install serve-demo smoke-host-spill smoke-sharded \
-	bench-serving
+	bench-serving lint-invariants audit-program
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -40,3 +40,18 @@ smoke-sharded:
 # compiles triggered, decode-stall steps) for PR-over-PR comparison.
 bench-serving:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_serving
+
+# Layer-1 invariant lint: AST rules over src/repro (compat-api routing, no
+# bare asserts, no host syncs on the hot path, no module-scope jnp work).
+# Fast — no jax import.  docs/analysis.md documents the rules.
+lint-invariants:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis lint
+
+# Layer-2 program audit: compile the serving hot path and check the lowered
+# programs (recompile ladder, cache donation, transfer-free decode loop,
+# ServeCell sharding realization).  The 4 virtual devices give the sharding
+# audit a real 2x2 (data, model) mesh; the flag must precede jax init.
+audit-program:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis audit \
+		--mesh 2,2

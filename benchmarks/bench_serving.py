@@ -118,6 +118,12 @@ def run_scheduler() -> dict:
         "steps": sched.stats["steps"],
         "prefill_chunks": sched.stats["prefill_chunks"],
         "emitted": sched.stats["emitted"],
+        # Compiled-signature census per jit entry point (engine roots +
+        # the scheduler's pool steps) — the raw numbers behind the
+        # `python -m repro.analysis audit` recompile bound, kept in the
+        # trajectory so a signature-count regression shows up PR-over-PR.
+        "compiled_signatures": {**engine.compile_counts(),
+                                **sched.compile_counts()},
     }
 
 

@@ -1,0 +1,21 @@
+"""`repro.analysis` — machine-checked serving invariants.
+
+Two layers (docs/analysis.md):
+
+  * **AST lint** (`lint`, `rules`): repo conventions the serving stack's
+    perf/correctness arguments rely on — compat-funneled jax APIs, typed
+    exceptions, no host syncs in the jitted core, no module-scope compute.
+  * **Program audit** (`program_audit`): instantiate a tiny
+    `InferenceEngine` and inspect its *lowered/compiled* programs — bounded
+    compile count from the bucket ladder, honored cache donation, a
+    host-callback-free decode while_loop, and ServeCell sharding plans
+    actually realized on the mesh.
+
+CLI: ``python -m repro.analysis lint`` / ``python -m repro.analysis audit``
+(`make lint-invariants` / `make audit-program`).
+"""
+
+from repro.analysis.rules import ALL_RULES, Finding, lint_source  # noqa: F401
+from repro.analysis.lint import LintReport, lint_tree             # noqa: F401
+
+__all__ = ["ALL_RULES", "Finding", "lint_source", "LintReport", "lint_tree"]

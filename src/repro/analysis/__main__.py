@@ -1,0 +1,77 @@
+"""CLI for the repro invariant checker.
+
+    python -m repro.analysis              # lint (Layer 1; no jax import)
+    python -m repro.analysis lint -v      # per-file findings
+    python -m repro.analysis lint --update-baseline
+    python -m repro.analysis audit        # program audit (Layer 2; runs jax)
+    python -m repro.analysis audit --mesh 2,2 --arch retnet-1.3b
+
+Exit status is 0 iff every check passes — both are CI gates
+(`make lint-invariants`, `make audit-program`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cmd_lint(ns) -> int:
+    from repro.analysis import lint
+
+    if ns.list_rules:
+        print(lint.list_rules())
+        return 0
+    return lint.run(root=ns.root, baseline_path=ns.baseline,
+                    update_baseline=ns.update_baseline, verbose=ns.verbose)
+
+
+def _cmd_audit(ns) -> int:
+    from repro.analysis import program_audit
+
+    report = program_audit.run_audits(ns.arch, mesh_spec=ns.mesh,
+                                      max_len=ns.max_len)
+    if ns.json:
+        print(json.dumps(report.to_dict(), indent=2))
+    else:
+        print(report.render())
+    return 0 if report.ok else 1
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro invariant checker: AST lint + program audit")
+    sub = parser.add_subparsers(dest="cmd")
+
+    p_lint = sub.add_parser("lint", help="Layer-1 AST lint of src/repro")
+    p_lint.add_argument("--root", default=None,
+                        help="tree to lint (default: the repro package)")
+    p_lint.add_argument("--baseline", default=None,
+                        help="baseline file (default: analysis/baseline.json)")
+    p_lint.add_argument("--update-baseline", action="store_true",
+                        help="grandfather all current findings and exit 0")
+    p_lint.add_argument("--list-rules", action="store_true")
+    p_lint.add_argument("-v", "--verbose", action="store_true")
+
+    p_audit = sub.add_parser("audit",
+                             help="Layer-2 jaxpr/HLO audit of the hot path")
+    p_audit.add_argument("--arch", default="retnet-1.3b")
+    p_audit.add_argument("--mesh", default="2,2",
+                         help="data,model mesh for the sharding audit")
+    p_audit.add_argument("--max-len", type=int, default=24,
+                         help="prompt-length sweep bound for the recompile "
+                              "audit")
+    p_audit.add_argument("--json", action="store_true")
+
+    ns = parser.parse_args(argv)
+    if ns.cmd == "audit":
+        return _cmd_audit(ns)
+    if ns.cmd is None:                    # bare `python -m repro.analysis`
+        ns = p_lint.parse_args([])
+    return _cmd_lint(ns)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

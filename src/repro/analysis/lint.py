@@ -1,0 +1,143 @@
+"""Layer-1 driver: run the invariant rules over a source tree.
+
+The unit of reporting is a `Finding` (rules.py); the driver adds:
+
+  * **file discovery** — every ``*.py`` under the package root (default:
+    the installed ``repro`` package itself, so ``python -m repro.analysis``
+    lints whatever checkout/venv it runs from);
+  * **baseline** — a checked-in JSON list of grandfathered findings
+    (``analysis/baseline.json``).  Baselined findings are reported as
+    ``grandfathered`` and do not fail the run; anything *new* does.  The
+    baseline keys findings by (rule, path, source line text) so unrelated
+    edits that shift line numbers don't churn it.  The repo policy is an
+    EMPTY baseline: fix or explicitly ``# repro: allow(...)`` everything
+    (docs/analysis.md).
+  * **diff-friendly output** — one finding per line,
+    ``path:line:col: [rule] message``, sorted, no timestamps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from collections import Counter
+
+from repro.analysis import rules as rules_mod
+from repro.analysis.rules import Finding, lint_source
+
+__all__ = ["LintReport", "lint_tree", "default_root", "default_baseline_path",
+           "load_baseline", "save_baseline"]
+
+_PKG_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def default_root() -> str:
+    """The ``repro`` package directory of this very installation."""
+    return _PKG_ROOT
+
+
+def default_baseline_path() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baseline.json")
+
+
+@dataclasses.dataclass
+class LintReport:
+    new: list[Finding]              # findings not covered by the baseline
+    grandfathered: list[Finding]    # baselined findings still present
+    stale_baseline: list[tuple]     # baseline entries no longer found
+    files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+    def render(self, *, verbose: bool = False) -> str:
+        lines = [f.render() for f in self.new]
+        if verbose:
+            lines += [f"{f.render()}  (grandfathered)"
+                      for f in self.grandfathered]
+        lines.append(f"{len(self.new)} finding(s) "
+                     f"({len(self.grandfathered)} grandfathered, "
+                     f"{len(self.stale_baseline)} stale baseline entr(ies)) "
+                     f"across {self.files} file(s)")
+        return "\n".join(lines)
+
+
+def iter_py_files(root: str) -> list[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", ".git"))
+        for name in sorted(filenames):
+            if name.endswith(".py"):
+                out.append(os.path.join(dirpath, name))
+    return out
+
+
+def load_baseline(path: str) -> list[tuple[str, str, str]]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise ValueError(f"baseline {path} must be a JSON list")
+    return [(e["rule"], e["path"], e["code"]) for e in data]
+
+
+def save_baseline(path: str, findings: list[Finding]) -> None:
+    data = [{"rule": f.rule, "path": f.path, "code": f.code}
+            for f in findings]
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+
+
+def lint_tree(root: str | None = None,
+              baseline: list[tuple[str, str, str]] | None = None
+              ) -> LintReport:
+    """Lint every python file under ``root`` against all rules."""
+    root = root or default_root()
+    findings: list[Finding] = []
+    files = iter_py_files(root)
+    for fp in files:
+        rel = os.path.relpath(fp, root).replace(os.sep, "/")
+        with open(fp, encoding="utf-8") as f:
+            src = f.read()
+        findings.extend(lint_source(src, rel))
+
+    budget = Counter(baseline or [])
+    new, grandfathered = [], []
+    for f in findings:
+        key = f.baseline_key()
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            grandfathered.append(f)
+        else:
+            new.append(f)
+    stale = [k for k, n in budget.items() for _ in range(n) if n > 0]
+    return LintReport(new=new, grandfathered=grandfathered,
+                      stale_baseline=stale, files=len(files))
+
+
+def run(root: str | None = None, baseline_path: str | None = None, *,
+        update_baseline: bool = False, verbose: bool = False) -> int:
+    """CLI body: returns the process exit code (0 = no new findings)."""
+    baseline_path = baseline_path or default_baseline_path()
+    report = lint_tree(root, load_baseline(baseline_path))
+    if update_baseline:
+        save_baseline(baseline_path, report.new + report.grandfathered)
+        print(f"baseline updated: {baseline_path} "
+              f"({len(report.new) + len(report.grandfathered)} entr(ies))")
+        return 0
+    print(report.render(verbose=verbose))
+    return 0 if report.ok else 1
+
+
+def list_rules() -> str:
+    lines = []
+    for r in rules_mod.ALL_RULES:
+        scope = ", ".join(s or "src/repro" for s in r.scope)
+        lines.append(f"{r.id:22s} {r.summary}  [scope: {scope}]")
+    return "\n".join(lines)

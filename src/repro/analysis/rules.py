@@ -1,0 +1,346 @@
+"""AST lint rules for the repo's serving invariants.
+
+Each rule encodes one convention the serving stack's correctness/perf
+arguments depend on but that, before this module, only review discipline
+enforced:
+
+    compat-api             (R1) version-sensitive jax APIs (shard_map,
+                           CompilerParams/TPUCompilerParams, AxisType,
+                           make_mesh, jit-with-shardings) are touched only in
+                           ``repro/compat.py`` — a jax upgrade stays a
+                           one-file change.
+    bare-assert            (R2) library code raises typed exceptions, never
+                           bare ``assert`` (stripped under ``python -O``, and
+                           an AssertionError mid-drain abandons queued work —
+                           the PR-4 pool contract, repo-wide).
+    host-sync              (R3) no host round-trip primitives (``.item()``,
+                           ``jax.device_get``, ``np.asarray``,
+                           ``int()/float()`` on indexed arrays) in the jitted
+                           serving core (``serving/``, ``models/``) outside
+                           the allowlisted batched post-step drain.
+    module-scope-compute   (R4) no module-scope jnp/jax computation in
+                           ``models/``/``serving/`` — hidden trace-time
+                           constants allocate at import and dodge sharding /
+                           donation decisions.
+
+A finding on line L is suppressed by ``# repro: allow(<rule>)`` on line L or
+L-1.  Rules identify jax symbols by *resolving import aliases* (``import
+jax.numpy as jnp`` and ``from jax.experimental.shard_map import shard_map``
+both resolve to their dotted origins), so renamed imports cannot hide a
+violation — and routing through ``repro.compat`` never trips one.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+__all__ = ["Finding", "Rule", "ALL_RULES", "RULE_IDS", "lint_source",
+           "HOST_SYNC_ALLOW"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, keyed for diff-friendly output and baselining."""
+
+    rule: str
+    path: str              # repo-relative, forward slashes
+    line: int
+    col: int
+    message: str
+    code: str              # the stripped source line (baseline identity)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] " \
+               f"{self.message}"
+
+    def baseline_key(self) -> tuple[str, str, str]:
+        """Line-number-free identity: findings survive unrelated edits."""
+        return (self.rule, self.path, self.code)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    summary: str
+    scope: tuple[str, ...]     # path prefixes the rule applies to ("" = all)
+    exclude: tuple[str, ...] = ()
+
+
+# -- rule catalog -----------------------------------------------------------
+
+R1 = Rule(
+    id="compat-api",
+    summary="version-sensitive jax APIs only in compat.py "
+            "(use repro.compat shims)",
+    scope=("",),
+    exclude=("compat.py",),
+)
+R2 = Rule(
+    id="bare-assert",
+    summary="no bare assert in library code (raise ValueError/TypeError)",
+    scope=("",),
+)
+R3 = Rule(
+    id="host-sync",
+    summary="no host round-trip primitives in the jitted serving core",
+    scope=("serving/", "models/"),
+)
+R4 = Rule(
+    id="module-scope-compute",
+    summary="no module-scope jnp/jax computation (hidden trace-time "
+            "constants)",
+    scope=("serving/", "models/"),
+)
+
+ALL_RULES = (R1, R2, R3, R4)
+RULE_IDS = tuple(r.id for r in ALL_RULES)
+
+# Functions allowed to synchronize with the host: the scheduler's batched
+# post-step drain (token blocks leave the device exactly once per sequencer
+# cycle, in one gather) and the host-spill tier itself, whose entire point
+# is a device->host transfer.  Key: "<path>::<Qualified.name>".
+HOST_SYNC_ALLOW = frozenset({
+    "serving/scheduler.py::RequestScheduler.step",
+    "serving/scheduler.py::RequestScheduler._preempt",
+    "serving/scheduler.py::CachePool.spill",
+})
+
+# Dotted names (post import-resolution) that only compat.py may touch.
+_VERSION_SENSITIVE = {
+    "jax.shard_map": "use repro.compat.shard_map",
+    "jax.experimental.shard_map": "use repro.compat.shard_map",
+    "jax.experimental.shard_map.shard_map": "use repro.compat.shard_map",
+    "jax.experimental.pjit": "use repro.compat.jit_sharded",
+    "jax.experimental.pjit.pjit": "use repro.compat.jit_sharded",
+    "jax.sharding.AxisType": "use repro.compat.make_auto_mesh",
+    "jax.make_mesh": "use repro.compat.make_auto_mesh",
+    "jax.experimental.pallas.tpu.CompilerParams":
+        "use repro.compat.tpu_compiler_params",
+    "jax.experimental.pallas.tpu.TPUCompilerParams":
+        "use repro.compat.tpu_compiler_params",
+}
+
+# jax.jit kwargs that make the call a jit-sharding entry point (renamed
+# across the pjit window) — those calls go through compat.jit_sharded.
+_SHARDING_KWARGS = {"in_shardings", "out_shardings",
+                    "in_axis_resources", "out_axis_resources"}
+
+# Host-sync callables by resolved dotted name.
+_HOST_SYNC_CALLS = {
+    "jax.device_get": "device->host transfer",
+    "numpy.asarray": "forces a host copy of a device array",
+    "numpy.array": "forces a host copy of a device array",
+}
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow\(([\w\-*,\s]+)\)")
+
+
+def _suppressions(src: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = _ALLOW_RE.search(line)
+        if m:
+            out[i] = {t.strip() for t in m.group(1).split(",") if t.strip()}
+    return out
+
+
+def _in_scope(rule: Rule, path: str) -> bool:
+    if any(path == e or path.endswith("/" + e) for e in rule.exclude):
+        return False
+    return any(path.startswith(s) for s in rule.scope)
+
+
+class _ImportTable(ast.NodeVisitor):
+    """Local name -> dotted origin module/symbol, across the whole file."""
+
+    def __init__(self):
+        self.names: dict[str, str] = {}
+        self.sensitive_imports: list[tuple[int, int, str]] = []
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            local = a.asname or a.name.split(".")[0]
+            self.names[local] = a.name if a.asname else a.name.split(".")[0]
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.level or not node.module:       # relative: best-effort skip
+            return
+        for a in node.names:
+            full = f"{node.module}.{a.name}"
+            self.names[a.asname or a.name] = full
+            hit = _VERSION_SENSITIVE.get(full) \
+                or _VERSION_SENSITIVE.get(node.module)
+            if hit:
+                self.sensitive_imports.append(
+                    (node.lineno, node.col_offset, f"import of {full}: {hit}"))
+
+
+def _dotted(node: ast.AST) -> list[str] | None:
+    """['jnp', 'zeros'] for ``jnp.zeros`` — None if not a pure name chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return parts[::-1]
+
+
+def _resolve(node: ast.AST, table: _ImportTable) -> str | None:
+    parts = _dotted(node)
+    if parts is None:
+        return None
+    root = table.names.get(parts[0])
+    if root is None:
+        return None
+    return ".".join([root] + parts[1:])
+
+
+def _contains(node: ast.AST, kind) -> bool:
+    return any(isinstance(n, kind) for n in ast.walk(node))
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, src: str, lines: list[str]):
+        self.path = path
+        self.lines = lines
+        self.table = _ImportTable()
+        self.qual: list[str] = []         # class/function name stack
+        self.depth = 0                    # function nesting depth
+        self.findings: list[Finding] = []
+
+    # -- helpers ------------------------------------------------------------
+
+    def _emit(self, rule: Rule, node: ast.AST, message: str):
+        if not _in_scope(rule, self.path):
+            return
+        line = getattr(node, "lineno", 1)
+        code = self.lines[line - 1].strip() if line <= len(self.lines) else ""
+        self.findings.append(Finding(rule.id, self.path, line,
+                                     getattr(node, "col_offset", 0) + 1,
+                                     message, code))
+
+    def _allowlisted(self) -> bool:
+        key = f"{self.path}::{'.'.join(self.qual)}"
+        return key in HOST_SYNC_ALLOW
+
+    # -- structure tracking --------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.qual.append(node.name)
+        self.generic_visit(node)
+        self.qual.pop()
+
+    def _visit_fn(self, node):
+        self.qual.append(node.name)
+        self.depth += 1
+        self.generic_visit(node)
+        self.depth -= 1
+        self.qual.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    # -- R2: bare assert -----------------------------------------------------
+
+    def visit_Assert(self, node: ast.Assert):
+        self._emit(R2, node,
+                   "bare assert in library code — raise a typed exception "
+                   "(stripped under python -O; kills the serving drain loop)")
+        self.generic_visit(node)
+
+    # -- R1 / R3 / R4 hang off name and call sites ---------------------------
+
+    def visit_Attribute(self, node: ast.Attribute):
+        full = _resolve(node, self.table)
+        hit = _VERSION_SENSITIVE.get(full) if full else None
+        if hit:
+            self._emit(R1, node, f"{full}: {hit}")
+            return                        # don't re-flag the inner chain
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name):
+        if isinstance(node.ctx, ast.Load):
+            full = self.table.names.get(node.id)
+            hit = _VERSION_SENSITIVE.get(full) if full else None
+            if hit:
+                self._emit(R1, node, f"{full}: {hit}")
+
+    def visit_Call(self, node: ast.Call):
+        full = _resolve(node.func, self.table)
+
+        # R1: jit-sharding entry points must route through compat.jit_sharded
+        if full in ("jax.jit", "jax.experimental.pjit.pjit"):
+            kw = {k.arg for k in node.keywords if k.arg}
+            if kw & _SHARDING_KWARGS:
+                self._emit(R1, node,
+                           "jax.jit with explicit shardings: use "
+                           "repro.compat.jit_sharded (kwarg spelling is "
+                           "version-sensitive)")
+
+        # R3: host-sync primitives inside serving/model functions
+        if self.depth > 0 and not self._allowlisted():
+            sync = _HOST_SYNC_CALLS.get(full) if full else None
+            if sync:
+                self._emit(R3, node, f"{full}: {sync} inside the jitted "
+                                     "serving core")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "item" and not node.args
+                  and not node.keywords):
+                self._emit(R3, node,
+                           ".item(): per-element host sync inside the "
+                           "jitted serving core")
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in ("int", "float") and node.args
+                  and _contains(node.args[0], ast.Subscript)):
+                self._emit(R3, node,
+                           f"{node.func.id}() on an indexed array: host "
+                           "sync inside the jitted serving core")
+
+        # R4: module-scope jnp/jax computation
+        if self.depth == 0 and full and (full == "jax"
+                                         or full.startswith("jax.")):
+            self._emit(R4, node,
+                       f"module-scope call to {full}: hidden trace-time "
+                       "constant (build it inside the function or cache "
+                       "explicitly)")
+
+        self.generic_visit(node)
+
+
+def lint_source(src: str, path: str) -> list[Finding]:
+    """Run every rule over one file's source.
+
+    ``path`` is the path relative to the package root being linted (e.g.
+    ``serving/engine.py``), used for rule scoping, the allowlist, and
+    baseline identity.
+    """
+    path = path.replace("\\", "/")
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("parse-error", path, e.lineno or 1, 1,
+                        f"could not parse: {e.msg}", "")]
+    linter = _Linter(path, src, src.splitlines())
+    linter.table.visit(tree)
+    if _in_scope(R1, path):
+        for line, col, msg in linter.table.sensitive_imports:
+            code = (linter.lines[line - 1].strip()
+                    if line <= len(linter.lines) else "")
+            linter.findings.append(Finding(R1.id, path, line, col + 1,
+                                           msg, code))
+    linter.visit(tree)
+
+    allowed = _suppressions(src)
+    out = []
+    for f in linter.findings:
+        for ln in (f.line, f.line - 1):
+            rules = allowed.get(ln)
+            if rules and (f.rule in rules or "*" in rules):
+                break
+        else:
+            out.append(f)
+    return sorted(out, key=lambda f: (f.path, f.line, f.col, f.rule))

@@ -63,7 +63,8 @@ class HSAEngine:
         row_scale: jax.Array | None = None,
         out_scale: jax.Array | float | None = None,
     ) -> jax.Array:
-        assert phase in PHASES, phase
+        if phase not in PHASES:
+            raise ValueError(f"unknown phase {phase!r}; expected one of {PHASES}")
         cfg = self.config
         fmt = {"train": "fp", "prefill": cfg.prefill_format,
                "decode": cfg.decode_format}[phase]

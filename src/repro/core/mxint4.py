@@ -96,7 +96,8 @@ def _floor_log2(x: jax.Array) -> jax.Array:
 def group_shift_exponents(w: jax.Array, group_size: int = GROUP_SIZE) -> jax.Array:
     """Eq. (1): S_g = clip(floor(log2 max|W_g|), -9, +5), groups along axis 1."""
     k, n = w.shape
-    assert n % group_size == 0, f"N={n} not divisible by group {group_size}"
+    if n % group_size != 0:
+        raise ValueError(f"N={n} not divisible by group {group_size}")
     grouped = jnp.abs(w).reshape(k, n // group_size, group_size)
     gmax = jnp.max(grouped, axis=-1)
     # Zero groups: park at SHIFT_MIN (mantissas will be exactly zero).
@@ -108,7 +109,8 @@ def group_shift_exponents(w: jax.Array, group_size: int = GROUP_SIZE) -> jax.Arr
 def pack_int4(mant: jax.Array) -> jax.Array:
     """Pack int8-valued int4 mantissas ``[K, N]`` -> bytes ``[K, N//2]``."""
     k, n = mant.shape
-    assert n % 2 == 0
+    if n % 2 != 0:
+        raise ValueError(f"mantissa width {n} must be even to pack nibble pairs")
     lo = mant[:, 0::2].astype(jnp.int8) & jnp.int8(0x0F)
     hi = (mant[:, 1::2].astype(jnp.int8) & jnp.int8(0x0F)) << 4
     return (lo | hi).astype(jnp.int8)
@@ -129,7 +131,8 @@ def unpack_int4(packed: jax.Array) -> jax.Array:
 def pack_uint4(codes: jax.Array) -> jax.Array:
     """Pack unsigned nibble codes (0..15) ``[K, G]`` -> uint8 ``[K, G//2]``."""
     k, g = codes.shape
-    assert g % 2 == 0
+    if g % 2 != 0:
+        raise ValueError(f"packed width {g} must be even to unpack nibble pairs")
     lo = codes[:, 0::2].astype(jnp.uint8) & jnp.uint8(0x0F)
     hi = (codes[:, 1::2].astype(jnp.uint8) & jnp.uint8(0x0F)) << 4
     return (lo | hi).astype(jnp.uint8)

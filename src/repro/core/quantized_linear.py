@@ -62,7 +62,8 @@ def apply(
     """Run ``y = (x @ W) * out_scale * row_scale + bias`` in the phase format."""
     kernel_opts = kernel_opts or {}
     if phase == "train" or (phase == "prefill" and params.w8 is None):
-        assert params.w is not None, "master weight required for train phase"
+        if params.w is None:
+            raise TypeError("master weight required for train phase")
         y = (x.astype(jnp.float32) @ params.w.astype(jnp.float32))
         if out_scale is not None:
             y = y * out_scale

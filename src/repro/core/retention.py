@@ -107,7 +107,8 @@ def retention_chunkwise(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     b, h, s, dk = q.shape
     dv = v.shape[-1]
-    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    if s % chunk != 0:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
     if state is None:
         state = jnp.zeros((b, h, dk, dv), jnp.float32)
 

@@ -41,7 +41,9 @@ class SyntheticPipeline:
     """Stateless-by-construction synthetic LM data."""
 
     def __init__(self, cfg: DataConfig):
-        assert cfg.global_batch % cfg.n_hosts == 0
+        if cfg.global_batch % cfg.n_hosts != 0:
+            raise ValueError(f"global_batch {cfg.global_batch} not divisible "
+                             f"by n_hosts {cfg.n_hosts}")
         self.cfg = cfg
         self.local_batch = cfg.global_batch // cfg.n_hosts
         # Seeded bigram table: token t -> `branching` plausible successors.

@@ -91,8 +91,12 @@ def mxint4_matmul_pallas(
     m, k = x.shape
     n = packed.shape[1] * 2
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
-    assert bn % (2 * GROUP_SIZE) == 0
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{n},{k}) not divisible by blocks "
+                         f"({bm},{bn},{bk})")
+    if bn % (2 * GROUP_SIZE) != 0:
+        raise ValueError(f"block_n {bn} must cover whole packed groups "
+                         f"({2 * GROUP_SIZE})")
     n_k = k // bk
 
     grid = (m // bm, n // bn, n_k)

@@ -80,7 +80,8 @@ def retention_chunkwise_pallas(
     """Returns (y [BH, S, dv], final state [BH, dk, dv])."""
     bh, s, dk = q.shape
     dv = v.shape[-1]
-    assert s % chunk == 0, (s, chunk)
+    if s % chunk != 0:
+        raise ValueError(f"seq {s} not divisible by chunk {chunk}")
     n_chunks = s // chunk
 
     grid = (bh, n_chunks)

@@ -45,7 +45,8 @@ def rmsnorm_stats_pallas(
 ) -> jax.Array:                   # f32 [M, 1]
     m, d = y.shape
     bm, bd = min(block_m, m), min(block_d, d)
-    assert m % bm == 0 and d % bd == 0, (m, d, bm, bd)
+    if m % bm or d % bd:
+        raise ValueError(f"shape ({m},{d}) not divisible by blocks ({bm},{bd})")
     n_d = d // bd
 
     return pl.pallas_call(

@@ -65,7 +65,9 @@ def w8a8_matmul_pallas(
     m, k = x_q.shape
     n = w_q.shape[1]
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
-    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{n},{k}) not divisible by blocks "
+                         f"({bm},{bn},{bk})")
     n_k = k // bk
 
     return pl.pallas_call(

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.compat import jit_sharded
 from repro.launch.mesh import make_mesh_by_name
 from repro.models import lm
 from repro.models.config import InputShape, ModelConfig
@@ -231,10 +232,11 @@ def lower_cell(cfg: ModelConfig, shape: InputShape, mesh,
                                             opt_cfg=opt_cfg, opts=opts,
                                             engine=engine)
         batch_sh = built["batch_shardings"](specs)
-        jit_step = jax.jit(built["step"],
-                           in_shardings=(built["state_shardings"], batch_sh),
-                           out_shardings=(built["state_shardings"], None),
-                           donate_argnums=(0,))
+        jit_step = jit_sharded(built["step"],
+                               in_shardings=(built["state_shardings"],
+                                             batch_sh),
+                               out_shardings=(built["state_shardings"], None),
+                               donate_argnums=(0,))
         with shd.sharding_ctx(mesh, policy):
             lowered = jit_step.lower(built["state_shapes"], specs)
         return lowered
@@ -244,20 +246,20 @@ def lower_cell(cfg: ModelConfig, shape: InputShape, mesh,
     if shape.kind == "prefill":
         batch_sh = shd.shardings_from_specs(
             shd.batch_specs(specs, mesh, policy), mesh)
-        jit_fn = jax.jit(cell.prefill,
-                         in_shardings=(cell.param_shardings, batch_sh),
-                         out_shardings=(None, cell.cache_shardings))
+        jit_fn = jit_sharded(cell.prefill,
+                             in_shardings=(cell.param_shardings, batch_sh),
+                             out_shardings=(None, cell.cache_shardings))
         with shd.sharding_ctx(mesh, policy):
             return jit_fn.lower(cell.param_shapes, specs)
 
     # decode
     tok_sh = shd.shardings_from_specs(
         shd.batch_specs(specs, mesh, policy), mesh)["tokens"]
-    jit_fn = jax.jit(cell.decode,
-                     in_shardings=(cell.param_shardings, tok_sh,
-                                   cell.cache_shardings),
-                     out_shardings=(None, cell.cache_shardings),
-                     donate_argnums=(2,))
+    jit_fn = jit_sharded(cell.decode,
+                         in_shardings=(cell.param_shardings, tok_sh,
+                                       cell.cache_shardings),
+                         out_shardings=(None, cell.cache_shardings),
+                         donate_argnums=(2,))
     with shd.sharding_ctx(mesh, policy):
         return jit_fn.lower(cell.param_shapes, specs["tokens"],
                             cell.cache_shapes)
@@ -343,7 +345,8 @@ def main() -> None:
         cells = [(a, s.name) for a in configs.ASSIGNED
                  for s in configs.ALL_SHAPES]
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
+        if not (args.arch and args.shape):
+            raise ValueError("--arch/--shape or --all")
         cells = [(args.arch, args.shape)]
 
     failures = []

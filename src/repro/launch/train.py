@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.compat import jit_sharded, make_auto_mesh
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.launch.mesh import make_mesh_by_name
 from repro.optim import adamw
@@ -39,10 +40,10 @@ from repro.runtime import train_step as ts
 
 def build(cfg, mesh, opt_cfg, opts):
     built = ts.build_train_step(cfg, mesh, opt_cfg=opt_cfg, opts=opts)
-    jit_step = jax.jit(built["step"],
-                       in_shardings=(built["state_shardings"], None),
-                       out_shardings=(built["state_shardings"], None),
-                       donate_argnums=(0,))
+    jit_step = jit_sharded(built["step"],
+                           in_shardings=(built["state_shardings"], None),
+                           out_shardings=(built["state_shardings"], None),
+                           donate_argnums=(0,))
     return built, jit_step
 
 
@@ -75,7 +76,7 @@ def main() -> None:
 
     mesh = make_mesh_by_name(args.mesh) if args.mesh else None
     if mesh is None:
-        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        mesh = make_auto_mesh((1, 1), ("data", "model"))
     built, jit_step = build(cfg, mesh, opt_cfg, opts)
 
     data = SyntheticPipeline(DataConfig(
@@ -120,7 +121,7 @@ def main() -> None:
                     max(alive_chips, mesh.shape["model"]),
                     model_parallel=mesh.shape["model"])
                 print(f"[train] elastic plan: {plan}")
-                mesh = jax.make_mesh(plan.shape, plan.axes)
+                mesh = make_auto_mesh(plan.shape, plan.axes)
                 built, jit_step = build(cfg, mesh, opt_cfg, opts)
                 state, _ = mgr.restore(built["init_state"](jax.random.key(0)),
                                        shardings=built["state_shardings"])

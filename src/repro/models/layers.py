@@ -443,7 +443,8 @@ def gqa_chunk(
 
     if cfg.sliding_window:
         w = cfg.sliding_window
-        assert c <= w, f"chunk ({c}) must fit the sliding window ({w})"
+        if c > w:
+            raise ValueError(f"chunk ({c}) must fit the sliding window ({w})")
         # Attend BEFORE evicting: the chunk's earliest queries still window
         # back to keys the chunk's own writes are about to overwrite.  Key
         # j of the linearized view sits at absolute position (pos - w + j):

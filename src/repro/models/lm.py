@@ -182,7 +182,8 @@ def _block_apply(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
     x = x + a_out
 
     if kind == "dec":
-        assert enc_kv is not None, "decoder blocks need encoder output"
+        if enc_kv is None:
+            raise TypeError("decoder blocks need encoder output")
         xc, sigc = L.norm_emit(p["ln_cross"], x, engine, cfg)
         c_out, (ck, cv) = _cross_from_enc(p["cross"], xc, sigc, engine, phase,
                                           cfg, enc_kv)

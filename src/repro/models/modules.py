@@ -61,7 +61,9 @@ class ParamBuilder:
     def param(self, name: str, shape: tuple[int, ...], axes: tuple,
               init: str = "normal", scale: float | None = None,
               dtype=None) -> jax.Array:
-        assert len(axes) == len(shape), (name, shape, axes)
+        if len(axes) != len(shape):
+            raise ValueError(f"param {name!r}: axes {axes} do not match "
+                             f"shape {shape}")
         dtype = dtype or self.dtype
         if self.abstract:
             v = jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))

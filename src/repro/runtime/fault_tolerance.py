@@ -103,7 +103,9 @@ def plan_elastic_mesh(alive_chips: int, model_parallel: int = 16,
     exact) factor that fits the survivors.  Any remainder chips idle until
     the next full restart (reported as dropped).
     """
-    assert alive_chips >= model_parallel, "fewer chips than TP degree"
+    if alive_chips < model_parallel:
+        raise ValueError(f"fewer chips ({alive_chips}) than TP degree "
+                         f"({model_parallel})")
     dp = alive_chips // (model_parallel * pods)
     # largest power of two <= dp keeps collectives ring-friendly
     p = 1

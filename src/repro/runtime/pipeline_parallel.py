@@ -42,7 +42,9 @@ def pipeline_forward(
     n_stages = mesh.shape[stage_axis]
     n_micro = x.shape[0]
     l_total = jax.tree.leaves(stacked_params)[0].shape[0]
-    assert l_total % n_stages == 0, (l_total, n_stages)
+    if l_total % n_stages != 0:
+        raise ValueError(f"layers {l_total} not divisible by stages "
+                         f"{n_stages}")
 
     def per_stage(params_stage, x_all):
         # params_stage: [L/S, ...] this stage's layers; x_all: [M, mb, ...]

@@ -182,6 +182,14 @@ def shardings_key(tree) -> tuple:
     return (treedef, tuple(leaves))
 
 
+def sharding_leaves(tree) -> list[jax.sharding.Sharding]:
+    """Every Sharding leaf of a shardings pytree (specs/None skipped) — the
+    program audit walks these to prove an engine's jit entries all target
+    one mesh (the ServeCell plan's), never a stray device set."""
+    return [l for l in jax.tree.leaves(tree, is_leaf=_is_sharding)
+            if _is_sharding(l)]
+
+
 def sharding_mismatches(tree: Params, shardings: Params) -> list[str]:
     """Array leaves whose actual sharding is not equivalent to the expected
     one — the `jax.debug.visualize_array_sharding`-style on-mesh check, as

@@ -54,7 +54,9 @@ def train_step_fn(cfg: ModelConfig, engine: HSAEngine,
 
         def split(x):
             b = x.shape[0]
-            assert b % opts.microbatches == 0, (b, opts.microbatches)
+            if b % opts.microbatches != 0:
+                raise ValueError(f"batch {b} not divisible by microbatches "
+                                 f"{opts.microbatches}")
             return x.reshape(opts.microbatches, b // opts.microbatches,
                              *x.shape[1:])
 

@@ -51,6 +51,15 @@ Params = dict[str, Any]
 MIN_BUCKET = 8
 
 
+def _jit_cache_size(fn) -> int:
+    """Entries in one jitted callable's XLA compile cache; -1 when this jax
+    does not expose it (the audit then falls back to the shape-key proxy)."""
+    try:
+        return int(fn._cache_size())
+    except (AttributeError, TypeError):
+        return -1
+
+
 def pytree_nbytes(tree, *, per_device: bool = False) -> int:
     """Total bytes across a pytree's array (or ShapeDtypeStruct) leaves —
     the currency of the host-spill tier's transfer accounting.
@@ -255,13 +264,20 @@ class InferenceEngine:
             params = jax.device_put(params, self.param_shardings)
             self._rep = NamedSharding(mesh, P())
             self._sjits: dict = {}
+            self._sjit_entries: list[dict] = []
             self._csh_cache: dict = {}
         self.params = params
 
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("cache_len",
                                                  "return_hidden"))
-        self._prefill_chunk = jax.jit(self._prefill_chunk_impl)
+        # The chunk step's resident cache is donated on every path: the
+        # caller (ChunkedPrefill) rebinds to the returned cache, so the
+        # input buffer is dead — donation makes the append in-place instead
+        # of a full cache copy per chunk (the program audit's donation leg
+        # verifies the compiled executable actually aliases it).
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
+                                      donate_argnums=(2,))
         self._decode = jax.jit(self._decode_impl)
         self._loop = jax.jit(self._loop_impl, static_argnames=("gen",))
         self._resume_loop = jax.jit(self._resume_loop_impl,
@@ -464,6 +480,16 @@ class InferenceEngine:
                                     out_shardings=out_shardings,
                                     donate_argnums=donate_argnums)
             self._sjits[key] = fn
+            # Introspection registry: what this entry point promised the
+            # mesh (repro.analysis.program_audit replays these against the
+            # ServeCell plan — the sharding audit).
+            self._sjit_entries.append({
+                "name": name if isinstance(name, tuple) else (name,),
+                "fn": fn,
+                "in_shardings": in_shardings,
+                "out_shardings": out_shardings,
+                "donate_argnums": donate_argnums,
+            })
         return fn
 
     def _batch_shardings(self, batch: Params) -> Params:
@@ -537,12 +563,121 @@ class InferenceEngine:
             return fn(self.params, logits0, hidden0, hist0, hist_len0,
                       cache, key)
 
-    # -- public API ---------------------------------------------------------
+    # -- introspection hooks (repro.analysis) --------------------------------
 
     @property
     def prefill_compiles(self) -> int:
         """Distinct prefill shapes this engine has dispatched (compile proxy)."""
         return len(self.prefill_shape_keys)
+
+    def jit_entries(self) -> list[dict]:
+        """The sharded jit registry: one record per distinct `_sjit` entry
+        (name tuple, jit object, in/out shardings, donated argnums).  Empty
+        on a single-device engine.  The program audit's sharding leg checks
+        every record against the `ServeCell` plan."""
+        return list(getattr(self, "_sjit_entries", ()))
+
+    def compile_counts(self) -> dict[str, int]:
+        """Compiled-signature count per entry point — the real XLA compile
+        cache sizes, not the shape-key proxy.  Sharded entry points
+        aggregate over their `_sjit` placements under the same root name
+        (``prefill``, ``prefill_chunk``, ``decode``, ``loop``, ...), so the
+        number means the same thing on one chip and on a mesh.
+
+        `bench_serving` records this next to every trajectory point; the
+        recompile audit asserts it stays O(log max_len) under the ladder.
+        """
+        counts: dict[str, int] = {}
+        for root, fn in (("prefill", self._prefill),
+                         ("prefill_chunk", self._prefill_chunk),
+                         ("decode", self._decode),
+                         ("loop", self._loop),
+                         ("resume_loop", self._resume_loop),
+                         ("spec_loop", self._spec_loop)):
+            counts[root] = _jit_cache_size(fn)
+        for entry in self.jit_entries():
+            root = entry["name"][0]
+            root = root if isinstance(root, str) else str(root)
+            counts[root] = counts.get(root, 0) + _jit_cache_size(entry["fn"])
+        return counts
+
+    def _abstract_prefill(self, s_in: int, cache_len: int, *,
+                          return_hidden: bool = False, batch: int = 1):
+        """(logits, cache[, hidden]) ShapeDtypeStructs of a prefill — the
+        abstract operands the lowering hooks below feed the hot-path jits."""
+        tokens = jax.ShapeDtypeStruct((batch, s_in), jnp.int32)
+        impl = functools.partial(self._prefill_impl, cache_len=cache_len,
+                                 return_hidden=return_hidden)
+        with self._trace_ctx():
+            return jax.eval_shape(impl, self.params, {"tokens": tokens})
+
+    def lower_prefill_chunk(self, *, batch: int = 1, chunk: int = 16,
+                            cache_len: int = 64, cache_dtype=jnp.float32):
+        """Lowering of the chunked-prefill step on abstract operands.
+
+        The donation audit compiles this and verifies the executable aliases
+        the resident cache's buffers (input_output_alias) instead of
+        silently copying a whole cache per chunk.
+        """
+        tokens = {"tokens": jax.ShapeDtypeStruct((batch, chunk), jnp.int32)}
+        cache = jax.eval_shape(
+            lambda: lm.make_decode_cache(self.cfg, batch, cache_len,
+                                         cache_dtype, start_pos=0))
+        if self.mesh is None:
+            return self._prefill_chunk.lower(self.params, tokens, cache)
+        csh = self.cache_shardings(cache)
+        fn = self._sjit("prefill_chunk", self._prefill_chunk_impl,
+                        (self.param_shardings, self._batch_shardings(tokens),
+                         csh),
+                        (self._rep, csh), donate_argnums=(2,))
+        with self._trace_ctx():
+            return fn.lower(self.params, tokens, cache)
+
+    def lower_decode_loop(self, gen: GenerationConfig, *, batch: int = 1,
+                          s_in: int = 8, cache_len: int | None = None):
+        """Lowering of the fused decode ``while_loop`` on abstract operands
+        (the transfer audit scans its HLO for host callbacks / transfers)."""
+        cache_len = cache_len or s_in + gen.max_new_tokens
+        logits, cache = self._abstract_prefill(s_in, cache_len, batch=batch)
+        key = jax.eval_shape(lambda: jax.random.key(0))
+        if self.mesh is None:
+            return self._loop.lower(self.params, logits, cache, key, gen=gen)
+        csh = self.cache_shardings(cache)
+        fn = self._sjit(("loop", gen),
+                        functools.partial(self._loop_impl, gen=gen),
+                        (self.param_shardings, self._rep, csh, self._rep),
+                        (self._rep, self._rep, csh))
+        with self._trace_ctx():
+            return fn.lower(self.params, logits, cache, key)
+
+    def lower_spec_loop(self, gen: GenerationConfig, *, batch: int = 1,
+                        s_in: int = 8):
+        """Lowering of the speculative draft/verify ``while_loop`` on
+        abstract operands — the verify-path twin of `lower_decode_loop`."""
+        if gen.speculative is None:
+            raise ValueError("lower_spec_loop needs gen.speculative")
+        k = gen.speculative.k
+        cache_len = s_in + gen.max_new_tokens + k
+        logits, cache, hidden = self._abstract_prefill(
+            s_in, cache_len, return_hidden=True, batch=batch)
+        hist = jax.ShapeDtypeStruct(
+            (batch, s_in + gen.max_new_tokens + k + 1), jnp.int32)
+        hist_len = jax.ShapeDtypeStruct((), jnp.int32)
+        key = jax.eval_shape(lambda: jax.random.key(0))
+        if self.mesh is None:
+            return self._spec_loop.lower(self.params, logits, hidden, hist,
+                                         hist_len, cache, key, gen=gen)
+        csh = self.cache_shardings(cache)
+        rep = self._rep
+        fn = self._sjit(("spec_loop", gen),
+                        functools.partial(self._spec_loop_impl, gen=gen),
+                        (self.param_shardings, rep, rep, rep, rep, csh, rep),
+                        (rep, rep, csh, rep, rep))
+        with self._trace_ctx():
+            return fn.lower(self.params, logits, hidden, hist, hist_len,
+                            cache, key)
+
+    # -- public API ---------------------------------------------------------
 
     def prefill(self, tokens: jax.Array, *, cache_len: int | None = None,
                 extras: Params | None = None, bucket: bool = False,

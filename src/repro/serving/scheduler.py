@@ -330,6 +330,20 @@ class CachePool:
 
     # -- stacked stores -----------------------------------------------------
 
+    def placement_mismatches(self) -> list[str]:
+        """Array leaves of the stacked class stores whose on-device sharding
+        departs from the pool's plan — the sharding audit's pool leg.
+        Empty on a single-device pool (no plan to depart from)."""
+        from repro.runtime import sharding as shd
+        if self.mesh is None:
+            return []
+        bad: list[str] = []
+        for clen, store in self._stores.items():
+            for m in shd.sharding_mismatches(store,
+                                             self._store_shardings[clen]):
+                bad.append(f"class[{clen}]/{m}")
+        return bad
+
     @property
     def store(self) -> Params:
         """Legacy single-class view of the stacked store."""
@@ -511,6 +525,13 @@ class RequestScheduler:
             return jax.vmap(one)(tokens, store, keys, hist, hlen)
 
         self._spec_pool_step = jax.jit(spec_pool_step)
+
+    def compile_counts(self) -> dict[str, int]:
+        """Compiled-signature count per scheduler dispatch (one per resident
+        class is the contract; `repro.analysis` and the bench watch it)."""
+        from repro.serving.engine import _jit_cache_size
+        return {"pool_step": _jit_cache_size(self._pool_step),
+                "spec_pool_step": _jit_cache_size(self._spec_pool_step)}
 
     # -- queue management ---------------------------------------------------
 

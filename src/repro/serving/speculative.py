@@ -243,7 +243,8 @@ def speculative_loop(params: Params, logits0: jax.Array, hidden0: jax.Array,
     reporting.
     """
     spec = gen.speculative
-    assert spec is not None
+    if spec is None:
+        raise TypeError("gen.speculative must be set for speculative decode")
     k = spec.k
     b = logits0.shape[0]
     n = gen.max_new_tokens
