@@ -4,7 +4,7 @@
 PY ?= python
 
 .PHONY: test test-fast install serve-demo smoke-host-spill smoke-sharded \
-	bench-serving lint-invariants audit-program
+	bench-serving bench-kernels lint-invariants audit-program
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -40,6 +40,12 @@ smoke-sharded:
 # compiles triggered, decode-stall steps) for PR-over-PR comparison.
 bench-serving:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.bench_serving
+
+# Kernel microbench: MXINT4 dequant-matmul block sweep + the flash-decode
+# split-KV attention leg (byte ladder per cache format + interpret-mode wall
+# cross-check of the Pallas kernel vs the jnp reference).
+bench-kernels:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.kernel_bench
 
 # Layer-1 invariant lint: AST rules over src/repro (compat-api routing, no
 # bare asserts, no host syncs on the hot path, no module-scope jnp work).

@@ -21,6 +21,15 @@ successive PRs accumulate a perf trajectory instead of overwriting it:
     oversubscribed.*      the host-spill leg: requests > device lanes, a
                           high-priority burst preempting residents to host
                           memory (spills/fetches/bytes moved each way)
+    decode_roofline.*     per-leg analytic decode-step roofline (modeled
+                          bytes/token, step time, memory/compute bound) and
+                          achieved_roofline_fraction = modeled / measured
+                          decode wall (~0 on CPU CI — the model's constants
+                          are the TPU chip — but trajectory-comparable)
+    quantized_decode.*    the quantized-KV residency leg: the same greedy
+                          generate with the cache fp32 vs int8_tok vs
+                          mxint4_blk, with modeled + resident cache-byte
+                          reduction ratios (the paper's EMA claim: >= 2x)
     sharded.*             the multi-chip leg: the same generate on a 2x2
                           (data, model) mesh of virtual host devices —
                           device count, axis shape, and per-device vs
@@ -44,6 +53,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from benchmarks.roofline import decode_step_model
 from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
                            Request, RequestScheduler, SpeculativeConfig)
 
@@ -71,6 +81,33 @@ def git_rev() -> str:
         return out.stdout.strip() or "unknown"
     except (OSError, subprocess.SubprocessError):
         return "unknown"
+
+def decode_roofline(cfg, *, cache_len: int, n_tokens: int, wall_s: float,
+                    batch: int = 1, cache_format: str | None = None) -> dict:
+    """Modeled decode-step roofline + achieved fraction for one measured leg.
+
+    The model (`benchmarks.roofline.decode_step_model`) prices the leg's
+    *exact* config instance — the reduced CPU-scale one being benched, not
+    the paper-scale arch — with MXINT4 weight streaming and the leg's cache
+    residency format (None = the engine's fp32 cache).
+    ``achieved_roofline_fraction`` = modeled decode wall / measured decode
+    wall; ~0 on CPU CI (the model's peak/BW constants are the TPU chip) and
+    meaningful on device, but its *trajectory* is comparable either way.
+    """
+    fmt = cache_format or "float32"
+    m = decode_step_model(cfg, cache_len=cache_len, batch=batch,
+                          cache_format=fmt)
+    modeled_wall = m["step_s"] * (n_tokens / max(batch, 1))
+    return {
+        "cache_format": fmt,
+        "modeled_step_s": m["step_s"],
+        "modeled_bytes_per_token": round(m["bytes_per_token"], 1),
+        "modeled_cache_bytes": round(m["cache_bytes"], 1),
+        "bound": m["bound"],
+        "achieved_roofline_fraction":
+            round(modeled_wall / wall_s, 6) if wall_s > 0 else 0.0,
+    }
+
 
 # Speculative leg: reduced starcoder2's greedy continuation of this seed
 # saturates into a repeating tail — the "long repetitive output" regime where
@@ -124,6 +161,11 @@ def run_scheduler() -> dict:
         # trajectory so a signature-count regression shows up PR-over-PR.
         "compiled_signatures": {**engine.compile_counts(),
                                 **sched.compile_counts()},
+        # Conservative: wall_s includes admission/prefill work, so this
+        # under-reports the pure-decode fraction.
+        "decode_roofline": decode_roofline(
+            engine.cfg, cache_len=large, n_tokens=sched.stats["emitted"],
+            wall_s=wall_s),
     }
 
 
@@ -151,6 +193,9 @@ def run_speculative() -> dict:
         "acceptance_rate": round(spec.acceptance_rate, 3),
         "baseline_decode_s": round(base.decode_s, 3),
         "decode_s": round(spec.decode_s, 3),
+        "decode_roofline": decode_roofline(
+            engine.cfg, cache_len=10 + SPEC_MAX_NEW, n_tokens=SPEC_MAX_NEW,
+            wall_s=base.decode_s),
     }
 
 
@@ -198,7 +243,44 @@ def run_oversubscribed() -> dict:
         "preempted": sched.stats["preempted"],
         "resumed": sched.stats["resumed"],
         **sched.pool.spill_stats,
+        "decode_roofline": decode_roofline(
+            engine.cfg, cache_len=clen,
+            n_tokens=OVER_REQUESTS * OVER_NEW_TOKENS, wall_s=wall_s),
     }
+
+
+# Quantized-KV decode leg: the same greedy generate on a GQA arch with the
+# decode-residency cache fp32 vs int8_tok vs MXINT4 — the tentpole's EMA
+# claim, measured.  Modeled cache bytes/token must drop >= 2x quantized vs
+# fp (the record carries the ratio so the trajectory proves it PR-over-PR).
+QUANT_ARCH = "qwen3-8b"
+QUANT_PROMPT = 12
+QUANT_NEW = 16
+
+
+def run_quantized_decode() -> dict:
+    engine = InferenceEngine.from_config(QUANT_ARCH, EngineSpec(reduced=True))
+    prompt = jax.random.randint(jax.random.key(7), (1, QUANT_PROMPT), 1,
+                                engine.cfg.vocab_size, dtype=jnp.int32)
+    clen = QUANT_PROMPT + QUANT_NEW
+    legs: dict[str, dict] = {}
+    base = None
+    for fmt in (None, "int8_tok", "mxint4_blk"):
+        gen = GenerationConfig(max_new_tokens=QUANT_NEW, cache_format=fmt)
+        engine.generate(prompt, gen)                 # warm/compile
+        res = engine.generate(prompt, gen)
+        leg = decode_roofline(engine.cfg, cache_len=clen, n_tokens=QUANT_NEW,
+                              wall_s=res.decode_s, cache_format=fmt)
+        leg["decode_s"] = round(res.decode_s, 3)
+        leg["resident_cache_nbytes"] = engine.cache_nbytes(
+            clen, dtype=fmt or jnp.float32)
+        base = base or leg
+        leg["cache_bytes_reduction_x"] = round(
+            base["modeled_cache_bytes"] / leg["modeled_cache_bytes"], 2)
+        leg["resident_reduction_x"] = round(
+            base["resident_cache_nbytes"] / leg["resident_cache_nbytes"], 2)
+        legs[fmt or "fp32"] = leg
+    return legs
 
 
 SHARDED_MESH = "2,2"
@@ -268,6 +350,7 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     record["git_rev"] = git_rev()
     record["speculative"] = run_speculative()
     record["oversubscribed"] = run_oversubscribed()
+    record["quantized_decode"] = run_quantized_decode()
     record["sharded"] = run_sharded()
 
     # Append to the trajectory (older single-record files become entry 0).

@@ -1,4 +1,5 @@
-"""Pallas kernel microbench: block-config sweep of the MXINT4 dequant-matmul.
+"""Pallas kernel microbench: block-config sweep of the MXINT4 dequant-matmul
+plus the flash-decode (split-KV) attention kernel.
 
 No TPU in this container, so per-config wall time is interpret-mode (slow,
 relative only); the *structural* numbers — HBM bytes per output tile,
@@ -11,7 +12,7 @@ import numpy as np
 from repro.core import mxint4 as mx
 from repro.core.mxint4 import GROUP_SIZE
 
-from benchmarks.bench_lib import emit
+from benchmarks.bench_lib import emit, time_fn
 
 
 def analyze(m, k, n, bm, bn, bk) -> dict:
@@ -46,6 +47,54 @@ def run() -> None:
     emit("kernel.decode_is_memory_bound", 0.0,
          f"AI={a['intensity']:.1f} << ridge 240 -> HBM-bound, "
          "EMA cut = speedup (C2)")
+    run_flash_decode()
+
+
+def analyze_flash_decode(b, kv, g, d, c, fmt) -> dict:
+    """Structural bytes/flops of one flash-decode dispatch: the whole cache
+    streams once (split across KV grid blocks), q/out are noise."""
+    from repro.core import kvq
+    cache_bytes = b * c * kv * 2 * kvq.nbytes_per_row(fmt, d)
+    io_bytes = 2 * b * kv * g * d * 4            # q in + out
+    flops = 4 * b * kv * g * c * d               # scores + weighted sum
+    return {"hbm_bytes": cache_bytes + io_bytes,
+            "intensity": flops / (cache_bytes + io_bytes)}
+
+
+def run_flash_decode() -> None:
+    """Flash-decode leg: the byte ladder per cache format at serving context
+    lengths, plus an interpret-mode wall cross-check of the kernel vs the
+    jnp reference on a tiny shape (relative only — no TPU here)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import kvq
+    from repro.kernels import ops as kops
+
+    b, kv, g, d = 1, 8, 4, 128                   # GQA decode matvec shape
+    for c in (1024, 8192):
+        for fmt in ("float32", "int8_tok", "mxint4_blk"):
+            a = analyze_flash_decode(b, kv, g, d, c, fmt)
+            emit(f"kernel.flash_decode[c{c}]{fmt}", 0.0,
+                 f"AI={a['intensity']:.2f}flops/B "
+                 f"hbm={a['hbm_bytes']/1e6:.2f}MB")
+
+    c = 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, kv, g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, c, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, c, kv, d), jnp.float32)
+    kv_len = jnp.int32(c - 7)
+    for fmt, kk, vv in (("fp32", k, v),
+                        ("int8_tok", kvq.encode(k, "int8_tok"),
+                         kvq.encode(v, "int8_tok"))):
+        for impl, kw in (("ref", {}), ("pallas-interp",
+                                       {"interpret": True})):
+            us = time_fn(lambda: kops.flash_decode(
+                q, kk, vv, kv_len,
+                impl="ref" if impl == "ref" else "pallas", **kw))
+            emit(f"kernel.flash_decode[c{c}]{fmt}.{impl}", us,
+                 "interpret-mode wall, relative only")
 
 
 if __name__ == "__main__":

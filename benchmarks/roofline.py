@@ -15,6 +15,16 @@ dominant term, and a roofline fraction:
     projected_step  = max(compute, memory, collective)   (perfect overlap)
     bound_step      = max(compute term, ideal-memory term)
     fraction        = bound_step / projected_step
+
+`decode_step_model` is the single-token (MVM-phase) specialization: per
+decode step the whole active weight set streams at MXINT4 bits and the
+resident cache is read once, so the step is memory-bound and the bytes side
+— weights at 4.25 bits + cache rows priced by `core.kvq.nbytes_per_row` for
+the selected residency format — IS the model.  `decode_table` prints the
+fp32 / int8_tok / mxint4_blk bytes-per-token ladder per arch
+(``python -m benchmarks.roofline decode [arch ...]``), and
+`bench_serving.py` divides each measured decode leg by the modeled step time
+to report an achieved-fraction-of-roofline trajectory.
 """
 
 import glob
@@ -22,6 +32,7 @@ import json
 import os
 
 from repro import configs
+from repro.models.config import InputShape
 from repro.runtime import analysis as an
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
@@ -106,6 +117,71 @@ def run(mesh: str = "single", policy: str = "baseline") -> list[dict]:
     return rows
 
 
+DECODE_FORMATS = ("float32", "int8_tok", "mxint4_blk")
+
+
+def decode_step_model(cfg, *, cache_len: int, batch: int = 1,
+                      n_chips: int = 1,
+                      cache_format: str | None = None) -> dict:
+    """Analytic one-decode-step roofline for a concrete config instance.
+
+    ``cfg`` is a `ModelConfig` (pass `engine.cfg` to model the exact engine
+    being benched, reduced or full).  ``cache_format`` prices the resident
+    cache rows: a `core.kvq` format name ('int8_tok' | 'mxint4_blk'), any
+    dtype name ('float32' matches the engine's fp cache), or None for the
+    paper's bf16 default.  Weights always stream at MXINT4 (4.25 bits) —
+    the C2 deploy the decode path uses regardless of cache format.
+    """
+    shape = InputShape("decode_model", cache_len, batch, "decode")
+    wl = an.cell_workload(cfg, shape, n_chips, cache_format=cache_format)
+    cache_b = an._cache_bytes(cfg, cache_len, batch,
+                              cache_format=cache_format) / n_chips
+    step_s = max(wl.compute_term(), wl.memory_term())
+    return {
+        "cache_format": cache_format or "bf16",
+        "cache_len": cache_len, "batch": batch, "n_chips": n_chips,
+        "flops": wl.model_flops,
+        "weight_bytes": wl.hbm_bytes - cache_b,
+        "cache_bytes": cache_b,
+        "bytes_per_token": wl.hbm_bytes / max(wl.tokens, 1e-12),
+        "compute_s": wl.compute_term(),
+        "memory_s": wl.memory_term(),
+        "step_s": step_s,
+        "bound": "memory" if wl.memory_term() >= wl.compute_term()
+                 else "compute",
+    }
+
+
+def decode_table(archs=None, *, cache_len: int = 4096,
+                 batch: int = 1) -> list[dict]:
+    """Decode-step bytes ladder: fp32 cache vs the two kvq formats, with the
+    bytes-per-token reduction ratio the EMA argument claims."""
+    rows = []
+    print("arch,cache_format,weight_MB,cache_MB,bytes/token_MB,step_ms,"
+          "bound,cache_reduction_x")
+    for arch in archs or configs.REGISTRY:
+        cfg = configs.get_config(arch)
+        base = None
+        for fmt in DECODE_FORMATS:
+            row = decode_step_model(cfg, cache_len=cache_len, batch=batch,
+                                    cache_format=fmt)
+            row["arch"] = arch
+            if fmt == "float32":
+                base = row
+            red = (base["cache_bytes"] / row["cache_bytes"]
+                   if row["cache_bytes"] else 1.0)
+            row["cache_reduction_x"] = round(red, 2)
+            rows.append(row)
+            print(f"{arch},{fmt},{row['weight_bytes']/1e6:.1f},"
+                  f"{row['cache_bytes']/1e6:.2f},"
+                  f"{row['bytes_per_token']/1e6:.1f},"
+                  f"{row['step_s']*1e3:.3f},{row['bound']},{red:.2f}")
+    return rows
+
+
 if __name__ == "__main__":
     import sys
-    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")
+    if len(sys.argv) > 1 and sys.argv[1] == "decode":
+        decode_table(sys.argv[2:] or None)
+    else:
+        run(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")

@@ -20,6 +20,16 @@ accounting guarantees (utilization / external-memory-access minimality):
                  and caches lie where the rules engine said, every `_sjit`
                  entry's shardings come from the plan's mesh, and no entry
                  reshards its resident cache between input and output.
+    decode-kernel (A5) the fused decode while_loop actually dispatches the
+                 flash-decode attention kernel (`kernels/flash_decode.py`)
+                 when ``kernel_impl='pallas'`` — traced-program (jaxpr)
+                 inspection, for both fp and quantized caches — and that
+                 'auto' resolution never smuggles a Pallas call onto a
+                 non-TPU backend.
+    donation-quant (A6) the donation guarantee (A2) survives the quantized
+                 cache layout: with encoded dict leaves ({"q","s"} /
+                 {"m","e"}) the chunk step still aliases (nearly) every
+                 resident cache byte.
 
 Run via ``python -m repro.analysis audit`` (`make audit-program`).  The
 sharding audit needs >= 4 devices; the Makefile target forces 4 virtual
@@ -34,8 +44,8 @@ import re
 
 __all__ = ["AuditResult", "AuditReport", "audit_recompiles",
            "audit_donation", "audit_transfers", "audit_sharding",
-           "run_audits", "parse_io_aliases", "hlo_opcodes",
-           "custom_call_targets"]
+           "audit_decode_kernel", "run_audits", "parse_io_aliases",
+           "hlo_opcodes", "custom_call_targets"]
 
 DEFAULT_ARCH = "retnet-1.3b"
 
@@ -189,7 +199,8 @@ def entry_param_bytes(hlo_text: str) -> list[int]:
 
 
 def audit_donation(arch: str = DEFAULT_ARCH, *, chunk: int = 8,
-                   cache_len: int = 32, engine=None) -> AuditResult:
+                   cache_len: int = 32, cache_dtype=None,
+                   engine=None) -> AuditResult:
     """Compile the chunked-prefill step and verify the executable aliases
     the donated resident cache instead of silently copying it.
 
@@ -199,19 +210,28 @@ def audit_donation(arch: str = DEFAULT_ARCH, *, chunk: int = 8,
     The invariant that matters for external-memory traffic is byte
     coverage: the aliased parameter bytes must cover (nearly) the whole
     resident cache, i.e. the KV megabuffer is updated in place and never
-    copied once per chunk."""
+    copied once per chunk.
+
+    ``cache_dtype`` accepts the same values as `lm.make_decode_cache`: a jnp
+    dtype, or a `core.kvq` format string ('int8_tok' | 'mxint4_blk') — the
+    latter audits the *quantized* resident layout (A6, 'donation-quant'):
+    the encoded dict leaves ({"q","s"} / {"m","e"}) must alias just like the
+    fp megabuffer does."""
     import jax
     import jax.numpy as jnp
     from repro.models import lm
 
     engine = engine or tiny_engine(arch)
-    lowered = engine.lower_prefill_chunk(chunk=chunk, cache_len=cache_len)
+    quant = isinstance(cache_dtype, str)
+    cache_dtype = jnp.float32 if cache_dtype is None else cache_dtype
+    lowered = engine.lower_prefill_chunk(chunk=chunk, cache_len=cache_len,
+                                         cache_dtype=cache_dtype)
     text = _compiled_text(lowered)
     aliases = parse_io_aliases(text)
     sizes = entry_param_bytes(text)
 
     cache_abs = jax.eval_shape(
-        lambda: lm.make_decode_cache(engine.cfg, 1, cache_len, jnp.float32,
+        lambda: lm.make_decode_cache(engine.cfg, 1, cache_len, cache_dtype,
                                      start_pos=0))
     cache_bytes = sum(l.size * l.dtype.itemsize
                       for l in jax.tree.leaves(cache_abs))
@@ -219,7 +239,7 @@ def audit_donation(arch: str = DEFAULT_ARCH, *, chunk: int = 8,
     frac = aliased / cache_bytes if cache_bytes else 0.0
     ok = bool(aliases) and frac >= 0.9
     return AuditResult(
-        "donation", ok,
+        f"donation-quant[{cache_dtype}]" if quant else "donation", ok,
         f"{len(aliases)} alias(es) keep {aliased}/{cache_bytes} cache bytes "
         f"({frac:.1%}) in place" if ok else
         f"aliases cover only {aliased}/{cache_bytes} cache bytes "
@@ -365,6 +385,75 @@ def audit_sharding(arch: str = DEFAULT_ARCH, *, mesh_spec: str = "2,2",
                         "mismatches": mismatches})
 
 
+# -- A5: decode-kernel audit -------------------------------------------------
+
+# The decode-kernel audit needs an arch whose decode path actually attends
+# over a KV cache; DEFAULT_ARCH (retnet) is attention-free.
+KERNEL_ARCH = "qwen3-8b"
+
+
+def _count_pallas(engine, logits, cache, gen) -> int:
+    """pallas_call occurrences in the traced fused-decode-loop jaxpr.
+
+    Traced (jaxpr), not compiled: off-TPU, XLA:CPU cannot *compile* a real
+    Pallas TPU kernel, but tracing still records exactly which primitive the
+    `kernels.ops.flash_decode` wrapper resolved to — which is the invariant
+    under audit."""
+    import functools
+    import jax
+
+    key = jax.eval_shape(lambda: jax.random.key(0))
+    jaxpr = jax.make_jaxpr(functools.partial(engine._loop_impl, gen=gen))(
+        engine.params, logits, cache, key)
+    return str(jaxpr).count("pallas_call")
+
+
+def audit_decode_kernel(arch: str = KERNEL_ARCH, *, s_in: int = 8,
+                        cache_len: int = 12) -> AuditResult:
+    """Trace the fused decode loop and prove kernel dispatch honesty:
+
+      * ``kernel_impl='pallas'`` puts the flash-decode `pallas_call` inside
+        the while_loop body — for the fp cache AND for a quantized
+        ('int8_tok') cache, i.e. dequantization is fused into the kernel's
+        KV loads rather than materializing an fp cache first;
+      * ``kernel_impl='auto'`` on a non-TPU backend resolves to the jnp
+        reference path — zero pallas_calls smuggled onto a backend that
+        cannot run them (on TPU, 'auto' must instead match 'pallas').
+    """
+    import jax
+    from repro.models import lm
+    from repro.serving import EngineSpec, GenerationConfig, InferenceEngine
+
+    gen = GenerationConfig(max_new_tokens=4)
+    on_tpu = jax.default_backend() == "tpu"
+
+    def counts(impl: str) -> tuple[int, int]:
+        eng = InferenceEngine.from_config(
+            arch, EngineSpec(reduced=True, quantize=False, kernel_impl=impl))
+        logits, cache = eng._abstract_prefill(s_in, cache_len)
+        qcache = jax.eval_shape(
+            lambda c: lm.quantize_cache(c, eng.cfg, "int8_tok"), cache)
+        return (_count_pallas(eng, logits, cache, gen),
+                _count_pallas(eng, logits, qcache, gen))
+
+    n_pallas_fp, n_pallas_q = counts("pallas")
+    n_auto_fp, n_auto_q = counts("auto")
+
+    want_auto = (n_auto_fp > 0 and n_auto_q > 0) if on_tpu \
+        else (n_auto_fp == 0 and n_auto_q == 0)
+    ok = n_pallas_fp > 0 and n_pallas_q > 0 and want_auto
+    backend = jax.default_backend()
+    return AuditResult(
+        "decode-kernel", ok,
+        f"pallas: {n_pallas_fp} fp / {n_pallas_q} quantized pallas_call(s) "
+        f"in the fused loop; auto on {backend}: {n_auto_fp} fp / "
+        f"{n_auto_q} quantized"
+        + ("" if ok else " — dispatch does not match the impl policy"),
+        {"arch": arch, "backend": backend,
+         "pallas_fp": n_pallas_fp, "pallas_quant": n_pallas_q,
+         "auto_fp": n_auto_fp, "auto_quant": n_auto_q})
+
+
 # -- driver ------------------------------------------------------------------
 
 def run_audits(arch: str = DEFAULT_ARCH, *, mesh_spec: str = "2,2",
@@ -373,7 +462,11 @@ def run_audits(arch: str = DEFAULT_ARCH, *, mesh_spec: str = "2,2",
     results = [
         audit_recompiles(arch, max_len=max_len),
         audit_donation(arch, engine=engine),
+        # quantized-layout donation needs an arch that *has* an attention
+        # KV cache to encode; DEFAULT_ARCH (retnet) is attention-free.
+        audit_donation(KERNEL_ARCH, cache_dtype="int8_tok"),
         audit_transfers(arch, engine=engine),
         audit_sharding(arch, mesh_spec=mesh_spec),
+        audit_decode_kernel(),
     ]
     return AuditReport(results)

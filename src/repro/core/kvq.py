@@ -1,0 +1,205 @@
+"""Quantized KV-cache codecs — the *cache*-side half of the paper's EMA
+(external memory access) argument.
+
+Once decode weights stream at MXINT4 (core/mxint4.py, deploy.py), the
+per-token DRAM traffic of the MVM phase is dominated by KV-cache reads:
+a fp32 GQA cache costs ``4*d`` bytes per token per head, every step.  This
+module provides drop-in cache leaf encodings that cut that stream 4-8x
+while keeping the pool/spill/rollback machinery structure-agnostic:
+
+``int8_tok``
+    Per-token symmetric int8: each cache row (the last axis — one head's
+    key or value vector, or one MLA latent) stores an int8 vector plus one
+    f32 absmax/127 scale.  Bytes/row: ``d + 4`` vs ``4*d`` fp32 (~3.9x).
+
+``mxint4_blk``
+    MXINT4 with per-block shared exponents, the same element format the
+    weight path uses (core/mxint4.py): groups of GROUP_SIZE=16 along the
+    last axis share one power-of-two scale; mantissas are 4-bit two's
+    complement packed two-per-int8.  Bytes/row: ``d/2 + d/16`` (~7.1x vs
+    fp32).  Rows whose last dim is not a multiple of 16 (or odd) fall back
+    to ``int8_tok`` *per leaf* — deterministically, so cache pytree
+    structure is a pure function of (cfg, format).
+
+An encoded leaf is a plain dict (``{"q","s"}`` or ``{"m","e"}``), so every
+pytree-generic consumer — `CachePool` stores, host spill/fetch,
+`ring_rollback`, ServeCell sharding — threads it unchanged.  Encoding is
+row-local (touches only the last axis), which is what makes chunked-prefill
+append bit-exact vs the monolithic path: the same row values encode to the
+same bits regardless of how many rows arrive per dispatch.
+
+`encode`/`decode` are pure jnp and run inside the engine's jitted decode
+loops; the flash-decode kernel (kernels/flash_decode.py) instead dequantizes
+*inside* its KV block loads, so HBM only ever sees the packed bytes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mxint4 as mx
+
+# Cache format names accepted wherever a cache dtype goes
+# (lm.make_decode_cache, CachePool(dtype=...), GenerationConfig.cache_format).
+FORMATS = ("int8_tok", "mxint4_blk")
+
+# Legacy whole-cache int8 (models/layers.py `to_cache_dtype`): one static
+# power-of-two scale, no per-row metadata.  Kept so pre-existing int8 cache
+# dtypes decode identically through this module.
+KV8_SCALE = 32.0
+
+
+def is_format(fmt) -> bool:
+    """True when ``fmt`` is a quantized-cache format name (not a dtype)."""
+    return isinstance(fmt, str) and fmt in FORMATS
+
+
+def check_format(fmt) -> str:
+    if not is_format(fmt):
+        raise ValueError(f"unknown cache format {fmt!r}; expected one of "
+                         f"{FORMATS} or a jnp dtype")
+    return fmt
+
+
+def effective_format(fmt: str, d: int) -> str:
+    """Per-leaf format after the divisibility fallback: mxint4_blk needs the
+    last dim to hold whole 16-element groups and an even mantissa count."""
+    check_format(fmt)
+    if fmt == "mxint4_blk" and (d % mx.GROUP_SIZE != 0 or d % 2 != 0):
+        return "int8_tok"
+    return fmt
+
+
+def leaf_format(leaf) -> str | None:
+    """Format of an encoded leaf dict, or None for a plain array."""
+    if not isinstance(leaf, dict):
+        return None
+    keys = set(leaf.keys())
+    if keys == {"q", "s"}:
+        return "int8_tok"
+    if keys == {"m", "e"}:
+        return "mxint4_blk"
+    return None
+
+
+def decoded_dim(leaf) -> int:
+    """Last (feature) dim of a cache leaf after decoding."""
+    fmt = leaf_format(leaf)
+    if fmt == "int8_tok":
+        return leaf["q"].shape[-1]
+    if fmt == "mxint4_blk":
+        return leaf["m"].shape[-1] * 2
+    return leaf.shape[-1]
+
+
+def nbytes_per_row(fmt, d: int) -> float:
+    """Modeled cache bytes for one d-element row — the roofline's currency.
+    ``fmt`` may be a format name or anything `jnp.dtype` accepts."""
+    if is_format(fmt):
+        if effective_format(fmt, d) == "mxint4_blk":
+            return d / 2 + d / mx.GROUP_SIZE      # packed mantissas + exps
+        return d + 4.0                            # int8 + one f32 scale
+    return d * jnp.dtype(fmt).itemsize
+
+
+# -- int8_tok ----------------------------------------------------------------
+
+def _encode_int8_tok(x: jax.Array) -> dict:
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _decode_int8_tok(leaf: dict) -> jax.Array:
+    return leaf["q"].astype(jnp.float32) * leaf["s"]
+
+
+# -- mxint4_blk --------------------------------------------------------------
+# Reuses the weight codec's constants/geometry (core/mxint4.py) on N-D cache
+# leaves: groups of GROUP_SIZE along the last axis share a power-of-two
+# scale 2^(e - MANT_SHIFT); mantissas are 4-bit two's complement packed
+# low-nibble-first two-per-int8.  Exponents stay one int8 per group
+# (unpacked): one byte per 16 elements is already noise next to the
+# mantissa stream and keeps odd group counts representable.
+
+def _encode_mxint4_blk(x: jax.Array) -> dict:
+    xf = x.astype(jnp.float32)
+    d = xf.shape[-1]
+    g = xf.reshape(xf.shape[:-1] + (d // mx.GROUP_SIZE, mx.GROUP_SIZE))
+    gmax = jnp.max(jnp.abs(g), axis=-1)
+    safe = jnp.where(gmax > 0, gmax, 2.0 ** mx.SHIFT_MIN)
+    _, e = jnp.frexp(safe)
+    exps = jnp.clip(e - 1, mx.SHIFT_MIN, mx.SHIFT_MAX).astype(jnp.int8)
+    scale = jnp.exp2(exps.astype(jnp.float32) - mx.MANT_SHIFT)
+    mant = jnp.round(g / scale[..., None])
+    mant = jnp.clip(mant, mx.MANT_MIN, mx.MANT_MAX).astype(jnp.int8)
+    flat = mant.reshape(xf.shape[:-1] + (d,))
+    lo, hi = flat[..., 0::2], flat[..., 1::2]
+    packed = ((lo & 0x0F) | (hi << 4)).astype(jnp.int8)
+    return {"m": packed, "e": exps}
+
+
+def _decode_mxint4_blk(leaf: dict) -> jax.Array:
+    m, e = leaf["m"], leaf["e"]
+    lo = jnp.left_shift(m, 4)
+    lo = jnp.right_shift(lo, 4)                     # arithmetic: sign-extends
+    hi = jnp.right_shift(m, 4)
+    mant = jnp.stack([lo, hi], axis=-1).reshape(m.shape[:-1] + (2 * m.shape[-1],))
+    scale = jnp.exp2(e.astype(jnp.float32) - mx.MANT_SHIFT)
+    g = mant.astype(jnp.float32).reshape(
+        m.shape[:-1] + (e.shape[-1], mx.GROUP_SIZE))
+    return (g * scale[..., None]).reshape(mant.shape)
+
+
+# -- public API --------------------------------------------------------------
+
+def encode(x: jax.Array, fmt: str) -> dict:
+    """Encode a cache leaf (last axis = feature dim) into format ``fmt``.
+    Already-encoded dicts pass through (idempotent on matching structure)."""
+    if isinstance(x, dict):
+        return x
+    fmt = effective_format(fmt, x.shape[-1])
+    if fmt == "mxint4_blk":
+        return _encode_mxint4_blk(x)
+    return _encode_int8_tok(x)
+
+
+def encode_like(x: jax.Array, leaf) -> dict:
+    """Encode ``x`` into the same format as an existing encoded leaf —
+    the cache-append path: new K/V rows must match the resident store."""
+    fmt = leaf_format(leaf)
+    if fmt is None:
+        raise TypeError(f"encode_like target is not an encoded cache leaf: "
+                        f"{type(leaf).__name__}")
+    return encode(x, fmt)
+
+
+def decode(leaf) -> jax.Array:
+    """Encoded leaf dict (or plain array) -> f32 array.  Plain int8 arrays
+    take the legacy static-scale path (`KV8_SCALE`); other dtypes upcast."""
+    fmt = leaf_format(leaf)
+    if fmt == "int8_tok":
+        return _decode_int8_tok(leaf)
+    if fmt == "mxint4_blk":
+        return _decode_mxint4_blk(leaf)
+    if hasattr(leaf, "dtype") and leaf.dtype == jnp.int8:
+        return leaf.astype(jnp.float32) / KV8_SCALE
+    return leaf.astype(jnp.float32) if hasattr(leaf, "astype") else leaf
+
+
+def zeros(shape: tuple, fmt: str) -> dict:
+    """Zero-initialized encoded leaf, bit-identical to ``encode(zeros)`` —
+    required so pool stores, spill round trips and rollback merges of
+    untouched slots compare equal to freshly-encoded zero rows."""
+    d = shape[-1]
+    fmt = effective_format(fmt, d)
+    lead = tuple(shape[:-1])
+    if fmt == "mxint4_blk":
+        return {"m": jnp.zeros(lead + (d // 2,), jnp.int8),
+                "e": jnp.full(lead + (d // mx.GROUP_SIZE,), mx.SHIFT_MIN,
+                              jnp.int8)}
+    return {"q": jnp.zeros(shape, jnp.int8),
+            "s": jnp.ones(lead + (1,), jnp.float32)}

@@ -1,6 +1,11 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 mxint4_matmul.py   — C2: dequant-fused W4A8 matmul (the HSA MVM dataflow)
+flash_decode.py    — split-KV single-token decode attention: online-softmax
+                     combine across KV grid blocks, GQA/MLA-aware, with
+                     core/kvq dequant (int8_tok / mxint4_blk / legacy int8)
+                     fused into the cache block loads — packed bytes are all
+                     HBM ever streams on the decode rung
 retention_kernel.py — C5: chunkwise retention (the HSA MMM prefill workload)
 rmsnorm_stats.py   — C3: fused sigma^{-1} reduction
 ops.py             — jit'd public wrappers (impl='auto'|'pallas'|'ref')

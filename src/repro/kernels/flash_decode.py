@@ -1,0 +1,199 @@
+"""Pallas TPU kernel: split-KV flash-decode attention — the MVM-phase
+attention hot loop.
+
+The single-token decode step is memory-bound: per step, per layer, the whole
+resident KV cache streams HBM -> VMEM once while the MXU does O(C*d) flops —
+arithmetic intensity ~1, two orders below the ridge.  So the kernel's job is
+to (a) touch each cache byte exactly once, (b) touch as *few* bytes as the
+cache format allows, and (c) never materialize the [G, C] score matrix in HBM.
+
+Dataflow (the neuronx ``flashdecode_attention`` split-KV idiom, on the
+paper's HSA decode rung): grid ``(B, KV, C/block_c)`` with the KV-length
+axis innermost/sequential ("arbitrary"); each step loads one
+``(block_c, d)`` cache tile into VMEM, *dequantizes in-register* (int8
+per-token scales or MXINT4 per-block shared exponents — core/kvq.py; packed
+bytes are all HBM ever streams), computes partial scores, and folds them
+into VMEM-resident online-softmax state ``(m, l, acc)`` — the same combine
+as layers._flash_fwd_impl, one token wide.  The normalized output is written
+once on the final KV block.
+
+GQA batches G = n_heads/n_kv_heads query heads per kv head in one tile;
+MLA maps to KV=1 with a second score stream (the shared rope key) riding
+alongside the latent stream: ``s = (q·k + q2·k2) * scale``.
+
+CPU runs use ``interpret=True`` (ops.flash_decode sets it automatically off
+TPU); correctness oracle: kernels/ref.py `flash_decode_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import tpu_compiler_params
+from repro.core import kvq
+from repro.core.mxint4 import GROUP_SIZE, MANT_SHIFT
+
+
+def _part_fmt(leaf) -> str:
+    """Static dequant tag for one cache operand."""
+    fmt = kvq.leaf_format(leaf)
+    if fmt is not None:
+        return fmt
+    if leaf.dtype == jnp.int8:
+        return "legacy_int8"
+    return "fp"
+
+
+def _parts(leaf) -> list[jax.Array]:
+    """Flatten one cache operand into its HBM-resident arrays (key order is
+    fixed per format so kernel ref order is deterministic)."""
+    fmt = kvq.leaf_format(leaf)
+    if fmt == "int8_tok":
+        return [leaf["q"], leaf["s"]]
+    if fmt == "mxint4_blk":
+        return [leaf["m"], leaf["e"]]
+    return [leaf]
+
+
+def _dequant(parts: list, fmt: str) -> jax.Array:
+    """(1, block_c, 1, *) part refs -> f32 [block_c, d] tile, in VMEM."""
+    if fmt == "int8_tok":
+        return parts[0][0, :, 0, :].astype(jnp.float32) * parts[1][0, :, 0, :]
+    if fmt == "mxint4_blk":
+        m8 = parts[0][0, :, 0, :]
+        lo = ((m8 << 4) >> 4).astype(jnp.int8)          # sign-extended low
+        hi = (m8 >> 4).astype(jnp.int8)                 # arithmetic shift
+        mant = jnp.stack([lo, hi], axis=-1).reshape(m8.shape[0], -1)
+        e = parts[1][0, :, 0, :]
+        scale = jnp.exp2(e.astype(jnp.float32) - MANT_SHIFT)
+        return (mant.astype(jnp.float32)
+                .reshape(m8.shape[0], -1, GROUP_SIZE) * scale[..., None]
+                ).reshape(m8.shape[0], -1)
+    if fmt == "legacy_int8":
+        return parts[0][0, :, 0, :].astype(jnp.float32) / kvq.KV8_SCALE
+    return parts[0][0, :, 0, :].astype(jnp.float32)
+
+
+def _kernel(len_ref, q_ref, *refs, scale: float, block_c: int,
+            n_k: int, n_v: int, n_k2: int, kfmt: str, vfmt: str, k2fmt: str,
+            two_stream: bool, out_dtype):
+    """One (batch lane, kv head) output row; KV blocks iterated sequentially."""
+    i = 0
+    q2_ref = None
+    if two_stream:
+        q2_ref, i = refs[0], 1
+    k_parts = refs[i:i + n_k]
+    v_parts = refs[i + n_k:i + n_k + n_v]
+    k2_parts = refs[i + n_k + n_v:i + n_k + n_v + n_k2]
+    out_ref, m_ref, l_ref, acc_ref = refs[i + n_k + n_v + n_k2:]
+
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kblk = _dequant(list(k_parts), kfmt)                # f32 [block_c, d]
+    vblk = _dequant(list(v_parts), vfmt)                # f32 [block_c, dv]
+    qv = q_ref[0, 0].astype(jnp.float32)                # [G, d]
+    s = jax.lax.dot_general(qv, kblk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if two_stream:
+        k2blk = _dequant(list(k2_parts), k2fmt)
+        q2v = q2_ref[0, 0].astype(jnp.float32)
+        s = s + jax.lax.dot_general(q2v, k2blk, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    s = s * scale                                       # [G, block_c]
+
+    # Rows at absolute index >= kv_len are masked out; this also covers the
+    # padded tail of a non-dividing final block (kv_len <= C always).  The
+    # V rows are zeroed too so boundary-pad garbage can't ride into acc.
+    idx = kk * block_c + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < len_ref[0, 0], s, -jnp.inf)
+    ridx = kk * block_c + jax.lax.broadcasted_iota(jnp.int32, vblk.shape, 0)
+    vblk = jnp.where(ridx < len_ref[0, 0], vblk, 0.0)
+
+    m_prev = m_ref[...]                                 # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)                             # masked rows -> 0
+    corr = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, -jnp.inf))
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, vblk, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _emit():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0, 0] = out.astype(out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "block_c", "interpret"))
+def flash_decode_pallas(q, k, v, kv_len, *, q2=None, k2=None,
+                        scale: float | None = None, block_c: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """Split-KV decode attention.  q ``[B, KV, G, d]``; k/v cache leaves
+    ``[B, C, KV, *]`` (fp/legacy-int8 arrays or kvq-encoded dicts); ``kv_len``
+    a traced i32 scalar.  Optional second stream ``q2 [B, KV, G, d2]`` /
+    ``k2 [B, C, KV, d2]`` (MLA rope term).  ``scale=None`` -> ``1/sqrt(d)``.
+
+    Returns f32 ``[B, KV, G, dv]``.
+    """
+    b, kv_h, g, d = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    two_stream = q2 is not None
+    kfmt, vfmt = _part_fmt(k), _part_fmt(v)
+    k2fmt = _part_fmt(k2) if two_stream else "fp"
+    k_parts, v_parts = _parts(k), _parts(v)
+    k2_parts = _parts(k2) if two_stream else []
+    c = k_parts[0].shape[1]
+    dv = kvq.decoded_dim(v)
+    bc = min(block_c, c)
+    n_blocks = pl.cdiv(c, bc)
+
+    def part_spec(p):
+        return pl.BlockSpec((1, bc, 1, p.shape[-1]),
+                            lambda bi, hi, kk: (bi, kk, hi, 0))
+
+    in_specs = [pl.BlockSpec((1, 1), lambda bi, hi, kk: (0, 0)),       # kv_len
+                pl.BlockSpec((1, 1, g, d), lambda bi, hi, kk: (bi, hi, 0, 0))]
+    operands = [jnp.asarray(kv_len, jnp.int32).reshape(1, 1), q]
+    if two_stream:
+        d2 = q2.shape[-1]
+        in_specs.append(pl.BlockSpec((1, 1, g, d2),
+                                     lambda bi, hi, kk: (bi, hi, 0, 0)))
+        operands.append(q2)
+    for p in k_parts + v_parts + k2_parts:
+        in_specs.append(part_spec(p))
+        operands.append(p)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_c=bc, n_k=len(k_parts),
+        n_v=len(v_parts), n_k2=len(k2_parts), kfmt=kfmt, vfmt=vfmt,
+        k2fmt=k2fmt, two_stream=two_stream, out_dtype=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv_h, n_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, dv), lambda bi, hi, kk: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv_h, g, dv), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),     # m
+                        pltpu.VMEM((g, 1), jnp.float32),     # l
+                        pltpu.VMEM((g, dv), jnp.float32)],   # acc
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)

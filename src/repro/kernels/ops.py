@@ -158,6 +158,49 @@ def retention_chunkwise(
             st.reshape(b, h, dk, dv))
 
 
+def flash_decode(
+    q: jax.Array,          # GQA: [B, KV, G, d] | MLA: [B, H, r]
+    k,                     # cache leaf: fp/int8 array or kvq-encoded dict
+    v,
+    kv_len: jax.Array,     # traced i32 scalar — valid cache prefix length
+    *,
+    q2: jax.Array | None = None,   # MLA rope query [B, H, dr]
+    k2=None,                       # MLA rope key cache leaf [B, C, dr]
+    scale=None,                    # None -> s/sqrt(d); MLA passes 1/sqrt(dn+dr)
+    impl: str = "auto",
+    interpret: bool = False,
+    block_c: int = 128,
+) -> jax.Array:
+    """Single-token decode attention over the first ``kv_len`` cache rows —
+    the MVM-phase hot loop (kernels/flash_decode.py).
+
+    Two layouts (see ref.flash_decode_ref): GQA with ``[B, C, KV, d]`` cache
+    leaves, and MLA (``q.ndim == 3``) attending in the compressed latent
+    space with the shared rope key as a second score stream.  Cache leaves
+    may be kvq-quantized dicts — the Pallas path dequantizes inside its KV
+    block loads; the ref path is the bit-exact jnp oracle the engine decode
+    loops are token-identical against.
+
+    'pallas' off-TPU automatically runs in interpret mode, so the kernel
+    path stays testable (and auditable) on CPU.
+    """
+    if _resolve(impl) == "ref":
+        return _ref.flash_decode_ref(q, k, v, kv_len, q2=q2, k2=k2,
+                                     scale=scale)
+    from repro.kernels.flash_decode import flash_decode_pallas
+    interpret = interpret or jax.default_backend() != "tpu"
+    sc = None if scale is None else float(scale)
+    if q.ndim == 4:
+        return flash_decode_pallas(q, k, v, kv_len, scale=sc,
+                                   block_c=block_c, interpret=interpret)
+    # MLA: insert a singleton kv-head axis around the kernel call.
+    add_kv = lambda leaf: jax.tree.map(lambda x: x[:, :, None], leaf)
+    out = flash_decode_pallas(
+        q[:, None], add_kv(k), add_kv(v), kv_len, q2=q2[:, None],
+        k2=add_kv(k2), scale=sc, block_c=block_c, interpret=interpret)
+    return out[:, 0]
+
+
 def rmsnorm_stats(
     y: jax.Array, *, eps: float = 1e-6, impl: str = "auto", interpret: bool = False
 ) -> jax.Array:

@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import kvq
 from repro.core import mxint4 as mx
 from repro.core import retention as ret
 
@@ -66,3 +67,45 @@ def rmsnorm_stats_ref(y: jax.Array, eps: float = 1e-6) -> jax.Array:
     """sigma^{-1} per row of ``[M, D]`` (the fused-RMSNorm producer)."""
     y32 = y.astype(jnp.float32)
     return jax.lax.rsqrt(jnp.mean(y32 * y32, axis=-1) + eps)
+
+
+def flash_decode_ref(q, k, v, kv_len, *, q2=None, k2=None, scale=None):
+    """Single-token decode attention over the first ``kv_len`` cache rows.
+
+    Two layouts, matching the two attention decode entry points in
+    models/layers.py *operation for operation* (same einsum strings, same
+    mask/softmax order), so greedy decode through this path is bit-identical
+    to the pre-kernel `attend_one_step` / `mla_decode` math:
+
+    GQA  (``q.ndim == 4``): q ``[B, KV, G, d]``; k/v ``[B, C, KV, d]`` cache
+        leaves (fp / legacy-int8 array or kvq-encoded dict).  ``scale=None``
+        applies the ``s / sqrt(d)`` convention.
+    MLA  (``q.ndim == 3``): q = absorbed latent queries ``[B, H, r]`` with a
+        second rope score stream ``q2 [B, H, dr]`` against ``k2 [B, C, dr]``;
+        v is the shared latent cache.  ``scale`` is required
+        (``1/sqrt(dn+dr)``) and multiplies the summed scores.
+
+    ``kv_len`` is a traced i32 scalar: rows at index >= kv_len are masked to
+    -inf before the softmax (ring caches pass C once wrapped — softmax over
+    a full ring is order-independent, so a prefix-length mask suffices).
+    """
+    kf = kvq.decode(k)
+    vf = kvq.decode(v)
+    b, c = kf.shape[0], kf.shape[1]
+    valid = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1) < kv_len
+    if q.ndim == 4:
+        d = q.shape[-1]
+        s = jnp.einsum("bhgd,bchd->bhgc", q.astype(jnp.float32), kf)
+        s = s * scale if scale is not None else s / jnp.sqrt(jnp.float32(d))
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgc,bchd->bhgd", p, vf)
+    if q2 is None or k2 is None or scale is None:
+        raise ValueError("MLA layout (q.ndim == 3) needs q2, k2 and scale")
+    s_lat = jnp.einsum("bhr,bcr->bhc", q.astype(jnp.float32), kf)
+    s_rope = jnp.einsum("bhr,bcr->bhc", q2.astype(jnp.float32),
+                        kvq.decode(k2))
+    s = (s_lat + s_rope) * scale
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhc,bcr->bhr", p, vf)

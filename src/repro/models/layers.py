@@ -15,8 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fused_rmsnorm as fr
+from repro.core import kvq
 from repro.core import online_rope as orp
 from repro.core.hsa import HSAEngine
+from repro.kernels import ops as kops
 from repro.models.config import ModelConfig
 from repro.models.modules import ParamBuilder
 from repro.runtime.sharding import constrain
@@ -274,7 +276,10 @@ def flash_attention(
 
 # int8 KV-cache (beyond-paper, consistent with the paper's A8 activations):
 # symmetric fixed-point with a static scale; halves decode cache HBM reads.
-KV8_SCALE = 32.0
+# The per-row quantized formats ('int8_tok', 'mxint4_blk') live in
+# core/kvq.py; their encoded leaves are dicts and thread through every cache
+# helper below structure-generically.
+KV8_SCALE = kvq.KV8_SCALE
 
 
 def to_cache_dtype(x: jax.Array, dtype) -> jax.Array:
@@ -284,19 +289,65 @@ def to_cache_dtype(x: jax.Array, dtype) -> jax.Array:
     return x.astype(dtype)
 
 
-def from_cache_dtype(c: jax.Array) -> jax.Array:
-    if c.dtype == jnp.int8:
-        return c.astype(jnp.float32) / KV8_SCALE
-    return c.astype(jnp.float32)
+def from_cache_dtype(c) -> jax.Array:
+    """Cache leaf (fp/int8 array or kvq-encoded dict) -> f32 array."""
+    return kvq.decode(c)
+
+
+def to_cache_like(x: jax.Array, leaf):
+    """Encode fresh K/V rows to match the resident cache leaf's format."""
+    if isinstance(leaf, dict):
+        return kvq.encode_like(x, leaf)
+    return to_cache_dtype(x, leaf.dtype)
+
+
+def cache_update(leaf, x: jax.Array, pos) -> Any:
+    """Append rows at the cache axis (axis 1) via dynamic_update_slice —
+    structure-generic over plain and kvq-encoded leaves."""
+    enc = to_cache_like(x, leaf)
+
+    def upd(buf, rows):
+        return jax.lax.dynamic_update_slice(
+            buf, rows, (0, pos) + (0,) * (buf.ndim - 2))
+
+    if isinstance(leaf, dict):
+        return {kk: upd(leaf[kk], enc[kk]) for kk in leaf}
+    return upd(leaf, enc)
+
+
+def cache_scatter(leaf, x: jax.Array, idx: jax.Array) -> Any:
+    """Ring-buffer scatter at precomputed slot indices (axis 1)."""
+    enc = to_cache_like(x, leaf)
+    if isinstance(leaf, dict):
+        return {kk: leaf[kk].at[:, idx].set(enc[kk]) for kk in leaf}
+    return leaf.at[:, idx].set(enc)
+
+
+def cache_gather(leaf, idx: jax.Array) -> Any:
+    """Ring-buffer gather at slot indices (axis 1), format-preserving."""
+    if isinstance(leaf, dict):
+        return {kk: leaf[kk][:, idx] for kk in leaf}
+    return leaf[:, idx]
+
+
+def cache_capacity(leaf) -> int:
+    """Slot count of a cache leaf (axis 1), dict- or array-formed."""
+    if isinstance(leaf, dict):
+        return next(iter(leaf.values())).shape[1]
+    return leaf.shape[1]
 
 
 def attend_one_step(
     q: jax.Array,              # [B, KV, G, hd] — one new token
-    k_cache: jax.Array,        # [B, C, KV, hd]
-    v_cache: jax.Array,
+    k_cache,                   # [B, C, KV, hd] array or kvq-encoded dict
+    v_cache,
     valid_mask: jax.Array,     # bool [B, C]
 ) -> jax.Array:
-    """Decode-phase attention over the cache (the MVM-shaped workload)."""
+    """Decode-phase attention over the cache (the MVM-shaped workload).
+
+    This is the *oracle* for kernels/flash_decode.py: the kernel's ref path
+    reproduces these exact einsum/mask/softmax steps, so greedy decode is
+    bit-identical across `impl` settings on the ref path."""
     hd = q.shape[-1]
     s = jnp.einsum("bhgd,bchd->bhgc", q.astype(jnp.float32),
                    from_cache_dtype(k_cache)) / jnp.sqrt(jnp.float32(hd))
@@ -399,16 +450,15 @@ def gqa_decode(
         k = orp.apply_rope(k, rope_sin, rope_cos)
     q = q[:, 0].reshape(b, kv, h // kv, hd)
 
-    c = cache["k"].shape[1]
-    # Sliding-window caches are ring buffers; linear caches clamp at capacity.
+    c = cache_capacity(cache["k"])
+    # Sliding-window caches are ring buffers; linear caches clamp at capacity
+    # (admission rejects requests that would reach it — CacheCapacityError).
     slot = (pos % c) if window else jnp.minimum(pos, c - 1)
-    k_cache = jax.lax.dynamic_update_slice(
-        cache["k"], to_cache_dtype(k, cache["k"].dtype), (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        cache["v"], to_cache_dtype(v, cache["v"].dtype), (0, slot, 0, 0))
+    k_cache = cache_update(cache["k"], k, slot)
+    v_cache = cache_update(cache["v"], v, slot)
     n_valid = jnp.minimum(pos + 1, c)
-    valid = jnp.broadcast_to(jnp.arange(c)[None, :] < n_valid, (b, c))
-    out = attend_one_step(q, k_cache, v_cache, valid)
+    out = kops.flash_decode(q, k_cache, v_cache, n_valid,
+                            impl=engine.config.kernel_impl)
     out = engine.linear(p["wo"], out.reshape(b, 1, h * hd), "decode")
     return out, {"k": k_cache, "v": v_cache}
 
@@ -452,21 +502,22 @@ def gqa_chunk(
         # Negative positions alias valid slots but are masked via k_offset.
         base = pos - w
         slots = (base + jnp.arange(w)) % w
+        # The fresh chunk attends through the same cache round trip its
+        # writes will take, so verify-chunk scores match the per-token decode
+        # steps bit-for-bit under quantized formats (exact no-op in fp).
         k_lin = jnp.concatenate(
-            [from_cache_dtype(cache["k"][:, slots]), k.astype(jnp.float32)],
-            axis=1)
+            [from_cache_dtype(cache_gather(cache["k"], slots)),
+             from_cache_dtype(to_cache_like(k, cache["k"]))], axis=1)
         v_lin = jnp.concatenate(
-            [from_cache_dtype(cache["v"][:, slots]), v.astype(jnp.float32)],
-            axis=1)
+            [from_cache_dtype(cache_gather(cache["v"], slots)),
+             from_cache_dtype(to_cache_like(v, cache["v"]))], axis=1)
         k_off = base
         idx = (pos + jnp.arange(c)) % w
-        k_cache = cache["k"].at[:, idx].set(to_cache_dtype(k, cache["k"].dtype))
-        v_cache = cache["v"].at[:, idx].set(to_cache_dtype(v, cache["v"].dtype))
+        k_cache = cache_scatter(cache["k"], k, idx)
+        v_cache = cache_scatter(cache["v"], v, idx)
     else:
-        k_cache = jax.lax.dynamic_update_slice(
-            cache["k"], to_cache_dtype(k, cache["k"].dtype), (0, pos, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(
-            cache["v"], to_cache_dtype(v, cache["v"].dtype), (0, pos, 0, 0))
+        k_cache = cache_update(cache["k"], k, pos)
+        v_cache = cache_update(cache["v"], v, pos)
         k_lin, v_lin, k_off = (from_cache_dtype(k_cache),
                                from_cache_dtype(v_cache), 0)
 
@@ -500,6 +551,15 @@ def ring_rollback(prev: Params, new: Params, pos: jax.Array, c: int,
     return jax.tree.map(merge, prev, new)
 
 
+def make_cache_leaf(shape: tuple, dtype) -> Any:
+    """One attention-cache buffer: ``dtype`` is a jnp dtype or a kvq format
+    name ('int8_tok' / 'mxint4_blk'), in which case the leaf is the encoded
+    dict (bit-identical to encoding a zero buffer)."""
+    if kvq.is_format(dtype):
+        return kvq.zeros(shape, dtype)
+    return jnp.zeros(shape, dtype)
+
+
 def gqa_make_cache(cfg: ModelConfig, batch: int, cache_len: int,
                    dtype=jnp.bfloat16) -> Params:
     kv, hd = cfg.n_kv_heads, cfg.head_dim_
@@ -508,8 +568,8 @@ def gqa_make_cache(cfg: ModelConfig, batch: int, cache_len: int,
     # that layout even when cache_len < window (serving.CachePool slots).
     c = cfg.sliding_window if cfg.sliding_window else cache_len
     return {
-        "k": jnp.zeros((batch, c, kv, hd), dtype),
-        "v": jnp.zeros((batch, c, kv, hd), dtype),
+        "k": make_cache_leaf((batch, c, kv, hd), dtype),
+        "v": make_cache_leaf((batch, c, kv, hd), dtype),
     }
 
 
@@ -606,29 +666,21 @@ def mla_decode(p: Params, x_star, sig_inv, engine: HSAEngine, cfg: ModelConfig,
         q_rope = orp.apply_rope(q_rope, rope_sin, rope_cos)
         k_rope_new = orp.apply_rope(k_rope_new, rope_sin, rope_cos)
 
-    c = cache["c_kv"].shape[1]
+    c = cache_capacity(cache["c_kv"])
     slot = jnp.minimum(pos, c - 1)
-    c_kv = jax.lax.dynamic_update_slice(
-        cache["c_kv"], to_cache_dtype(c_kv_new, cache["c_kv"].dtype),
-        (0, slot, 0))
-    k_rope = jax.lax.dynamic_update_slice(
-        cache["k_rope"], to_cache_dtype(k_rope_new, cache["k_rope"].dtype),
-        (0, slot, 0))
+    c_kv = cache_update(cache["c_kv"], c_kv_new, slot)
+    k_rope = cache_update(cache["k_rope"], k_rope_new, slot)
 
-    # Absorb W_uk into q: q_abs[b,h,r] = sum_n q_nope[b,h,n] * Wk_b[r, h, n]
+    # Absorb W_uk into q: q_abs[b,h,r] = sum_n q_nope[b,h,n] * Wk_b[r, h, n];
+    # attention then runs directly in the compressed latent space through the
+    # flash-decode op (the rope term rides as the second score stream).
     wk_b = p["wk_b"]["w"].reshape(kvr, h, dn).astype(jnp.float32)
     q_abs = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32), wk_b)
-    s_lat = jnp.einsum("bhr,bcr->bhc", q_abs, c_kv.astype(jnp.float32))
-    s_rope = jnp.einsum("bhr,bcr->bhc", q_rope.astype(jnp.float32),
-                        k_rope.astype(jnp.float32))
     scale = 1.0 / jnp.sqrt(jnp.float32(dn + dr))
-    scores = (s_lat + s_rope) * scale
-    valid = (jnp.arange(c)[None, :] < jnp.minimum(pos + 1, c))
-    scores = jnp.where(valid[:, None, :], scores, -jnp.inf)
-    attn = jax.nn.softmax(scores, axis=-1)
-
-    # Attend in latent space, then absorb W_uv on the way out.
-    lat_out = jnp.einsum("bhc,bcr->bhr", attn, c_kv.astype(jnp.float32))
+    n_valid = jnp.minimum(pos + 1, c)
+    lat_out = kops.flash_decode(q_abs, c_kv, c_kv, n_valid, q2=q_rope,
+                                k2=k_rope, scale=scale,
+                                impl=engine.config.kernel_impl)
     wv_b = p["wv_b"]["w"].reshape(kvr, h, dv).astype(jnp.float32)
     out_heads = jnp.einsum("bhr,rhv->bhv", lat_out, wv_b)
     out = engine.linear(p["wo"], out_heads.reshape(b, 1, h * dv), "decode")
@@ -658,14 +710,10 @@ def mla_chunk(p: Params, x_star, sig_inv, engine: HSAEngine, cfg: ModelConfig,
                                     rope_sin[None, :, None, :],
                                     rope_cos[None, :, None, :])[:, :, 0]
 
-    c_kv = jax.lax.dynamic_update_slice(
-        cache["c_kv"], to_cache_dtype(c_kv_new, cache["c_kv"].dtype),
-        (0, pos, 0))
-    k_rope = jax.lax.dynamic_update_slice(
-        cache["k_rope"], to_cache_dtype(k_rope_new, cache["k_rope"].dtype),
-        (0, pos, 0))
+    c_kv = cache_update(cache["c_kv"], c_kv_new, pos)
+    k_rope = cache_update(cache["k_rope"], k_rope_new, pos)
 
-    cap = c_kv.shape[1]
+    cap = cache_capacity(c_kv)
     c_kv_f = from_cache_dtype(c_kv)
     k_nope = engine.linear(p["wk_b"], c_kv_f, "prefill").reshape(b, cap, h, dn)
     v = engine.linear(p["wv_b"], c_kv_f, "prefill").reshape(b, cap, h, dv)
@@ -685,6 +733,7 @@ def mla_chunk(p: Params, x_star, sig_inv, engine: HSAEngine, cfg: ModelConfig,
 def mla_make_cache(cfg: ModelConfig, batch: int, cache_len: int,
                    dtype=jnp.bfloat16) -> Params:
     return {
-        "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
-        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+        "c_kv": make_cache_leaf((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "k_rope": make_cache_leaf((batch, cache_len, cfg.qk_rope_head_dim),
+                                  dtype),
     }

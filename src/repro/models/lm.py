@@ -27,8 +27,10 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import kvq
 from repro.core import online_rope as orp
 from repro.core.hsa import HSAEngine
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models import mlp as M
 from repro.models import retnet as R
@@ -302,8 +304,11 @@ def _block_decode(p: Params, x: jax.Array, cfg: ModelConfig, engine: HSAEngine,
         h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
         q = engine.linear(p["cross"]["wq"], xc, "decode", row_scale=sigc)
         q = q.reshape(b, h, hd).reshape(b, kv, h // kv, hd)
-        valid = jnp.ones(cache["cross_k"].shape[:2], bool)
-        c_out = L.attend_one_step(q, cache["cross_k"], cache["cross_v"], valid)
+        # Cross K/V is a fixed-length full-valid cache: kv_len = capacity.
+        src = L.cache_capacity(cache["cross_k"])
+        c_out = kops.flash_decode(q, cache["cross_k"], cache["cross_v"],
+                                  jnp.int32(src),
+                                  impl=engine.config.kernel_impl)
         c_out = engine.linear(p["cross"]["wo"], c_out.reshape(b, 1, h * hd),
                               "decode")
         x = x + c_out
@@ -840,7 +845,11 @@ def make_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
     """Cold caches.  Default ``start_pos`` keeps the decode-only dry-run
     convention (pos = cache_len - 1); ``start_pos=0`` yields the empty cache
     a chunked prefill appends into (zeros are the exact initial state for
-    every cache kind: KV rings, retention S, mamba h/conv)."""
+    every cache kind: KV rings, retention S, mamba h/conv).
+
+    ``dtype`` may also be a quantized-cache format name (`core.kvq.FORMATS`):
+    attention KV leaves become encoded dicts (`kvq.zeros`, bit-identical to
+    encoding a zero cache) while recurrent state stays fp32."""
     pos = cache_len - 1 if start_pos is None else start_pos
     caches: Params = {"pos": jnp.int32(pos)}
     if cfg.rope:
@@ -863,8 +872,8 @@ def make_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
             kv, hd = cfg.n_kv_heads, cfg.head_dim_
             src = cfg.frontend_tokens or cache_len
             return {"self": c,
-                    "cross_k": jnp.zeros((batch, src, kv, hd), dtype),
-                    "cross_v": jnp.zeros((batch, src, kv, hd), dtype)}
+                    "cross_k": L.make_cache_leaf((batch, src, kv, hd), dtype),
+                    "cross_v": L.make_cache_leaf((batch, src, kv, hd), dtype)}
         return c
 
     for gname, count, kind in layer_groups(cfg):
@@ -875,12 +884,56 @@ def make_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
     return caches
 
 
+def quantize_cache(cache: Params, cfg: ModelConfig, fmt: str) -> Params:
+    """Encode the attention KV leaves of a warm decode cache into ``fmt``.
+
+    The bridge between monolithic prefill (always fp — one MMM dispatch has
+    no bandwidth problem) and a quantized decode residency: the engine calls
+    this once, right after `forward_prefill`, when the request's
+    `GenerationConfig.cache_format` is set.  Chunked prefill instead appends
+    into an already-encoded cache (`make_decode_cache(dtype=fmt)`), and
+    row-local encoding makes the two paths bit-identical.
+
+    Recurrent state (retention S, mamba h/conv), `pos` and rope angles pass
+    through untouched — only the KV streams that decode re-reads every step
+    are worth compressing.  Idempotent: already-encoded leaves pass through.
+    """
+    kvq.check_format(fmt)
+    enc = lambda x: kvq.encode(x, fmt)
+
+    def enc_self(g):
+        if cfg.attn_type == "mla":
+            return {"c_kv": enc(g["c_kv"]), "k_rope": enc(g["k_rope"])}
+        return {"k": enc(g["k"]), "v": enc(g["v"])}
+
+    out = dict(cache)
+    for gname, count, kind in layer_groups(cfg):
+        if kind == "enc":
+            continue
+        g = cache[gname]
+        if kind in ("ssm", "retnet"):
+            continue
+        if kind == "hybrid":
+            out[gname] = {"attn": enc_self(g["attn"]), "mamba": g["mamba"]}
+        elif kind == "dec":
+            out[gname] = {"self": enc_self(g["self"]),
+                          "cross_k": enc(g["cross_k"]),
+                          "cross_v": enc(g["cross_v"])}
+        else:
+            out[gname] = enc_self(g)
+    return out
+
+
 def cache_axes(cfg: ModelConfig) -> Params:
     """Logical sharding axes mirroring `make_decode_cache` (runtime/sharding).
 
     'batch' shards over DP axes when divisible; 'cache' (the KV length axis)
     picks up the 'data' axis when batch fell through (long_500k, batch=1);
     'inner'/'kv'/'heads'/'mlp' ride the TP axis where divisible.
+
+    Quantized caches need no extra entries: a KV leaf's tuple broadcasts over
+    the encoded sub-dict (``{"q","s"}`` / ``{"m","e"}``) — every sub-leaf
+    keeps the leaf's rank, with only the last (replicated) axis resized.
     """
     gqa_axes = {"k": ("layers", "batch", "cache", "kv", None),
                 "v": ("layers", "batch", "cache", "kv", None)}

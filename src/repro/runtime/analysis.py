@@ -142,26 +142,41 @@ def prefill_workload(cfg: ModelConfig, shape: InputShape,
 
 
 def _cache_bytes(cfg: ModelConfig, cache_len: int, batch: int,
-                 dtype_bytes: float = 2.0) -> float:
-    """Total decode-cache footprint (read per decode step)."""
+                 dtype_bytes: float = 2.0,
+                 cache_format: str | None = None) -> float:
+    """Total decode-cache footprint (read per decode step).
+
+    ``cache_format`` selects the quantized decode-residency encoding
+    (`core.kvq.FORMATS`); it reprices the *attention* KV rows via
+    `kvq.nbytes_per_row` and leaves the fp recurrent states (ssm / retnet /
+    hybrid-mamba) untouched — exactly what `lm.quantize_cache` encodes."""
+    from repro.core import kvq
+
     layers = cfg.n_layers
     if cfg.family == "ssm":
         return layers * batch * cfg.d_inner_ * cfg.ssm_state * 4 * 2
     if cfg.family == "retnet":
         dk, dv = cfg.d_model // cfg.n_heads, 2 * cfg.d_model // cfg.n_heads
         return layers * batch * cfg.n_heads * dk * dv * 4 * 2
+
+    def row(d: int) -> float:
+        if cache_format is None:
+            return d * dtype_bytes
+        return kvq.nbytes_per_row(cache_format, d)
+
     if cfg.attn_type == "mla":
-        per_tok = cfg.kv_lora_rank + cfg.qk_rope_head_dim
-        return layers * batch * cache_len * per_tok * dtype_bytes
+        per_tok = row(cfg.kv_lora_rank) + row(cfg.qk_rope_head_dim)
+        return layers * batch * cache_len * per_tok
     ctx = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
-    kv = layers * batch * ctx * cfg.n_kv_heads * cfg.head_dim_ * 2 * dtype_bytes
+    kv = layers * batch * ctx * cfg.n_kv_heads * 2 * row(cfg.head_dim_)
     if cfg.family == "hybrid":
         kv += layers * batch * cfg.d_inner_ * cfg.ssm_state * 4 * 2
     return kv
 
 
 def decode_workload(cfg: ModelConfig, shape: InputShape, n_chips: int,
-                    weight_bits: float = MX_BITS) -> Workload:
+                    weight_bits: float = MX_BITS,
+                    cache_format: str | None = None) -> Workload:
     """One decode step: every active weight streamed, cache read+updated."""
     pc = param_counts(cfg)
     n_act = active_params(cfg, pc)
@@ -172,7 +187,8 @@ def decode_workload(cfg: ModelConfig, shape: InputShape, n_chips: int,
         pc.total - pc.expert
         + pc.expert * min(1.0, b * cfg.top_k / cfg.n_experts))
     hbm = (weight_entities * weight_bits / 8
-           + _cache_bytes(cfg, shape.seq_len, b)) / n_chips
+           + _cache_bytes(cfg, shape.seq_len, b,
+                          cache_format=cache_format)) / n_chips
     return Workload(flops, hbm, b / n_chips)
 
 

@@ -108,6 +108,12 @@ def _walk(params: Params, axes: Params, fn, path=()):
     for k, v in params.items():
         a = axes.get(k) if isinstance(axes, dict) else None
         if isinstance(v, dict):
+            if isinstance(a, tuple):
+                # Quantized cache leaf (core/kvq): the leaf's axes tuple
+                # broadcasts over the encoded sub-dict — every sub-leaf
+                # keeps the leaf's rank, only the last (replicated) axis
+                # is resized by the codec.
+                a = {k2: a for k2 in v}
             out[k] = _walk(v, a if isinstance(a, dict) else {}, fn, path + (k,))
         elif hasattr(v, "ndim"):
             out[k] = fn(v, a, path + (k,))
@@ -267,6 +273,8 @@ def constrain_tree(tree: Params, axes: Params) -> Params:
 
     def rec(t, a):
         if isinstance(t, dict):
+            if isinstance(a, tuple):
+                a = {k: a for k in t}       # quantized leaf: broadcast tuple
             return {k: rec(v, a.get(k) if isinstance(a, dict) else None)
                     for k, v in t.items()}
         if hasattr(t, "ndim") and isinstance(a, tuple) and len(a) == t.ndim:

@@ -31,10 +31,10 @@ One import gives the whole serving surface:
 from repro.serving.cell import (ServeCell, build_serve,
                                 prefill_chunk_step_fn, serving_engine,
                                 verify_chunk_step_fn)
-from repro.serving.engine import (ChunkedPrefill, EngineSpec,
-                                  GenerationResult, InferenceEngine,
-                                  bucket_length, chunk_schedule,
-                                  pytree_nbytes)
+from repro.serving.engine import (CacheCapacityError, ChunkedPrefill,
+                                  EngineSpec, GenerationResult,
+                                  InferenceEngine, bucket_length,
+                                  chunk_schedule, pytree_nbytes)
 from repro.serving.sampling import (GREEDY, GenerationConfig, SamplingParams,
                                     SpeculativeConfig, sample)
 from repro.serving.scheduler import (CachePool, FinishedRequest, Request,
@@ -43,7 +43,8 @@ from repro.serving.speculative import (Drafter, MTPDrafter, NgramDrafter,
                                        make_drafter, ngram_propose)
 
 __all__ = [
-    "CachePool", "ChunkedPrefill", "Drafter", "EngineSpec",
+    "CacheCapacityError", "CachePool", "ChunkedPrefill", "Drafter",
+    "EngineSpec",
     "FinishedRequest", "GenerationConfig", "GenerationResult", "GREEDY",
     "InferenceEngine", "MTPDrafter", "NgramDrafter", "Request",
     "RequestScheduler", "SamplingParams", "ServeCell", "SpeculativeConfig",

@@ -51,6 +51,17 @@ Params = dict[str, Any]
 MIN_BUCKET = 8
 
 
+class CacheCapacityError(ValueError):
+    """A request needs more KV slots than its cache provides.
+
+    Raised at admission (`ChunkedPrefill`, `RequestScheduler.submit`)
+    instead of letting the linear-cache decode path hit its slot clamp:
+    `layers.gqa_decode` writes token ``pos`` at ``min(pos, C-1)``, so an
+    overflowing request would silently overwrite its own last cache row
+    on every subsequent step — degraded output, no error.
+    """
+
+
 def _jit_cache_size(fn) -> int:
     """Entries in one jitted callable's XLA compile cache; -1 when this jax
     does not expose it (the audit then falls back to the shape-key proxy)."""
@@ -188,7 +199,8 @@ class ChunkedPrefill:
         if s < 1:
             raise ValueError("prompt must have at least one token")
         if s > cache_len:
-            raise ValueError(f"prompt ({s}) exceeds cache_len ({cache_len})")
+            raise CacheCapacityError(
+                f"prompt ({s}) exceeds cache_len ({cache_len})")
         w = engine.cfg.sliding_window
         if w:
             chunk_size = min(chunk_size, w)   # ring scatter: chunk <= window
@@ -769,6 +781,7 @@ class InferenceEngine:
         t0 = time.perf_counter()
         logits, cache = self.prefill(prompts, cache_len=cache_len,
                                      extras=extras)
+        cache = self._encode_cache(cache, gen)
         jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
 
@@ -805,6 +818,15 @@ class InferenceEngine:
                                 prefill_s=0.0,
                                 decode_s=time.perf_counter() - t0)
 
+    def _encode_cache(self, cache: Params, gen: GenerationConfig) -> Params:
+        """Apply ``gen.cache_format`` at the prefill/decode boundary: the
+        MMM phase ran fp, the MVM residency streams packed bytes.  No-op
+        when the request keeps the fp cache."""
+        if gen.cache_format is None:
+            return cache
+        cache = lm.quantize_cache(cache, self.cfg, gen.cache_format)
+        return self.shard_cache(cache)
+
     def cache_nbytes(self, cache_len: int, *, batch: int = 1,
                      dtype=jnp.float32) -> int:
         """Bytes of one decode cache at ``cache_len`` — what a `CachePool`
@@ -840,6 +862,7 @@ class InferenceEngine:
         logits, cache, hidden = self.prefill(prompts, cache_len=cache_len,
                                              extras=extras,
                                              return_hidden=True)
+        cache = self._encode_cache(cache, gen)
         jax.block_until_ready(logits)
         t_prefill = time.perf_counter() - t0
 

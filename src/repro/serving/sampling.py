@@ -74,17 +74,32 @@ class SpeculativeConfig:
 
 @dataclasses.dataclass(frozen=True)
 class GenerationConfig:
-    """Loop-level generation controls for `InferenceEngine.generate`."""
+    """Loop-level generation controls for `InferenceEngine.generate`.
+
+    ``cache_format`` selects the decode-residency KV encoding
+    (`core.kvq.FORMATS`: 'int8_tok' | 'mxint4_blk'); None keeps the engine's
+    fp cache.  Monolithic prefill stays fp and the cache is encoded once at
+    the prefill/decode boundary (`lm.quantize_cache`); chunked prefill
+    appends directly into the encoded layout.  Encoding is row-local, so
+    the same K/V rows produce the same bits on both paths — but chunked
+    attention *reads* the encoded history while monolithic attention reads
+    fp, so downstream activations (hence later rows and logits) carry the
+    usual chunked-vs-monolithic quantization-granularity difference.
+    """
 
     max_new_tokens: int = 16
     sampling: SamplingParams = SamplingParams()
     stop_tokens: tuple[int, ...] = ()
     pad_token_id: int = 0
     speculative: SpeculativeConfig | None = None
+    cache_format: str | None = None
 
     def __post_init__(self):
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.cache_format is not None:
+            from repro.core import kvq
+            kvq.check_format(self.cache_format)
 
 
 GREEDY = GenerationConfig()

@@ -47,7 +47,8 @@ import numpy as np
 
 from repro.models import lm
 from repro.serving import speculative as spec_mod
-from repro.serving.engine import InferenceEngine, pytree_nbytes
+from repro.serving.engine import (CacheCapacityError, InferenceEngine,
+                                  pytree_nbytes)
 from repro.serving.sampling import GenerationConfig, sample
 
 Params = dict[str, Any]
@@ -427,16 +428,27 @@ class RequestScheduler:
                  key: jax.Array | None = None,
                  chunk_size: int = 32,
                  host_spill: bool = False,
+                 cache_dtype=None,
                  on_token: Callable[[int, int], None] | None = None):
         self.engine = engine
         self.gen = gen
+        # The pool-wide cache dtype policy: an explicit ``cache_dtype`` wins;
+        # otherwise `gen.cache_format` (the request-level knob) selects the
+        # quantized residency for every class; fp32 is the legacy default.
+        # Chunked admission appends straight into the encoded layout
+        # (`ChunkedPrefill(cache_dtype=pool.dtype)` below), so the stacked
+        # stores never hold an fp copy.
+        if cache_dtype is None:
+            cache_dtype = gen.cache_format or jnp.float32
         self.pool = CachePool(engine.cfg, n_slots, cache_len, classes=classes,
+                              dtype=cache_dtype,
                               mesh=getattr(engine, "mesh", None),
                               policy=getattr(engine, "policy", None))
         self.base_key = key if key is not None else jax.random.key(0)
         self.chunk_size = chunk_size
         self.host_spill = host_spill
         self.on_token = on_token
+        self._class_nbytes: dict[int, int] = {}   # clen -> lane bytes memo
 
         self._queue: list[Request] = []
         self._admitting: dict | None = None      # the one in-flight prefill
@@ -558,7 +570,7 @@ class RequestScheduler:
             # (gqa_decode), so reject instead of corrupting attention.
             # Speculative verify blocks write up to k tokens past the last
             # budget position before rolling back — reserved in `need` too.
-            raise ValueError(
+            raise CacheCapacityError(
                 f"request {request.uid}: prompt ({len(request.prompt)}) + "
                 f"max_new_tokens ({budget}) exceeds every pool class "
                 f"(largest cache_len {self.pool.cache_len})")
@@ -678,16 +690,30 @@ class RequestScheduler:
         return sorted(self._preempted,
                       key=lambda e: (-e["req"].priority, e["seq"]))
 
+    def _slot_nbytes(self, clen: int) -> int:
+        """Bytes one lane of class ``clen`` holds (memoized abstract-shape
+        walk via `engine.cache_nbytes`) — the spill's transfer cost and the
+        device memory a preemption frees."""
+        n = self._class_nbytes.get(clen)
+        if n is None:
+            n = self.engine.cache_nbytes(clen, dtype=self.pool.dtype)
+            self._class_nbytes[clen] = n
+        return n
+
     def _pick_victim(self, priority: int, need: int) -> int | None:
-        """Lowest-priority (tie: oldest-admitted) resident lane strictly
-        below `priority` whose slot class could hold `need` positions."""
+        """Byte-aware preemption: among resident lanes of strictly lower
+        priority whose class could hold ``need`` positions, pick the lowest
+        priority first, then the lane *freeing the most device bytes* (the
+        largest cache class — one spill should buy the most placement
+        headroom per transfer), then the oldest admission."""
         best = None
         for slot, st in self._active.items():
             if st["req"].priority >= priority:
                 continue
             if self.pool.slot_len(slot) < need:
                 continue
-            rank = (st["req"].priority, st["seq"])
+            rank = (st["req"].priority,
+                    -self._slot_nbytes(self.pool.slot_len(slot)), st["seq"])
             if best is None or rank < best[0]:
                 best = (rank, slot)
         return None if best is None else best[1]

@@ -1,0 +1,271 @@
+"""Flash-decode kernel + quantized KV residency: the decode-step tentpole.
+
+Two layers of coverage (the online-softmax property tests live in
+`test_flash_decode_properties.py` — hypothesis is optional):
+
+  * kernel level — the Pallas split-KV kernel (interpret mode) against the
+    `layers.attend_one_step` oracle for every cache encoding (fp32,
+    legacy int8, int8_tok, mxint4_blk), the MLA two-stream layout, and
+    non-dividing ``block_c``;
+  * engine level — greedy token-identity of ``kernel_impl='pallas'``
+    (interpret on CPU) vs the ref path across the serving cache archs and
+    the admission paths (plain, chunked, speculative, spill/resume), with
+    and without a quantized cache; plus the `CacheCapacityError` admission
+    guard and the byte-aware spill victim policy.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import (assert_tokens_identical, fp_engine,
+                      greedy_continue, prompt_ids, prompt_list)
+
+from repro.core import kvq
+from repro.kernels import ops as kops
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.models import layers as L
+from repro.serving import (CacheCapacityError, EngineSpec, GenerationConfig,
+                           InferenceEngine, Request, RequestScheduler,
+                           SpeculativeConfig)
+
+_PALLAS: dict = {}
+
+
+def pallas_engine(arch: str) -> InferenceEngine:
+    """Reduced fp engine forced onto the Pallas kernel path (interpret mode
+    on CPU), sharing the ref engine's weights so only `impl` differs."""
+    if arch not in _PALLAS:
+        _PALLAS[arch] = InferenceEngine.from_config(
+            arch, EngineSpec(reduced=True, quantize=False,
+                             kernel_impl="pallas"),
+            params=fp_engine(arch).params)
+    return _PALLAS[arch]
+
+
+def _gqa_case(seed=0, b=2, kv=2, g=3, d=32, c=24, kv_len=17):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, kv, g, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, c, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, c, kv, d), jnp.float32)
+    return q, k, v, jnp.int32(kv_len)
+
+
+def _encode(x, fmt):
+    if fmt == "fp":
+        return x
+    if fmt == "legacy_int8":
+        return jnp.clip(jnp.round(x * kvq.KV8_SCALE), -127, 127
+                        ).astype(jnp.int8)
+    return kvq.encode(x, fmt)
+
+
+# -- kernel vs the attend_one_step oracle ------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["fp", "legacy_int8", "int8_tok",
+                                 "mxint4_blk"])
+def test_kernel_matches_attend_one_step(fmt):
+    """Interpret-mode kernel == the engine's decode-attention oracle on the
+    *same* (possibly lossily encoded) cache bytes, for every format."""
+    q, k, v, kv_len = _gqa_case()
+    ke, ve = _encode(k, fmt), _encode(v, fmt)
+    got = flash_decode_pallas(q, ke, ve, kv_len, interpret=True)
+    valid = jnp.arange(k.shape[1])[None, :] < kv_len
+    want = L.attend_one_step(q, ke, ve, valid)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_array_equal(np.asarray(got.argmax(-1)),
+                                  np.asarray(want.argmax(-1)))
+
+
+@pytest.mark.parametrize("block_c", [5, 16, 24, 64])
+def test_kernel_block_c_invariance(block_c):
+    """Any block size — including non-dividing and larger-than-C — gives the
+    same output; the split only changes the combine order."""
+    q, k, v, kv_len = _gqa_case(seed=3)
+    want = kops.flash_decode(q, k, v, kv_len, impl="ref")
+    got = flash_decode_pallas(q, k, v, kv_len, block_c=block_c,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("fmt", ["fp", "int8_tok"])
+def test_kernel_mla_two_stream(fmt):
+    """MLA layout: latent-space attention with the shared rope key as a
+    second score stream, through the ops wrapper's singleton-kv plumbing."""
+    b, h, r, dr, c = 2, 4, 32, 16, 20
+    ks = jax.random.split(jax.random.key(5), 4)
+    qa = jax.random.normal(ks[0], (b, h, r), jnp.float32)
+    qr = jax.random.normal(ks[1], (b, h, dr), jnp.float32)
+    ckv = jax.random.normal(ks[2], (b, c, r), jnp.float32)
+    krope = jax.random.normal(ks[3], (b, c, dr), jnp.float32)
+    kv_len = jnp.int32(13)
+    scale = 1.0 / np.sqrt(r + dr)
+    ckv_e = _encode(ckv, fmt)
+    want = kops.flash_decode(qa, ckv_e, ckv_e, kv_len, q2=qr, k2=krope,
+                             scale=scale, impl="ref")
+    got = kops.flash_decode(qa, ckv_e, ckv_e, kv_len, q2=qr, k2=krope,
+                            scale=scale, impl="pallas", block_c=7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_kernel_kv_len_zero_and_full():
+    """Edge lengths: kv_len == C streams every row; the kernel must also not
+    NaN when only one row is valid (the first decode step after prefill=1)."""
+    q, k, v, _ = _gqa_case(seed=7)
+    for n in (1, k.shape[1]):
+        got = flash_decode_pallas(q, k, v, jnp.int32(n), interpret=True)
+        want = kops.flash_decode(q, k, v, jnp.int32(n), impl="ref")
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-6)
+
+
+# -- engine-level greedy identity: pallas vs ref ----------------------------
+
+
+def test_engine_identity_plain(cache_arch):
+    """Plain generate: the Pallas decode loop (interpret) is greedy
+    token-identical to the ref path for every serving cache arch."""
+    ref, pal = fp_engine(cache_arch), pallas_engine(cache_arch)
+    gen = GenerationConfig(max_new_tokens=8)
+    p = prompt_ids(ref, 9, seed=31)
+    assert_tokens_identical(pal.generate(p, gen), ref.generate(p, gen),
+                            cache_arch)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "hymba-1.5b"])
+def test_engine_identity_chunked(arch):
+    """Chunk-admitted cache + Pallas decode == chunk-admitted + ref decode
+    (the two attention archs; recurrent-state archs never hit the kernel)."""
+    ref, pal = fp_engine(arch), pallas_engine(arch)
+    p = prompt_ids(ref, 11, seed=32)
+    n, clen = 6, 11 + 6
+    lg_r, c_r = ref.prefill_chunked(p, cache_len=clen, chunk_size=4)
+    lg_p, c_p = pal.prefill_chunked(p, cache_len=clen, chunk_size=4)
+    assert_tokens_identical(greedy_continue(pal, lg_p, c_p, n),
+                            greedy_continue(ref, lg_r, c_r, n), arch)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-v3-671b"])
+def test_engine_identity_speculative(arch):
+    """Speculative draft/verify with Pallas decode (GQA + MLA latent): the
+    verify rollback and the kernel dispatch compose token-identically."""
+    ref, pal = fp_engine(arch), pallas_engine(arch)
+    p = jnp.asarray([[5, 9, 13] * 4], jnp.int32)      # repetitive: ngram-able
+    gen = GenerationConfig(max_new_tokens=8,
+                           speculative=SpeculativeConfig(k=2))
+    assert_tokens_identical(pal.generate(p, gen), ref.generate(p, gen), arch)
+
+
+@pytest.mark.parametrize("fmt", ["int8_tok", "mxint4_blk"])
+def test_engine_identity_quantized_cache(fmt):
+    """Quantized residency: the kernel's in-register dequant path produces
+    the same greedy tokens as the ref path reading the same encoded dicts."""
+    ref, pal = fp_engine("qwen3-8b"), pallas_engine("qwen3-8b")
+    gen = GenerationConfig(max_new_tokens=8, cache_format=fmt)
+    p = prompt_ids(ref, 9, seed=33)
+    assert_tokens_identical(pal.generate(p, gen), ref.generate(p, gen), fmt)
+
+
+def _drain(engine, gen, preempt, *, classes, p0, p1, chunk_size=8):
+    sched = RequestScheduler(engine, classes=classes, gen=gen,
+                             chunk_size=chunk_size, host_spill=preempt)
+    sched.submit(Request(uid=0, prompt=p0))
+    if preempt:
+        while not sched._active:
+            sched.step()
+        sched.step()
+        sched.submit(Request(uid=1, prompt=p1), priority=5)
+    else:
+        sched.submit(Request(uid=1, prompt=p1))
+    res = sched.run()
+    return {u: r.tokens for u, r in res.items()}, sched
+
+
+def test_engine_identity_spill_resume_quantized():
+    """Spill/resume with a *quantized* pool (encoded dict leaves through the
+    host round trip) stays token-identical, on both impl paths, and the
+    preempted run matches the unpreempted one."""
+    gen = GenerationConfig(max_new_tokens=6, cache_format="int8_tok")
+    outs = {}
+    for name in ("ref", "pallas"):
+        eng = fp_engine("qwen3-8b") if name == "ref" \
+            else pallas_engine("qwen3-8b")
+        p0 = prompt_list(eng, 8, seed=34)
+        p1 = prompt_list(eng, 8, seed=35)
+        base, _ = _drain(eng, gen, False, classes=[(1, 8 + 6)], p0=p0, p1=p1)
+        pre, sched = _drain(eng, gen, True, classes=[(1, 8 + 6)],
+                            p0=p0, p1=p1)
+        assert sched.stats["preempted"] >= 1, name
+        assert pre == base, name
+        outs[name] = base
+    assert outs["pallas"] == outs["ref"]
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "hymba-1.5b"])
+@pytest.mark.parametrize("fmt", ["int8_tok", "mxint4_blk"])
+def test_speculative_identity_quantized_cache(arch, fmt):
+    """Speculative vs plain greedy identity holds with a quantized cache:
+    the verify rollback (linear scatter + hybrid ring_rollback) rolls the
+    encoded dict leaves back bit-exactly."""
+    eng = fp_engine(arch)
+    p = jnp.asarray([[5, 9, 13] * 4], jnp.int32)
+    gen = GenerationConfig(max_new_tokens=8, cache_format=fmt)
+    sgen = dataclasses.replace(
+        gen, speculative=SpeculativeConfig(k=2))
+    assert_tokens_identical(eng.generate(p, sgen), eng.generate(p, gen),
+                            f"{arch}/{fmt}")
+
+
+# -- admission guard + byte-aware victim ------------------------------------
+
+
+def test_chunked_prefill_overflow_raises_capacity_error():
+    """Regression for the gqa_decode linear-cache clamp: admitting a prompt
+    past ``cache_len`` raises the typed error instead of letting later
+    appends clamp onto (and silently overwrite) the last cache row."""
+    eng = fp_engine("qwen3-8b")
+    p = prompt_ids(eng, 12, seed=36)
+    with pytest.raises(CacheCapacityError):
+        eng.prefill_chunked(p, cache_len=8, chunk_size=4)
+
+
+def test_scheduler_submit_overflow_raises_capacity_error():
+    """The scheduler's submit-time guard raises the same typed error (it is
+    a ValueError subclass, so existing handlers keep working)."""
+    eng = fp_engine("qwen3-8b")
+    sched = RequestScheduler(eng, classes=[(1, 12)],
+                             gen=GenerationConfig(max_new_tokens=4))
+    with pytest.raises(CacheCapacityError):
+        sched.submit(Request(uid=0, prompt=prompt_list(eng, 20, seed=37)))
+    assert isinstance(CacheCapacityError("x"), ValueError)
+
+
+def test_pick_victim_prefers_largest_cache_class():
+    """Byte-aware preemption: among equal-priority residents, the victim is
+    the lane freeing the most device bytes (largest cache class), not just
+    the oldest admission."""
+    eng = fp_engine("qwen3-8b")
+    # long outputs so both lanes are still resident when we probe the policy
+    gen = GenerationConfig(max_new_tokens=32)
+    small, large = 40, 64
+    sched = RequestScheduler(eng, classes=[(1, small), (1, large)], gen=gen,
+                             chunk_size=8, host_spill=True)
+    sched.submit(Request(uid=0, prompt=prompt_list(eng, 6, seed=38)))
+    sched.submit(Request(uid=1, prompt=prompt_list(eng, 30, seed=39)))
+    for _ in range(200):
+        if len(sched._active) == 2:
+            break
+        sched.step()
+    slots = {sched.pool.slot_len(s): s for s in sched._active}
+    assert set(slots) == {small, large}
+    # uid 0 (small class) was admitted first — priority-only ranking with
+    # the seq tie-break would pick it; byte-aware ranking must not.
+    assert sched._pick_victim(5, 6) == slots[large]
+    sched.run()

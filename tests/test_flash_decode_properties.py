@@ -1,0 +1,66 @@
+"""Property tests for the flash-decode split-KV combine: the online-softmax
+chunk accumulation equals the full softmax for arbitrary partitions, score
+magnitudes, cache lengths, and block sizes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests skip without it
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops as kops
+from repro.kernels.flash_decode import flash_decode_pallas
+from test_flash_decode import _gqa_case
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.data())
+def test_online_softmax_combine_matches_full_softmax(data):
+    """The split-KV combine — carrying (m, l, acc) across chunks exactly as
+    the kernel does — equals the unsplit softmax-weighted sum for any chunk
+    partition and any score magnitudes (incl. large offsets: the rescaling
+    by exp(m_prev - m_new) is what makes the split numerically safe)."""
+    n = data.draw(st.integers(1, 48))
+    d = data.draw(st.integers(1, 6))
+    offset = data.draw(st.floats(-300.0, 300.0))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    s = (rng.standard_normal(n) * 3 + offset).astype(np.float32)
+    v = rng.standard_normal((n, d)).astype(np.float32)
+
+    # arbitrary partition of [0, n) into chunks
+    cuts = data.draw(st.lists(st.integers(1, max(1, n - 1)),
+                              max_size=4)) if n > 1 else []
+    bounds = [0] + sorted(set(cuts)) + [n]
+
+    m, l, acc = -np.inf, 0.0, np.zeros(d, np.float64)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if lo == hi:
+            continue
+        sc = s[lo:hi].astype(np.float64)
+        m_new = max(m, sc.max())
+        corr = np.exp(m - m_new) if np.isfinite(m) else 0.0
+        p = np.exp(sc - m_new)
+        l = l * corr + p.sum()
+        acc = acc * corr + p @ v[lo:hi]
+        m = m_new
+    got = acc / l
+
+    p_full = np.exp(s.astype(np.float64) - s.max())
+    want = (p_full / p_full.sum()) @ v
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-9)
+
+
+@settings(deadline=None, max_examples=10)
+@given(c=st.integers(1, 40), frac=st.floats(0.05, 1.0),
+       block_c=st.integers(1, 48), seed=st.integers(0, 99))
+def test_kernel_split_invariance_property(c, frac, block_c, seed):
+    """Same invariance, through the kernel itself: random cache length,
+    valid prefix, and block size all reproduce the ref oracle."""
+    kv_len = max(1, int(c * frac))
+    q, k, v, _ = _gqa_case(seed=seed, b=1, kv=1, g=2, d=8, c=c)
+    want = kops.flash_decode(q, k, v, jnp.int32(kv_len), impl="ref")
+    got = flash_decode_pallas(q, k, v, jnp.int32(kv_len), block_c=block_c,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
