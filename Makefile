@@ -4,7 +4,7 @@
 PY ?= python
 
 .PHONY: test test-fast install serve-demo smoke-host-spill smoke-sharded \
-	bench-serving bench-kernels lint-invariants audit-program
+	trace-demo bench-serving bench-kernels lint-invariants audit-program
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -35,6 +35,16 @@ smoke-sharded:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
 		--arch retnet-1.3b --reduced --scenario SILO --scale 0.02 \
 		--requests 3 --slots 1 --chunk-size 8 --host-spill --mesh 2,2
+
+# Observability demo: the oversubscribed scheduler run with request-lifecycle
+# tracing on — writes trace.json (Chrome trace events; load in Perfetto or
+# chrome://tracing to see admits, prefill chunks, preempt/resume gaps) and
+# metrics.json (counters/gauges/p50-p95-p99 histograms).  CI uploads both.
+trace-demo:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
+		--arch retnet-1.3b --reduced --scenario SILO --scale 0.02 \
+		--requests 5 --slots 2 --chunk-size 8 --host-spill \
+		--trace trace.json --metrics metrics.json
 
 # Serving-path perf trajectory: writes BENCH_serving.json (tokens/s, prefill
 # compiles triggered, decode-stall steps) for PR-over-PR comparison.

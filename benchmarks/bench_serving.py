@@ -35,6 +35,10 @@ successive PRs accumulate a perf trajectory instead of overwriting it:
                           device count, axis shape, and per-device vs
                           global cache bytes per record (subprocess: the
                           XLA device-count flag must precede jax init)
+    latency.*             per-leg SLO block from the `repro.obs` registry:
+                          p50/p95/p99 TTFT and inter-token latency, plus
+                          queue-depth / cache-occupancy gauge summaries on
+                          the scheduler-driven legs (every leg carries one)
     git_rev               short rev of the checkout, so trajectory points
                           correlate with PRs
 
@@ -54,6 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.roofline import decode_step_model
+from repro.obs import Observability
 from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
                            Request, RequestScheduler, SpeculativeConfig)
 
@@ -109,6 +114,29 @@ def decode_roofline(cfg, *, cache_len: int, n_tokens: int, wall_s: float,
     }
 
 
+def _round_stats(d: dict, nd: int = 6) -> dict:
+    return {k: (round(v, nd) if isinstance(v, float) else v)
+            for k, v in d.items()}
+
+
+def latency_summary(obs: Observability, prefix: str) -> dict:
+    """One leg's SLO latency block: p50/p95/p99 TTFT + inter-token latency
+    (seconds, from the leg's `repro.obs` registry — ``prefix`` is ``sched``
+    for scheduler-driven legs, ``engine`` for direct-generate legs) plus the
+    queue-depth / occupancy gauge summaries the leg accumulated."""
+    snap = obs.metrics.snapshot()
+    hists, gauges = snap["histograms"], snap["gauges"]
+    out = {
+        "ttft_s": _round_stats(hists.get(f"{prefix}.ttft_s", {"count": 0})),
+        "inter_token_s": _round_stats(
+            hists.get(f"{prefix}.inter_token_s", {"count": 0})),
+    }
+    if gauges:
+        out["occupancy"] = {name: _round_stats(g)
+                            for name, g in sorted(gauges.items())}
+    return out
+
+
 # Speculative leg: reduced starcoder2's greedy continuation of this seed
 # saturates into a repeating tail — the "long repetitive output" regime where
 # prompt-lookup drafting pays (code generation / extraction analogue).
@@ -124,9 +152,10 @@ def run_scheduler() -> dict:
     gen = GenerationConfig(max_new_tokens=MAX_NEW_TOKENS)
     small = max(l for l in PROMPT_LENGTHS if l <= 24) + MAX_NEW_TOKENS
     large = max(PROMPT_LENGTHS) + MAX_NEW_TOKENS
+    obs = Observability()
     sched = RequestScheduler(engine, classes=[(2, small), (2, large)],
                              gen=gen, chunk_size=CHUNK_SIZE,
-                             key=jax.random.key(0))
+                             key=jax.random.key(0), obs=obs)
 
     lengths = [PROMPT_LENGTHS[i % len(PROMPT_LENGTHS)]
                for i in range(N_REQUESTS)]
@@ -166,6 +195,7 @@ def run_scheduler() -> dict:
         "decode_roofline": decode_roofline(
             engine.cfg, cache_len=large, n_tokens=sched.stats["emitted"],
             wall_s=wall_s),
+        "latency": latency_summary(obs, "sched"),
     }
 
 
@@ -180,6 +210,9 @@ def run_speculative() -> dict:
     # large fraction of the decode walls being compared.
     engine.generate(prompt, gen)
     engine.generate(prompt, gen, speculative=spec_cfg)
+    # Fresh bundle after warmup so the percentiles cover measured runs only
+    # (the warm calls' walls are dominated by trace+compile).
+    engine.obs = Observability()
     base = engine.generate(prompt, gen)
     spec = engine.generate(prompt, gen, speculative=spec_cfg)
     return {
@@ -196,6 +229,7 @@ def run_speculative() -> dict:
         "decode_roofline": decode_roofline(
             engine.cfg, cache_len=10 + SPEC_MAX_NEW, n_tokens=SPEC_MAX_NEW,
             wall_s=base.decode_s),
+        "latency": latency_summary(engine.obs, "engine"),
     }
 
 
@@ -211,9 +245,10 @@ def run_oversubscribed() -> dict:
                                          EngineSpec(reduced=True))
     gen = GenerationConfig(max_new_tokens=OVER_NEW_TOKENS)
     clen = OVER_PROMPT + OVER_NEW_TOKENS
+    obs = Observability()
     sched = RequestScheduler(engine, classes=[(OVER_LANES, clen)], gen=gen,
                              chunk_size=CHUNK_SIZE, host_spill=True,
-                             key=jax.random.key(0))
+                             key=jax.random.key(0), obs=obs)
 
     def submit(uid, priority=0):
         prompt = jax.random.randint(
@@ -246,6 +281,7 @@ def run_oversubscribed() -> dict:
         "decode_roofline": decode_roofline(
             engine.cfg, cache_len=clen,
             n_tokens=OVER_REQUESTS * OVER_NEW_TOKENS, wall_s=wall_s),
+        "latency": latency_summary(obs, "sched"),
     }
 
 
@@ -268,9 +304,11 @@ def run_quantized_decode() -> dict:
     for fmt in (None, "int8_tok", "mxint4_blk"):
         gen = GenerationConfig(max_new_tokens=QUANT_NEW, cache_format=fmt)
         engine.generate(prompt, gen)                 # warm/compile
+        engine.obs = Observability()                 # per-format latency leg
         res = engine.generate(prompt, gen)
         leg = decode_roofline(engine.cfg, cache_len=clen, n_tokens=QUANT_NEW,
                               wall_s=res.decode_s, cache_format=fmt)
+        leg["latency"] = latency_summary(engine.obs, "engine")
         leg["decode_s"] = round(res.decode_s, 3)
         leg["resident_cache_nbytes"] = engine.cache_nbytes(
             clen, dtype=fmt or jnp.float32)
@@ -312,10 +350,13 @@ def run_sharded() -> dict:
                                      eng.cfg.vocab_size, dtype=jnp.int32)
         gen = GenerationConfig(max_new_tokens={SHARDED_NEW_TOKENS})
         eng.generate(prompts, gen)                       # warm/compile
+        from repro.obs import Observability
+        eng.obs = Observability()           # measured-run latency only
         t0 = time.perf_counter()
         eng.generate(prompts, gen)
         wall = time.perf_counter() - t0
         clen = {SHARDED_PROMPT} + {SHARDED_NEW_TOKENS}
+        hists = eng.obs.metrics.snapshot()["histograms"]
         print("BENCH_SHARDED " + json.dumps({{
             "devices": jax.device_count(),
             "mesh_axes": {{a: int(n) for a, n in
@@ -324,6 +365,11 @@ def run_sharded() -> dict:
             "tokens_per_s": round(
                 ({SHARDED_PROMPT} + {SHARDED_NEW_TOKENS}) / wall, 2),
             "cache_nbytes_global": eng.cache_nbytes(clen),
+            "latency": {{
+                "ttft_s": hists.get("engine.ttft_s", {{"count": 0}}),
+                "inter_token_s": hists.get("engine.inter_token_s",
+                                           {{"count": 0}}),
+            }},
         }}))
     """)
     env = dict(

@@ -30,6 +30,10 @@ accounting guarantees (utilization / external-memory-access minimality):
                  cache layout: with encoded dict leaves ({"q","s"} /
                  {"m","e"}) the chunk step still aliases (nearly) every
                  resident cache byte.
+    observability (A7) the `repro.obs` layer is zero-overhead where it
+                 counts: the compiled decode / speculative-verify programs
+                 are byte-identical with the full observability stack
+                 (tracer + profiler annotations + metrics) on vs off.
 
 Run via ``python -m repro.analysis audit`` (`make audit-program`).  The
 sharding audit needs >= 4 devices; the Makefile target forces 4 virtual
@@ -44,8 +48,8 @@ import re
 
 __all__ = ["AuditResult", "AuditReport", "audit_recompiles",
            "audit_donation", "audit_transfers", "audit_sharding",
-           "audit_decode_kernel", "run_audits", "parse_io_aliases",
-           "hlo_opcodes", "custom_call_targets"]
+           "audit_decode_kernel", "audit_observability", "run_audits",
+           "parse_io_aliases", "hlo_opcodes", "custom_call_targets"]
 
 DEFAULT_ARCH = "retnet-1.3b"
 
@@ -454,6 +458,49 @@ def audit_decode_kernel(arch: str = KERNEL_ARCH, *, s_in: int = 8,
          "auto_fp": n_auto_fp, "auto_quant": n_auto_q})
 
 
+# -- A7: observability audit -------------------------------------------------
+
+def audit_observability(arch: str = DEFAULT_ARCH, *, max_new_tokens: int = 8,
+                        spec_k: int = 2) -> AuditResult:
+    """Prove the observability layer is zero-overhead where it counts: the
+    compiled decode and speculative-verify programs are **byte-identical**
+    with the full `repro.obs` stack enabled (live tracer + profiler
+    annotations + metrics) vs absent.
+
+    The layer's contract is host-side-only recording at step/drain
+    boundaries — nothing it does may reach the traced computation.  A
+    metric read that forced a reshape, an annotation that entered the
+    jaxpr, or a tracer arg that materialized inside the loop would all
+    change the compiled text; comparing the bytes catches every such leak
+    at once."""
+    from repro.obs import Observability, Tracer
+    from repro.serving import GenerationConfig, SpeculativeConfig
+
+    plain = tiny_engine(arch)
+    from repro.serving import EngineSpec, InferenceEngine
+    obs = Observability(tracer=Tracer(), profile=True)
+    traced = InferenceEngine.from_config(
+        arch, EngineSpec(reduced=True, quantize=False), obs=obs)
+
+    gen = GenerationConfig(max_new_tokens=max_new_tokens)
+    spec_gen = GenerationConfig(max_new_tokens=max_new_tokens,
+                                speculative=SpeculativeConfig(k=spec_k))
+    diffs = []
+    for name, lower in (("decode", lambda e: e.lower_decode_loop(gen)),
+                        ("verify", lambda e: e.lower_spec_loop(spec_gen))):
+        base = _compiled_text(lower(plain))
+        instr = _compiled_text(lower(traced))
+        if base != instr:
+            diffs.append(f"{name} ({len(base)} vs {len(instr)} bytes)")
+    ok = not diffs
+    return AuditResult(
+        "observability", ok,
+        "decode + verify programs byte-identical with obs on vs off"
+        if ok else f"observability changed compiled program(s): "
+                   f"{', '.join(diffs)}",
+        {"programs": ["decode", "verify"], "diffs": diffs})
+
+
 # -- driver ------------------------------------------------------------------
 
 def run_audits(arch: str = DEFAULT_ARCH, *, mesh_spec: str = "2,2",
@@ -468,5 +515,6 @@ def run_audits(arch: str = DEFAULT_ARCH, *, mesh_spec: str = "2,2",
         audit_transfers(arch, engine=engine),
         audit_sharding(arch, mesh_spec=mesh_spec),
         audit_decode_kernel(),
+        audit_observability(arch),
     ]
     return AuditReport(results)

@@ -85,13 +85,13 @@ R2 = Rule(
 R3 = Rule(
     id="host-sync",
     summary="no host round-trip primitives in the jitted serving core",
-    scope=("serving/", "models/"),
+    scope=("serving/", "models/", "obs/"),
 )
 R4 = Rule(
     id="module-scope-compute",
     summary="no module-scope jnp/jax computation (hidden trace-time "
             "constants)",
-    scope=("serving/", "models/"),
+    scope=("serving/", "models/", "obs/"),
 )
 
 ALL_RULES = (R1, R2, R3, R4)
@@ -99,12 +99,16 @@ RULE_IDS = tuple(r.id for r in ALL_RULES)
 
 # Functions allowed to synchronize with the host: the scheduler's batched
 # post-step drain (token blocks leave the device exactly once per sequencer
-# cycle, in one gather) and the host-spill tier itself, whose entire point
-# is a device->host transfer.  Key: "<path>::<Qualified.name>".
+# cycle, in one gather), the host-spill tier itself, whose entire point is a
+# device->host transfer, and the tracer's explicit flush — the ONE place the
+# observability layer may gather its deferred device-array span args (record
+# sites store arrays as-is; `Tracer.flush` resolves them at export time).
+# Key: "<path>::<Qualified.name>".
 HOST_SYNC_ALLOW = frozenset({
     "serving/scheduler.py::RequestScheduler.step",
     "serving/scheduler.py::RequestScheduler._preempt",
     "serving/scheduler.py::CachePool.spill",
+    "obs/trace.py::Tracer.flush",
 })
 
 # Dotted names (post import-resolution) that only compat.py may touch.

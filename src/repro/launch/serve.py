@@ -20,6 +20,12 @@ paper's sequencer behavior, with per-step stats printed at the end.
 `--host-spill` (optionally with `--oversubscribe R`) turns on the pool's
 host-memory tier: a late high-priority burst preempts resident lanes to CPU
 DRAM, and they resume bit-exactly once device lanes free up.
+
+`--trace FILE` records the full request lifecycle (submit → admit → prefill
+chunks → first token → decode → preempt/resume → finish) through `repro.obs`
+and writes Chrome-trace-event JSON loadable in Perfetto; `--metrics FILE`
+dumps the run's counter/gauge/percentile-histogram snapshot.  `make
+trace-demo` produces both from an oversubscribed scheduler run.
 """
 
 from __future__ import annotations
@@ -33,6 +39,7 @@ import numpy as np
 from repro.core import edge_model
 from repro.core.hsa import HSAEngine
 from repro.models.config import ModelConfig
+from repro.obs import Observability, Tracer
 from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
                            Request, RequestScheduler, SamplingParams,
                            SpeculativeConfig)
@@ -81,7 +88,7 @@ def _run_scheduler_demo(engine: InferenceEngine, args,
     sched = RequestScheduler(engine, classes=classes, gen=gen,
                              chunk_size=args.chunk_size,
                              host_spill=args.host_spill,
-                             key=jax.random.key(2))
+                             key=jax.random.key(2), obs=engine.obs)
 
     def make_request(uid: int, s: int) -> Request:
         prompt = jax.random.randint(jax.random.fold_in(jax.random.key(1), uid),
@@ -136,6 +143,20 @@ def _run_scheduler_demo(engine: InferenceEngine, args,
           f"{total / dt:.2f}")
 
 
+def _export_obs(obs: Observability, args) -> None:
+    """Write the run's trace / metrics artifacts, when asked for."""
+    if args.trace:
+        obs.tracer.export(args.trace)
+        print(f"[serve] trace: {len(obs.tracer.events)} events -> "
+              f"{args.trace} (open in Perfetto / chrome://tracing)")
+    if args.metrics:
+        import json
+        with open(args.metrics, "w") as f:
+            json.dump(obs.metrics.snapshot(), f, indent=2)
+            f.write("\n")
+        print(f"[serve] metrics snapshot -> {args.metrics}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -177,6 +198,14 @@ def main() -> None:
                          "— axes data,model) or a named mesh from "
                          "launch.mesh; needs dp*tp devices (CPU smoke: "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--trace", metavar="FILE", default=None,
+                    help="record the request-lifecycle trace and write it to "
+                         "FILE as Chrome-trace-event JSON (load in Perfetto "
+                         "or chrome://tracing; `make trace-demo` shows one)")
+    ap.add_argument("--metrics", metavar="FILE", default=None,
+                    help="write the run's metrics-registry snapshot "
+                         "(counters, gauges, p50/p95/p99 histograms) to "
+                         "FILE as JSON")
     args = ap.parse_args()
     if args.oversubscribe:
         if args.oversubscribe <= 1.0:
@@ -199,10 +228,17 @@ def main() -> None:
         print(f"[serve] mesh: {axes} over {mesh.size} "
               f"{mesh.devices.flat[0].platform} devices "
               f"(params + cache sharded per ServeCell)")
-    engine = InferenceEngine.from_config(args.arch, spec, mesh=mesh)
+    # One bundle across the engine + scheduler + pool: the trace interleaves
+    # engine phases with per-request lifecycle tracks, and the metrics
+    # snapshot carries every component's counters under one registry.
+    obs = Observability()
+    if args.trace:
+        obs.tracer = Tracer()
+    engine = InferenceEngine.from_config(args.arch, spec, mesh=mesh, obs=obs)
     cfg = engine.cfg
     if args.requests > 0:
-        return _run_scheduler_demo(engine, args, n_in, n_out)
+        _run_scheduler_demo(engine, args, n_in, n_out)
+        return _export_obs(obs, args)
     print(f"[serve] {cfg.name} scenario={scen.name} in/out={n_in}/{n_out} "
           f"batch={args.batch}")
     if not args.no_quant:
@@ -228,6 +264,7 @@ def main() -> None:
     print(f"[serve] {scen.name} tokens/s (paper convention, prompt+output): "
           f"{args.batch * total / (t_p + t_d):.2f}")
     print(f"[serve] sample output tokens: {np.asarray(res.tokens[0, :16])}")
+    _export_obs(obs, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,73 @@
+"""Zero-overhead `jax.profiler` hooks for the serving hot path.
+
+The engine and scheduler wrap their jit *dispatch sites* (prefill, chunk
+step, fused decode/verify loops, the pool's vmapped steps) in
+`annotation(name)` contexts.  With profiling off — the default — the hook
+returns one shared ``nullcontext`` instance: no object allocation, no
+`jax.profiler` import, nothing in the dispatch path.  With profiling on,
+each site becomes a named `jax.profiler.TraceAnnotation`, so a
+``jax.profiler.trace`` capture (or a profiler server the user attaches
+Perfetto/TensorBoard to) shows the serving phases labeled exactly like the
+`obs.trace` span names.
+
+The annotations wrap only host-side dispatch: they never enter the traced
+program, so the compiled decode/verify HLO stays byte-identical whether
+profiling is on or off (the A7 program audit pins this).
+
+Usage::
+
+    from repro import obs
+
+    with obs.profiler.capture("/tmp/jax-trace"):   # or start_server(port)
+        engine.generate(prompts, gen)              # obs=... with profile=True
+
+Missing-profiler environments (stripped jax builds) degrade to no-ops
+rather than import errors — the serving stack must not grow a hard
+dependency on the profiler being present.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+__all__ = ["annotation", "capture", "start_server", "PROFILER_AVAILABLE"]
+
+_NULL = contextlib.nullcontext()
+
+try:  # pragma: no cover - exercised implicitly on every import
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+    PROFILER_AVAILABLE = True
+except ImportError:  # pragma: no cover - stripped jax build
+    _TraceAnnotation = None
+    PROFILER_AVAILABLE = False
+
+
+def annotation(name: str, enabled: bool = True):
+    """A named profiler annotation context; the shared no-op when disabled
+    (or when this jax has no profiler)."""
+    if not enabled or _TraceAnnotation is None:
+        return _NULL
+    return _TraceAnnotation(name)
+
+
+@contextlib.contextmanager
+def capture(logdir: str):
+    """A `jax.profiler.trace` capture written under ``logdir`` (view with
+    TensorBoard or Perfetto); a no-op context when jax has no profiler."""
+    try:
+        from jax.profiler import trace as profiler_trace
+    except ImportError:  # pragma: no cover - stripped jax build
+        yield
+        return
+    with profiler_trace(logdir):
+        yield
+
+
+def start_server(port: int = 9999):
+    """Start the profiler server (attach via TensorBoard's profile tab);
+    returns the server object, or None when jax has no profiler."""
+    try:
+        from jax.profiler import start_server as profiler_start
+    except ImportError:  # pragma: no cover - stripped jax build
+        return None
+    return profiler_start(port)

@@ -38,6 +38,7 @@ from repro import compat, configs
 from repro.core.hsa import HSAConfig, HSAEngine
 from repro.models import deploy, lm
 from repro.models.config import InputShape, ModelConfig
+from repro.obs import ENGINE_TRACK, Observability
 from repro.runtime import sharding as shd
 from repro.serving import speculative as spec_mod
 from repro.serving.sampling import (GenerationConfig, SpeculativeConfig,
@@ -231,8 +232,11 @@ class ChunkedPrefill:
         chunk = self.tokens[:, self._off:self._off + c]
         eng = self.engine
         eng.prefill_shape_keys.add(("chunk", c, self.cache_len))
-        self.logits, self.cache = eng._run_prefill_chunk({"tokens": chunk},
-                                                         self.cache)
+        with eng.obs.annotation("engine.prefill_chunk"):
+            self.logits, self.cache = eng._run_prefill_chunk(
+                {"tokens": chunk}, self.cache)
+        eng.obs.metrics.counter("engine.prefill_chunks").inc()
+        eng.obs.metrics.histogram("engine.prefill_chunk_tokens").record(c)
         self._off += c
         self._next += 1
         return self.logits if self.done else None
@@ -249,10 +253,16 @@ class InferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params: Params, spec: EngineSpec,
                  hsa: HSAEngine | None = None, *, mesh: Mesh | None = None,
-                 policy: "shd.ShardingPolicy | None" = None, cell=None):
+                 policy: "shd.ShardingPolicy | None" = None, cell=None,
+                 obs: Observability | None = None):
         self.cfg = cfg
         self.spec = spec
         self.hsa = hsa or HSAEngine(spec.hsa_config())
+        # Observability: host-side only (metrics registry + span tracer +
+        # profiler annotations around jit dispatch).  The A7 program audit
+        # proves the compiled decode/verify programs are byte-identical
+        # whether this is the default bundle or a live tracer.
+        self.obs = obs if obs is not None else Observability()
 
         # Multi-chip serving: with a mesh, the whole stack runs sharded —
         # params live under the `ServeCell` shardings, caches under
@@ -310,6 +320,7 @@ class InferenceEngine:
                     linear_paths: list[tuple[str, ...]] | None = None,
                     mesh: Mesh | None = None,
                     policy: "shd.ShardingPolicy | None" = None,
+                    obs: Observability | None = None,
                     ) -> "InferenceEngine":
         """Build the serving stack: init (or adopt) params, PTQ-deploy, wire
         the HSA engine.
@@ -348,7 +359,8 @@ class InferenceEngine:
                            kind="decode"),
                 policy=policy, kernel_impl=spec.kernel_impl,
                 quantize=not _is_master_tree(params))
-        return cls(cfg, params, spec, mesh=mesh, policy=policy, cell=cell)
+        return cls(cfg, params, spec, mesh=mesh, policy=policy, cell=cell,
+                   obs=obs)
 
     # -- jitted building blocks --------------------------------------------
 
@@ -778,19 +790,30 @@ class InferenceEngine:
         if key is None:
             key = jax.random.key(0)
 
-        t0 = time.perf_counter()
-        logits, cache = self.prefill(prompts, cache_len=cache_len,
-                                     extras=extras)
-        cache = self._encode_cache(cache, gen)
-        jax.block_until_ready(logits)
-        t_prefill = time.perf_counter() - t0
+        tr = self.obs.tracer
+        with tr.span("generate", ENGINE_TRACK,
+                     batch=prompts.shape[0],
+                     prompt_len=prompts.shape[1]):
+            t0 = time.perf_counter()
+            with tr.span("prefill", ENGINE_TRACK), \
+                    self.obs.annotation("engine.prefill"):
+                logits, cache = self.prefill(prompts, cache_len=cache_len,
+                                             extras=extras)
+                cache = self._encode_cache(cache, gen)
+                jax.block_until_ready(logits)
+            t_prefill = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        tokens, lengths, _ = self._run_loop(logits, cache, key, gen)
-        jax.block_until_ready(tokens)
-        t_decode = time.perf_counter() - t0
-        return GenerationResult(tokens=tokens, lengths=lengths,
-                                prefill_s=t_prefill, decode_s=t_decode)
+            t0 = time.perf_counter()
+            with tr.span("decode_loop", ENGINE_TRACK), \
+                    self.obs.annotation("engine.decode_loop"):
+                tokens, lengths, _ = self._run_loop(logits, cache, key, gen)
+                jax.block_until_ready(tokens)
+            t_decode = time.perf_counter() - t0
+            tr.instant("finish", ENGINE_TRACK, lengths=lengths)
+        res = GenerationResult(tokens=tokens, lengths=lengths,
+                               prefill_s=t_prefill, decode_s=t_decode)
+        self._observe_generate(res)
+        return res
 
     def resume_generate(self, pending: jax.Array, cache: Params,
                         gen: GenerationConfig = GenerationConfig(), *,
@@ -812,11 +835,42 @@ class InferenceEngine:
         if key is None:
             key = jax.random.key(0)
         t0 = time.perf_counter()
-        tokens, lengths, _ = self._run_resume_loop(pending, cache, key, gen)
-        jax.block_until_ready(tokens)
-        return GenerationResult(tokens=tokens, lengths=lengths,
-                                prefill_s=0.0,
-                                decode_s=time.perf_counter() - t0)
+        with self.obs.tracer.span("resume_loop", ENGINE_TRACK), \
+                self.obs.annotation("engine.resume_loop"):
+            tokens, lengths, _ = self._run_resume_loop(pending, cache, key,
+                                                       gen)
+            jax.block_until_ready(tokens)
+        res = GenerationResult(tokens=tokens, lengths=lengths,
+                               prefill_s=0.0,
+                               decode_s=time.perf_counter() - t0)
+        self._observe_generate(res)
+        return res
+
+    def _observe_generate(self, res: GenerationResult) -> None:
+        """Record one finished generate into the engine's metrics registry.
+
+        Runs strictly *after* the fused loop's `block_until_ready`, so the
+        `lengths` read costs a drained-buffer copy, not a new device sync.
+        The fused loop commits every token in one dispatch, so TTFT at this
+        level is the prefill wall, and inter-token latency the decode wall
+        per loop iteration (iterations = the longest sequence emitted).
+        """
+        m = self.obs.metrics
+        b = res.tokens.shape[0]
+        emitted = int(jnp.sum(res.lengths))
+        steps = int(jnp.max(res.lengths))
+        m.counter("engine.requests").inc(b)
+        m.counter("engine.emitted").inc(emitted)
+        if res.prefill_s:
+            m.histogram("engine.ttft_s").record(res.prefill_s)
+        m.histogram("engine.decode_s").record(res.decode_s)
+        if steps > 0:
+            m.histogram("engine.inter_token_s").record(res.decode_s / steps)
+        if res.verify_steps:
+            m.counter("engine.verify_steps").inc(res.verify_steps)
+            m.counter("engine.accepted_drafts").inc(res.accepted_drafts)
+            m.histogram("engine.tokens_per_verify_step").record(
+                res.tokens_per_step)
 
     def _encode_cache(self, cache: Params, gen: GenerationConfig) -> Params:
         """Apply ``gen.cache_format`` at the prefill/decode boundary: the
@@ -858,26 +912,38 @@ class InferenceEngine:
         if key is None:
             key = jax.random.key(0)
 
-        t0 = time.perf_counter()
-        logits, cache, hidden = self.prefill(prompts, cache_len=cache_len,
-                                             extras=extras,
-                                             return_hidden=True)
-        cache = self._encode_cache(cache, gen)
-        jax.block_until_ready(logits)
-        t_prefill = time.perf_counter() - t0
+        tr = self.obs.tracer
+        with tr.span("generate", ENGINE_TRACK, batch=b, prompt_len=s_in,
+                     speculative=True, k=spec.k):
+            t0 = time.perf_counter()
+            with tr.span("prefill", ENGINE_TRACK), \
+                    self.obs.annotation("engine.prefill"):
+                logits, cache, hidden = self.prefill(prompts,
+                                                     cache_len=cache_len,
+                                                     extras=extras,
+                                                     return_hidden=True)
+                cache = self._encode_cache(cache, gen)
+                jax.block_until_ready(logits)
+            t_prefill = time.perf_counter() - t0
 
-        hist0 = jnp.zeros((b, s_in + n + spec.k + 1),
-                          jnp.int32).at[:, :s_in].set(prompts)
-        t0 = time.perf_counter()
-        tokens, lengths, _, steps, accepted = self._run_spec_loop(
-            logits, hidden, hist0, jnp.int32(s_in), cache, key, gen)
-        jax.block_until_ready(tokens)
-        t_decode = time.perf_counter() - t0
-        steps, accepted = int(steps), int(accepted)
-        return GenerationResult(tokens=tokens, lengths=lengths,
-                                prefill_s=t_prefill, decode_s=t_decode,
-                                verify_steps=steps, accepted_drafts=accepted,
-                                drafted=steps * spec.k)
+            hist0 = jnp.zeros((b, s_in + n + spec.k + 1),
+                              jnp.int32).at[:, :s_in].set(prompts)
+            t0 = time.perf_counter()
+            with tr.span("spec_loop", ENGINE_TRACK), \
+                    self.obs.annotation("engine.spec_loop"):
+                tokens, lengths, _, steps, accepted = self._run_spec_loop(
+                    logits, hidden, hist0, jnp.int32(s_in), cache, key, gen)
+                jax.block_until_ready(tokens)
+            t_decode = time.perf_counter() - t0
+            steps, accepted = int(steps), int(accepted)
+            tr.instant("finish", ENGINE_TRACK, verify_steps=steps,
+                       accepted_drafts=accepted)
+        res = GenerationResult(tokens=tokens, lengths=lengths,
+                               prefill_s=t_prefill, decode_s=t_decode,
+                               verify_steps=steps, accepted_drafts=accepted,
+                               drafted=steps * spec.k)
+        self._observe_generate(res)
+        return res
 
 
 def _is_master_tree(params: Params) -> bool:

@@ -39,6 +39,7 @@ fluctuates, the same trade the fixed-size PE array makes in silicon).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Sequence
 
 import jax
@@ -46,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
+from repro.obs import SCHED_TRACK, Observability, request_track
 from repro.serving import speculative as spec_mod
 from repro.serving.engine import (CacheCapacityError, InferenceEngine,
                                   pytree_nbytes)
@@ -112,7 +114,8 @@ class CachePool:
     def __init__(self, cfg, n_slots: int | None = None,
                  cache_len: int | None = None, *,
                  classes: Sequence[tuple[int, int]] | None = None,
-                 dtype=jnp.float32, mesh=None, policy=None):
+                 dtype=jnp.float32, mesh=None, policy=None,
+                 obs: Observability | None = None):
         if classes is None:
             classes = [(n_slots if n_slots is not None else 4,
                         cache_len if cache_len is not None else 128)]
@@ -171,8 +174,18 @@ class CachePool:
                 leaf.devices()))
         else:
             self._device = None          # fetch re-places by sharding tree
-        self.spill_stats = {"spills": 0, "fetches": 0,
-                            "bytes_to_host": 0, "bytes_to_device": 0}
+        # Observability: the historical `spill_stats` dict survives as a
+        # live view over the metrics registry (same keys, same `+=`
+        # spelling); per-transfer byte histograms ride alongside.  A pool
+        # built by a `RequestScheduler` shares the scheduler's bundle, so
+        # one registry carries the whole serving stack's metrics.
+        self.obs = obs if obs is not None else Observability()
+        self.spill_stats = self.obs.metrics.counter_view(
+            "pool.", ["spills", "fetches", "bytes_to_host",
+                      "bytes_to_device"])
+        for n, clen in self.classes:
+            g = self.obs.metrics.gauge(f"pool.device_bytes[{clen}]")
+            g.set(pytree_nbytes(self._stores[clen]))
 
     # -- slot accounting ----------------------------------------------------
 
@@ -303,8 +316,10 @@ class CachePool:
         del self._lane_of[slot]
         self._lanes[clen].append(lane)
         self._host[slot] = host
+        nbytes = pytree_nbytes(host)
         self.spill_stats["spills"] += 1
-        self.spill_stats["bytes_to_host"] += pytree_nbytes(host)
+        self.spill_stats["bytes_to_host"] += nbytes
+        self.obs.metrics.histogram("pool.spill_bytes").record(nbytes)
 
     def fetch(self, slot: int) -> None:
         """Bind a spilled slot to a free lane in its class and restore its
@@ -320,8 +335,10 @@ class CachePool:
         host = self._host.pop(slot)
         lane = self._lanes[clen].pop(0)
         self._lane_of[slot] = (clen, lane)
+        nbytes = pytree_nbytes(host)
         self.spill_stats["fetches"] += 1
-        self.spill_stats["bytes_to_device"] += pytree_nbytes(host)
+        self.spill_stats["bytes_to_device"] += nbytes
+        self.obs.metrics.histogram("pool.fetch_bytes").record(nbytes)
         if self.mesh is not None:
             # Re-place under the slot's cache shardings — the round trip
             # restores both the bits and the distribution.
@@ -429,9 +446,16 @@ class RequestScheduler:
                  chunk_size: int = 32,
                  host_spill: bool = False,
                  cache_dtype=None,
-                 on_token: Callable[[int, int], None] | None = None):
+                 on_token: Callable[[int, int], None] | None = None,
+                 obs: Observability | None = None):
         self.engine = engine
         self.gen = gen
+        # Each scheduler defaults to its OWN bundle (schedulers built over a
+        # shared engine must not accumulate into one registry); pass the
+        # engine's bundle explicitly (`obs=engine.obs`) to unify them, as
+        # `repro.launch.serve` does.  The pool shares the scheduler's bundle.
+        self.obs = obs if obs is not None else Observability()
+        self._tr = self.obs.tracer
         # The pool-wide cache dtype policy: an explicit ``cache_dtype`` wins;
         # otherwise `gen.cache_format` (the request-level knob) selects the
         # quantized residency for every class; fp32 is the legacy default.
@@ -443,7 +467,8 @@ class RequestScheduler:
         self.pool = CachePool(engine.cfg, n_slots, cache_len, classes=classes,
                               dtype=cache_dtype,
                               mesh=getattr(engine, "mesh", None),
-                              policy=getattr(engine, "policy", None))
+                              policy=getattr(engine, "policy", None),
+                              obs=self.obs)
         self.base_key = key if key is not None else jax.random.key(0)
         self.chunk_size = chunk_size
         self.host_spill = host_spill
@@ -463,10 +488,14 @@ class RequestScheduler:
                         for n, clen in self.pool.classes}
         self._keys = {clen: jax.random.split(self.base_key, n)
                       for n, clen in self.pool.classes}
-        self.stats = {"steps": 0, "emitted": 0, "prefill_chunks": 0,
-                      "admitted": 0, "cancelled": 0, "decode_stall_steps": 0,
-                      "verify_steps": 0, "accepted_drafts": 0,
-                      "preempted": 0, "resumed": 0}
+        # The historical stats dict is now a live view over the metrics
+        # registry: same keys, same `+=` spelling, and a `snapshot()` of the
+        # registry sees every count under the `sched.` prefix.
+        self.stats = self.obs.metrics.counter_view(
+            "sched.", ["steps", "emitted", "prefill_chunks", "admitted",
+                       "cancelled", "decode_stall_steps", "verify_steps",
+                       "accepted_drafts", "preempted", "resumed"])
+        self._t_submit: dict[int, float] = {}    # uid -> submit wall clock
 
         # Speculative decode: each slot is its own batch lane, so acceptance
         # depth is per-request (no lockstep min over the batch like the
@@ -578,6 +607,11 @@ class RequestScheduler:
         while i > 0 and self._queue[i - 1].priority < request.priority:
             i -= 1
         self._queue.insert(i, request)
+        self._t_submit[request.uid] = time.perf_counter()
+        rt = request_track(request.uid)
+        self._tr.begin("request", rt, prompt_len=len(request.prompt),
+                       priority=request.priority)
+        self._tr.begin("queued", rt)
 
     def _request_need(self, req: Request) -> tuple[int, int]:
         """(cache positions needed, effective token budget).  An explicit
@@ -602,11 +636,21 @@ class RequestScheduler:
             if req.uid == uid:
                 self._queue.pop(i)
                 self.stats["cancelled"] += 1
+                self._t_submit.pop(uid, None)
+                rt = request_track(uid)
+                self._tr.end("queued", rt)
+                self._tr.instant("cancel", rt)
+                self._tr.end("request", rt)
                 return True
         if self._admitting is not None and self._admitting["req"].uid == uid:
             self.pool.release(self._admitting["slot"])
             self._admitting = None
             self.stats["cancelled"] += 1
+            self._t_submit.pop(uid, None)
+            rt = request_track(uid)
+            self._tr.end("admit", rt)
+            self._tr.instant("cancel", rt)
+            self._tr.end("request", rt)
             return True
         for slot, st in self._active.items():
             if st["req"].uid == uid:
@@ -625,6 +669,10 @@ class RequestScheduler:
                     verify_steps=entry["verify_steps"],
                     accepted_drafts=entry["accepted_drafts"]))
                 self.stats["cancelled"] += 1
+                rt = request_track(uid)
+                self._tr.end("preempted", rt)
+                self._tr.instant("cancel", rt)
+                self._tr.end("request", rt)
                 return True
         return False
 
@@ -663,6 +711,10 @@ class RequestScheduler:
             if slot is None:
                 continue                 # fitting classes all busy: try next
             self._queue.pop(i)
+            t_sub = self._t_submit.get(req.uid)
+            if t_sub is not None:
+                self.obs.metrics.histogram("sched.queue_wait_s").record(
+                    time.perf_counter() - t_sub)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             try:
                 prefill = self.engine.begin_chunked_prefill(
@@ -672,6 +724,10 @@ class RequestScheduler:
             except Exception:
                 self.pool.release(slot)
                 raise
+            rt = request_track(req.uid)
+            self._tr.end("queued", rt)
+            self._tr.begin("admit", rt,
+                           cache_len=self.pool.slot_len(slot))
             self._admitting = {"req": req, "slot": slot, "prefill": prefill,
                                "budget": budget}
             return
@@ -729,6 +785,7 @@ class RequestScheduler:
                  "budget": st["budget"], "emitted": st["emitted"],
                  "verify_steps": st["verify_steps"],
                  "accepted_drafts": st["accepted_drafts"],
+                 "t_submit": st.get("t_submit"), "t_last": st.get("t_last"),
                  "token": int(self._tokens[clen][lane, 0, 0]),
                  "key": self._keys[clen][lane]}
         if self._spec is not None:
@@ -737,6 +794,10 @@ class RequestScheduler:
         self.pool.spill(slot)
         self._preempted.append(entry)
         self.stats["preempted"] += 1
+        rt = request_track(st["req"].uid)
+        self._tr.end("decode", rt)
+        self._tr.instant("preempt", rt, cache_len=clen)
+        self._tr.begin("preempted", rt)
 
     def _try_resume(self, entry: dict) -> bool:
         """Fetch a parked request's cache back into a free lane of its class
@@ -758,9 +819,15 @@ class RequestScheduler:
         self._active[slot] = {"req": entry["req"], "emitted": entry["emitted"],
                               "budget": entry["budget"], "seq": entry["seq"],
                               "verify_steps": entry["verify_steps"],
-                              "accepted_drafts": entry["accepted_drafts"]}
+                              "accepted_drafts": entry["accepted_drafts"],
+                              "t_submit": entry.get("t_submit"),
+                              "t_last": entry.get("t_last")}
         self._preempted.remove(entry)
         self.stats["resumed"] += 1
+        rt = request_track(entry["req"].uid)
+        self._tr.end("preempted", rt)
+        self._tr.instant("resume", rt, cache_len=clen)
+        self._tr.begin("decode", rt)
         return True
 
     def _admit(self) -> None:
@@ -770,7 +837,16 @@ class RequestScheduler:
         if self._admitting is None:
             return
         adm = self._admitting
-        logits = adm["prefill"].advance()
+        rt = request_track(adm["req"].uid)
+        now = time.perf_counter()
+        if "t_chunk" in adm:
+            # Pacing: the gap between successive chunk dispatches is the
+            # decode latency the admission is overlapping with.
+            self.obs.metrics.histogram(
+                "sched.prefill_chunk_interval_s").record(now - adm["t_chunk"])
+        adm["t_chunk"] = now
+        with self._tr.span("prefill_chunk", rt):
+            logits = adm["prefill"].advance()
         self.stats["prefill_chunks"] += 1
         if not adm["prefill"].done:
             return
@@ -791,10 +867,14 @@ class RequestScheduler:
                 prompt.shape[0])
         self._active[slot] = {"req": req, "emitted": [],
                               "budget": adm["budget"], "seq": self._seq,
-                              "verify_steps": 0, "accepted_drafts": 0}
+                              "verify_steps": 0, "accepted_drafts": 0,
+                              "t_submit": self._t_submit.pop(req.uid, None),
+                              "t_last": None}
         self._seq += 1
         self._admitting = None
         self.stats["admitted"] += 1
+        self._tr.end("admit", rt)
+        self._tr.begin("decode", rt)
 
     def _retire(self, slot: int, cancelled: bool = False) -> None:
         st = self._active.pop(slot)
@@ -805,11 +885,32 @@ class RequestScheduler:
             verify_steps=st["verify_steps"],
             accepted_drafts=st["accepted_drafts"]))
         self.pool.release(slot)
+        t_sub = st.get("t_submit")
+        if t_sub is not None:
+            self.obs.metrics.histogram("sched.request_latency_s").record(
+                time.perf_counter() - t_sub)
+        rt = request_track(st["req"].uid)
+        self._tr.end("decode", rt)
+        self._tr.instant("finish", rt, tokens=len(st["emitted"]),
+                         cancelled=cancelled)
+        self._tr.end("request", rt)
 
     def step(self) -> int:
         """One admit+decode cycle; returns the number of tokens emitted."""
         self._admit()
         self.stats["steps"] += 1
+        # Occupancy gauges + trace counter series, sampled once per cycle at
+        # the step boundary (no device access: queue/active/preempted are
+        # python containers, host_bytes sums host-resident leaves).
+        m = self.obs.metrics
+        m.gauge("sched.queue_depth").set(len(self._queue))
+        m.gauge("sched.active").set(len(self._active))
+        m.gauge("sched.preempted_depth").set(len(self._preempted))
+        m.gauge("pool.host_bytes").set(self.pool.host_bytes)
+        if self._tr.enabled:
+            self._tr.counter("queue_depth", len(self._queue))
+            self._tr.counter("active", len(self._active))
+            self._tr.counter("host_bytes", self.pool.host_bytes)
         if not self._active:
             if self._admitting is not None:
                 self.stats["decode_stall_steps"] += 1
@@ -826,12 +927,14 @@ class RequestScheduler:
         for clen in active_classes:
             toks = self._tokens[clen]
             if self._spec is not None:
-                (blocks, counts, nxt, new_store, self._keys[clen],
-                 self._hist[clen], self._hist_len[clen]) = \
-                    self._spec_pool_step(
-                        self.engine.params, toks, self.pool.get_store(clen),
-                        self._keys[clen], self._hist[clen],
-                        self._hist_len[clen])
+                with self.obs.annotation("sched.spec_pool_step"):
+                    (blocks, counts, nxt, new_store, self._keys[clen],
+                     self._hist[clen], self._hist_len[clen]) = \
+                        self._spec_pool_step(
+                            self.engine.params, toks,
+                            self.pool.get_store(clen),
+                            self._keys[clen], self._hist[clen],
+                            self._hist_len[clen])
                 stepped[clen] = (np.asarray(jax.device_get(blocks)),
                                  np.asarray(jax.device_get(counts)))
                 self._tokens[clen] = nxt
@@ -839,12 +942,14 @@ class RequestScheduler:
                 snap = np.asarray(jax.device_get(toks[:, 0, 0]))
                 stepped[clen] = (snap[:, None],
                                  np.ones(snap.shape[0], np.int64))
-                nxt, new_store, self._keys[clen] = self._pool_step(
-                    self.engine.params, toks, self.pool.get_store(clen),
-                    self._keys[clen])
+                with self.obs.annotation("sched.pool_step"):
+                    nxt, new_store, self._keys[clen] = self._pool_step(
+                        self.engine.params, toks, self.pool.get_store(clen),
+                        self._keys[clen])
                 self._tokens[clen] = nxt[:, None, None]
             self.pool.set_store(clen, new_store)
 
+        now = time.perf_counter()
         for slot in list(self._active):
             st = self._active.get(slot)
             if st is None:           # retired by an on_token cancel mid-loop
@@ -857,6 +962,24 @@ class RequestScheduler:
                 st["accepted_drafts"] += len(block) - 1
                 self.stats["verify_steps"] += 1
                 self.stats["accepted_drafts"] += len(block) - 1
+                m.histogram("sched.tokens_per_verify_step").record(len(block))
+            if block:
+                # SLO latencies, stamped at the drain boundary (the tokens
+                # were already gathered above; no extra sync).  TTFT covers
+                # submit → first drained token; inter-token spreads the gap
+                # since the previous drain over this drain's block (the first
+                # block's same-drain extras carry no previous gap to spread).
+                if st.get("t_last") is None:
+                    if st.get("t_submit") is not None:
+                        m.histogram("sched.ttft_s").record(
+                            now - st["t_submit"])
+                    self._tr.instant("first_token",
+                                     request_track(st["req"].uid))
+                else:
+                    dt = (now - st["t_last"]) / len(block)
+                    for _ in block:
+                        m.histogram("sched.inter_token_s").record(dt)
+                st["t_last"] = now
             for tok in block:
                 st["emitted"].append(tok)
                 emitted += 1

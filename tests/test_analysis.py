@@ -116,6 +116,17 @@ class TestHostSyncRule:
                "    return x.item()  # repro: allow(host-sync)\n")
         assert rules_of(src, "serving/x.py") == []
 
+    def test_tracer_flush_is_the_only_obs_sync_site(self):
+        # obs/ is in the rule's scope; only Tracer.flush may gather.
+        src = ("import jax\n"
+               "class Tracer:\n"
+               "    def flush(self):\n"
+               "        return jax.device_get({})\n"
+               "    def begin(self):\n"
+               "        return jax.device_get({})\n")
+        assert rules_of(src, "obs/trace.py") == ["host-sync"]
+        assert rules_of(src, "obs/other.py") == ["host-sync", "host-sync"]
+
 
 # -- R4: module-scope-compute ------------------------------------------------
 
@@ -210,6 +221,11 @@ class TestProgramAudit:
         res = program_audit.audit_recompiles(max_len=9, chunk_size=4)
         assert res.ok, res.detail
         assert res.metrics["prefill_signatures"] <= res.metrics["bucket_bound"]
+
+    def test_observability_audit_smoke(self):
+        res = program_audit.audit_observability(max_new_tokens=4, spec_k=2)
+        assert res.ok, res.detail
+        assert res.metrics["diffs"] == []
 
     def test_report_render_and_dict(self):
         r = program_audit.AuditResult("x", True, "fine", {})

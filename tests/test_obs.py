@@ -1,0 +1,276 @@
+"""repro.obs: numpy-faithful percentiles, live counter views, span
+nesting/ordering in the lifecycle tracer, and the zero-overhead contract —
+greedy output is token-identical with the full observability stack enabled,
+across every serving cache architecture.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import fp_engine, prompt_list
+from repro.obs import (CounterView, Histogram, MetricsRegistry, NullTracer,
+                       Observability, Tracer, percentile, request_track)
+from repro.serving import GenerationConfig, Request, RequestScheduler
+
+# -- percentiles vs numpy -----------------------------------------------------
+
+
+class TestPercentile:
+    def test_matches_numpy_linear(self):
+        rng = np.random.default_rng(0)
+        for n in (1, 2, 3, 7, 50, 501):
+            xs = rng.normal(size=n).tolist()
+            for q in (0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0):
+                assert percentile(xs, q) == pytest.approx(
+                    float(np.percentile(xs, q)), rel=1e-12, abs=1e-12)
+
+    def test_empty_and_bad_q_raise(self):
+        with pytest.raises(ValueError):
+            percentile([], 50.0)
+        with pytest.raises(ValueError):
+            percentile([1.0], 101.0)
+
+    def test_histogram_summary_matches_numpy(self):
+        h = MetricsRegistry().histogram("t")
+        xs = np.random.default_rng(1).exponential(size=257)
+        for x in xs:
+            h.record(float(x))
+        s = h.summary()
+        assert s["count"] == 257
+        assert s["mean"] == pytest.approx(float(xs.mean()))
+        for q in (50, 95, 99):
+            assert s[f"p{q}"] == pytest.approx(float(np.percentile(xs, q)))
+
+    def test_empty_histogram_summarizes_to_count_only(self):
+        assert Histogram("idle").summary() == {"count": 0}
+
+    def test_decimation_bounds_memory_exact_extremes(self):
+        h = Histogram("x", max_samples=8)
+        for i in range(1000):
+            h.record(float(i))
+        assert h.count == 1000
+        assert (h.min, h.max) == (0.0, 999.0)
+        assert len(h.samples) < 8
+        # The retained subsample still estimates the median reasonably.
+        assert 250.0 < h.percentile(50.0) < 750.0
+
+
+# -- registry + live counter views --------------------------------------------
+
+
+class TestRegistry:
+    def test_counter_view_is_live_both_ways(self):
+        reg = MetricsRegistry()
+        v = reg.counter_view("s.", ["a", "b"])
+        v["a"] += 2                       # legacy dict spelling
+        reg.counter("s.b").inc(3)         # registry-side increment
+        assert reg.counter("s.a").value == 2
+        assert v["b"] == 3
+        assert dict(v) == {"a": 2, "b": 3}
+        assert v == {"a": 2, "b": 3}
+
+    def test_counter_view_fixed_keys(self):
+        v = MetricsRegistry().counter_view("s.", ["a"])
+        with pytest.raises(KeyError):
+            v["typo"]
+        with pytest.raises(KeyError):
+            v["typo"] = 1
+        with pytest.raises(TypeError):
+            del v["a"]
+        assert isinstance(v, CounterView) and len(v) == 1
+
+    def test_type_collision_raises_get_or_create_shares(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x")
+        assert reg.counter("x") is c
+        with pytest.raises(ValueError):
+            reg.gauge("x")
+        with pytest.raises(ValueError):
+            reg.histogram("x")
+
+    def test_gauge_watermarks(self):
+        g = MetricsRegistry().gauge("g")
+        for v in (5, 2, 9):
+            g.set(v)
+        assert (g.value, g.min, g.max) == (9, 2, 9)
+
+    def test_snapshot_is_json_ready(self):
+        reg = MetricsRegistry()
+        reg.counter("c").inc()
+        reg.gauge("g").set(1.5)
+        reg.histogram("h").record(0.25)
+        snap = json.loads(json.dumps(reg.snapshot()))
+        assert snap["counters"] == {"c": 1}
+        assert snap["gauges"]["g"]["max"] == 1.5
+        assert snap["histograms"]["h"]["p50"] == 0.25
+
+
+# -- tracer: span nesting / ordering / export ---------------------------------
+
+
+class TestTracer:
+    def test_mispaired_end_raises(self):
+        tr = Tracer()
+        tr.begin("a")
+        tr.begin("b")
+        with pytest.raises(ValueError):
+            tr.end("a")                   # b is innermost
+        tr.end("b")
+        tr.end("a")
+        assert tr.open_spans() == []
+        with pytest.raises(ValueError):
+            tr.end("a")                   # nothing open
+
+    def test_event_order_and_monotone_timestamps(self):
+        tr = Tracer()
+        with tr.span("outer"):
+            tr.instant("mark")
+            with tr.span("inner"):
+                pass
+        evs = [e for e in tr.events if e["ph"] != "M"]
+        assert [(e["ph"], e["name"]) for e in evs] == [
+            ("B", "outer"), ("i", "mark"), ("B", "inner"),
+            ("E", "inner"), ("E", "outer")]
+        ts = [e["ts"] for e in evs]
+        assert ts == sorted(ts) and all(t >= 0 for t in ts)
+
+    def test_per_track_nesting_is_independent(self):
+        tr = Tracer()
+        tr.begin("a", "scheduler")
+        tr.begin("b", "req 0")
+        tr.end("a", "scheduler")          # fine: different track's stack
+        tr.end("b", "req 0")
+
+    def test_tracks_declare_thread_names_once(self):
+        tr = Tracer()
+        for _ in range(3):
+            tr.instant("x", "engine")
+        tr.counter("depth", 1, "scheduler")
+        meta = [e for e in tr.events if e["ph"] == "M"]
+        assert [m["args"]["name"] for m in meta] == ["engine", "scheduler"]
+        assert len({m["tid"] for m in meta}) == 2
+
+    def test_deferred_device_args_gathered_at_flush(self):
+        tr = Tracer()
+        tr.instant("done", "engine", lengths=jnp.arange(3), n=7)
+        assert tr._pending_args           # recorded, not yet gathered
+        d = tr.to_dict()
+        ev = [e for e in d["traceEvents"] if e["name"] == "done"][0]
+        assert ev["args"]["lengths"] == [0, 1, 2] and ev["args"]["n"] == 7
+        assert not tr._pending_args       # one-shot gather
+
+    def test_export_perfetto_shape(self, tmp_path):
+        tr = Tracer()
+        with tr.span("s", "scheduler", k=1):
+            tr.counter("q", 2, "scheduler")
+        path = tmp_path / "trace.json"
+        tr.export(str(path))
+        with open(path) as f:
+            doc = json.load(f)
+        assert set(doc) == {"traceEvents", "displayTimeUnit"}
+        for ev in doc["traceEvents"]:
+            assert {"ph", "pid", "tid", "name"} <= set(ev)
+
+    def test_null_tracer_noops_everything(self):
+        nt = NullTracer()
+        with nt.span("a"):
+            nt.instant("b")
+            nt.counter("c", 1)
+        nt.end("never-opened")            # no bookkeeping, no raise
+        nt.flush()
+        assert not nt.enabled
+
+
+# -- scheduler lifecycle trace ------------------------------------------------
+
+
+def _req_events(tracer: Tracer, uid: int) -> list[tuple[str, str]]:
+    tids = {e["args"]["name"]: e["tid"] for e in tracer.events
+            if e["ph"] == "M"}
+    tid = tids[request_track(uid)]
+    return [(e["ph"], e["name"]) for e in tracer.events
+            if e["tid"] == tid and e["ph"] != "M"]
+
+
+class TestSchedulerTrace:
+    def test_request_lifecycle_ordering(self):
+        engine = fp_engine("retnet-1.3b")
+        obs = Observability(tracer=Tracer())
+        sched = RequestScheduler(engine, n_slots=1, cache_len=32,
+                                 gen=GenerationConfig(max_new_tokens=4),
+                                 chunk_size=8, obs=obs)
+        sched.submit(Request(uid=7, prompt=prompt_list(engine, 4)))
+        sched.run()
+        names = [n for _, n in _req_events(obs.tracer, 7)]
+        assert names[0] == "request" and names[-1] == "request"
+        order = [names.index(n) for n in
+                 ("queued", "admit", "prefill_chunk", "decode",
+                  "first_token", "finish")]
+        assert order == sorted(order)
+        assert obs.tracer.open_spans(request_track(7)) == []
+        snap = obs.metrics.snapshot()
+        assert snap["histograms"]["sched.ttft_s"]["count"] == 1
+        assert snap["counters"]["sched.admitted"] == 1
+
+    def test_preemption_reads_as_preempt_resume_pair(self):
+        engine = fp_engine("retnet-1.3b")
+        obs = Observability(tracer=Tracer())
+        sched = RequestScheduler(engine, n_slots=1, cache_len=32,
+                                 gen=GenerationConfig(max_new_tokens=6),
+                                 chunk_size=8, host_spill=True, obs=obs)
+        sched.submit(Request(uid=0, prompt=[2, 3, 4]))
+        while not sched._active:
+            sched.step()
+        sched.submit(Request(uid=1, prompt=[3, 4, 5]), priority=2)
+        res = sched.run()
+        assert len(res) == 2 and sched.stats["preempted"] == 1
+        names = [n for _, n in _req_events(obs.tracer, 0)]
+        order = [names.index(n) for n in
+                 ("admit", "preempt", "preempted", "resume", "finish")]
+        assert order == sorted(order)
+        assert obs.tracer.open_spans(request_track(0)) == []
+        snap = obs.metrics.snapshot()
+        assert snap["counters"]["pool.spills"] == 1
+        assert snap["histograms"]["pool.spill_bytes"]["count"] == 1
+        assert snap["histograms"]["pool.fetch_bytes"]["count"] == 1
+
+
+# -- zero-overhead contract: token identity with obs on -----------------------
+
+
+GEN = GenerationConfig(max_new_tokens=6)
+
+
+def _drain(engine, obs=None):
+    kw = {"obs": obs} if obs is not None else {}
+    sched = RequestScheduler(engine, n_slots=2, cache_len=64, gen=GEN,
+                             chunk_size=8, **kw)
+    for uid in range(3):
+        sched.submit(Request(uid=uid, prompt=prompt_list(engine, 5 + uid,
+                                                         seed=uid + 1)))
+    return {u: f.tokens for u, f in sched.run().items()}
+
+
+def test_greedy_identity_with_observability(cache_arch):
+    """Full stack on (live tracer + profiler annotations + shared metrics)
+    vs off: greedy output must be token-identical — the behavioral half of
+    the A7 compiled-program byte-identity audit."""
+    engine = fp_engine(cache_arch)
+    base = _drain(engine)
+    obs = Observability(tracer=Tracer(), profile=True)
+    saved = engine.obs
+    engine.obs = obs                      # engine-side spans + annotations
+    try:
+        traced = _drain(engine, obs=obs)
+    finally:
+        engine.obs = saved
+    assert base == traced
+    for uid in range(3):
+        assert obs.tracer.open_spans(request_track(uid)) == []
+    snap = obs.metrics.snapshot()
+    assert snap["histograms"]["sched.ttft_s"]["count"] == 3
+    assert snap["counters"]["sched.emitted"] == sum(
+        len(t) for t in traced.values())
