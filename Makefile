@@ -3,8 +3,9 @@
 
 PY ?= python
 
-.PHONY: test test-fast install serve-demo smoke-host-spill smoke-sharded \
-	trace-demo bench-serving bench-kernels lint-invariants audit-program
+.PHONY: test test-fast install serve-demo smoke-host-spill smoke-prefix \
+	smoke-sharded trace-demo bench-serving bench-kernels lint-invariants \
+	audit-program
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -26,6 +27,14 @@ smoke-host-spill:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
 		--arch retnet-1.3b --reduced --scenario SILO --scale 0.02 \
 		--requests 5 --slots 2 --chunk-size 8 --host-spill
+
+# Shared-prefix reuse smoke: 5 requests repeating one system prompt through
+# a prefix_cache=True scheduler — later admissions adopt the cached pages
+# and prefill only their unique tails (hit stats printed; CI smoke leg).
+smoke-prefix:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
+		--arch qwen3-8b --reduced --scenario LISO --scale 0.08 \
+		--requests 5 --slots 2 --chunk-size 8 --prefix-cache
 
 # Tiny multi-chip smoke: a 2x2 virtual-device (data, model) mesh serving
 # 3 requests through one device lane with the host-spill tier — a sharded

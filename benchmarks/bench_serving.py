@@ -35,6 +35,15 @@ successive PRs accumulate a perf trajectory instead of overwriting it:
                           device count, axis shape, and per-device vs
                           global cache bytes per record (subprocess: the
                           XLA device-count flag must precede jax init)
+    prefix_reuse.*        the shared-prefix leg: the same request stream at
+                          0% / 50% / 100% repeated-system-prompt fractions
+                          through a `prefix_cache=True` scheduler — per
+                          fraction the prefix hit rate, prefill tokens
+                          skipped (and the resulting prefill-token
+                          reduction), prefill chunks dispatched, and p50
+                          TTFT; the 100% leg also replays cold
+                          (prefix_cache=False) to record the TTFT delta and
+                          assert greedy outputs stay token-identical
     latency.*             per-leg SLO block from the `repro.obs` registry:
                           p50/p95/p99 TTFT and inter-token latency, plus
                           queue-depth / cache-occupancy gauge summaries on
@@ -321,6 +330,119 @@ def run_quantized_decode() -> dict:
     return legs
 
 
+# Shared-prefix leg: a repeated "system prompt" workload on the paged GQA
+# arch.  The shared prefix is long relative to the per-request suffix (the
+# system-prompt regime the radix tier targets): at PREFIX_SHARED tokens the
+# prefill chunks an adoption skips cost far more than the page gather-copy
+# that replaces them, so the TTFT trend is visible even on reduced CPU runs.
+# PREFIX_SHARED is chunk-aligned so the hit length is format-independent.
+PREFIX_ARCH = "qwen3-8b"
+PREFIX_SHARED = 96
+PREFIX_SUFFIX = 8
+PREFIX_REQUESTS = 8
+PREFIX_NEW_TOKENS = 8
+PREFIX_CHUNK = 8
+PREFIX_REPS = 3
+
+
+def run_prefix_reuse() -> dict:
+    """Shared-prefix reuse leg: sweep the fraction of requests that repeat
+    one system prompt and record how hit rate buys back prefill work.
+
+    Every fraction runs the same scheduler shape with ``prefix_cache=True``;
+    the 100%-shared point additionally replays the identical stream cold
+    (``prefix_cache=False``) to record ``ttft_p50_delta_s`` (warm − cold,
+    negative is a win) and assert the greedy outputs are token-identical —
+    adoption must be a pure prefill shortcut, never a sampling change.
+    """
+    engine = InferenceEngine.from_config(PREFIX_ARCH, EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=PREFIX_NEW_TOKENS)
+    clen = PREFIX_SHARED + PREFIX_SUFFIX + PREFIX_NEW_TOKENS
+
+    def prompts_for(frac: float, base: int) -> list[list[int]]:
+        shared = jax.random.randint(jax.random.key(base), (PREFIX_SHARED,),
+                                    1, engine.cfg.vocab_size,
+                                    dtype=jnp.int32).tolist()
+        n_shared = round(PREFIX_REQUESTS * frac)
+        out = []
+        for uid in range(PREFIX_REQUESTS):
+            head = shared if uid < n_shared else jax.random.randint(
+                jax.random.fold_in(jax.random.key(base + 2), uid),
+                (PREFIX_SHARED,), 1, engine.cfg.vocab_size,
+                dtype=jnp.int32).tolist()
+            tail = jax.random.randint(
+                jax.random.fold_in(jax.random.key(base + 6), uid),
+                (PREFIX_SUFFIX,), 1, engine.cfg.vocab_size,
+                dtype=jnp.int32).tolist()
+            out.append(head + tail)
+        return out
+
+    def drain(frac: float, prefix_cache: bool):
+        """One measured leg.  The scheduler's decode dispatch is jitted per
+        instance, so a warmup stream over a *disjoint* shared prefix (base
+        seed 41: same lengths and adoption shapes, zero radix overlap) pays
+        every trace/compile first; the registry then resets, and PREFIX_REPS
+        back-to-back streams — each repeating its *own* fresh system prompt —
+        accumulate clean counters and latency samples on the warm instance.
+        """
+        obs = Observability()
+        sched = RequestScheduler(engine, classes=[(2, clen)], gen=gen,
+                                 chunk_size=PREFIX_CHUNK,
+                                 key=jax.random.key(0),
+                                 prefix_cache=prefix_cache, obs=obs)
+        for uid, p in enumerate(prompts_for(1.0, base=41)):
+            sched.submit(Request(uid=1000 + uid, prompt=p))
+        sched.run()
+        obs.metrics.reset()
+        results: dict[int, object] = {}
+        wall_s = 0.0
+        for rep in range(PREFIX_REPS):
+            prompts = prompts_for(frac, base=11 + 13 * rep)
+            for i, p in enumerate(prompts):
+                sched.submit(Request(uid=100 * rep + i, prompt=p))
+            t0 = time.perf_counter()
+            results.update(sched.run())
+            wall_s += time.perf_counter() - t0
+        return results, sched, obs, wall_s
+
+    total_prompt = PREFIX_REPS * PREFIX_REQUESTS * (PREFIX_SHARED
+                                                    + PREFIX_SUFFIX)
+    legs: dict[str, dict] = {}
+    for frac in (0.0, 0.5, 1.0):
+        results, sched, obs, wall_s = drain(frac, True)
+        stats = sched.pool.prefix.stats
+        skipped = stats["prefix_hit_tokens"]
+        leg = {
+            "shared_fraction": frac,
+            "n_requests": PREFIX_REQUESTS,
+            "reps": PREFIX_REPS,
+            "wall_s": round(wall_s, 3),
+            "prefix_lookups": stats["prefix_lookups"],
+            "prefix_hits": stats["prefix_hits"],
+            "hit_rate": round(stats["prefix_hits"]
+                              / max(stats["prefix_lookups"], 1), 3),
+            "prefill_tokens_total": total_prompt,
+            "prefill_tokens_skipped": skipped,
+            "prefill_token_reduction": round(skipped / total_prompt, 3),
+            "prefill_chunks": sched.stats["prefill_chunks"],
+            "cow_copies": stats["cow_copies"],
+            "pages_inserted": stats["prefix_insert_pages"],
+            "latency": latency_summary(obs, "sched"),
+        }
+        if frac == 1.0:
+            cold_results, _, cold_obs, cold_wall = drain(1.0, False)
+            leg["token_identical_vs_cold"] = all(
+                results[u].tokens == cold_results[u].tokens
+                for u in cold_results)
+            warm_p50 = leg["latency"]["ttft_s"].get("p50", 0.0)
+            cold_p50 = latency_summary(
+                cold_obs, "sched")["ttft_s"].get("p50", 0.0)
+            leg["cold_wall_s"] = round(cold_wall, 3)
+            leg["ttft_p50_delta_s"] = round(warm_p50 - cold_p50, 6)
+        legs[f"shared_{int(frac * 100)}"] = leg
+    return legs
+
+
 SHARDED_MESH = "2,2"
 SHARDED_DEVICES = 4
 SHARDED_PROMPT = 16
@@ -398,6 +520,7 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     record["oversubscribed"] = run_oversubscribed()
     record["quantized_decode"] = run_quantized_decode()
     record["sharded"] = run_sharded()
+    record["prefix_reuse"] = run_prefix_reuse()
 
     # Append to the trajectory (older single-record files become entry 0).
     history: list = []

@@ -34,6 +34,12 @@ accounting guarantees (utilization / external-memory-access minimality):
                  counts: the compiled decode / speculative-verify programs
                  are byte-identical with the full observability stack
                  (tracer + profiler annotations + metrics) on vs off.
+    prefix-reuse (A8) shared-prefix adoption (serving/paging.py) is
+                 invisible to the compiled programs: the adopted-prefix
+                 decode HLO is byte-identical to the cold path, the
+                 suffix-only chunked prefill reuses the cold chunk ladder
+                 (zero new signatures) while keeping >= 90% cache-byte
+                 donation, and a warm scheduler drain actually hits.
 
 Run via ``python -m repro.analysis audit`` (`make audit-program`).  The
 sharding audit needs >= 4 devices; the Makefile target forces 4 virtual
@@ -48,7 +54,8 @@ import re
 
 __all__ = ["AuditResult", "AuditReport", "audit_recompiles",
            "audit_donation", "audit_transfers", "audit_sharding",
-           "audit_decode_kernel", "audit_observability", "run_audits",
+           "audit_decode_kernel", "audit_observability",
+           "audit_prefix_reuse", "run_audits",
            "parse_io_aliases", "hlo_opcodes", "custom_call_targets"]
 
 DEFAULT_ARCH = "retnet-1.3b"
@@ -501,6 +508,113 @@ def audit_observability(arch: str = DEFAULT_ARCH, *, max_new_tokens: int = 8,
         {"programs": ["decode", "verify"], "diffs": diffs})
 
 
+# -- A8: prefix-reuse audit ---------------------------------------------------
+
+def audit_prefix_reuse(arch: str = KERNEL_ARCH, *, cache_len: int = 24,
+                       chunk_size: int = 8) -> AuditResult:
+    """Prove shared-prefix adoption (serving/paging.py) is invisible to the
+    compiled programs:
+
+      * the cache `PrefixCache` assembles for an adopted prefix has avals
+        identical to a cold decode cache, so the decode step compiles to
+        **byte-identical** HLO warm vs cold — adoption can never push the
+        MVM phase onto a different (slower) program;
+      * the suffix-only chunked prefill stays inside the cold admission's
+        compiled chunk ladder (zero new prefill signatures) and every
+        suffix chunk length still donates >= 90% of the resident cache
+        bytes (the A2 guarantee survives a nonzero start offset);
+      * a warm scheduler drain actually hits the index — the audit fails
+        loudly if adoption silently degrades to cold admissions.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.models import lm
+    from repro.serving import (GenerationConfig, PrefixCache, Request,
+                               RequestScheduler)
+
+    engine = tiny_engine(arch)
+    donor = jax.random.randint(jax.random.key(1), (1, 16), 1,
+                               engine.cfg.vocab_size, dtype=jnp.int32)
+    suffix = jax.random.randint(jax.random.key(2), (1, 5), 1,
+                                engine.cfg.vocab_size, dtype=jnp.int32)
+    query = jnp.concatenate([donor, suffix], axis=1)
+    problems: list[str] = []
+
+    # Register the donor's prefix, then adopt it for the query.
+    _, donor_cache = engine.prefill_chunked(donor, cache_len=cache_len,
+                                            chunk_size=chunk_size)
+    pc = PrefixCache(engine.cfg, jnp.float32, enabled=True, page_size=4)
+    pc.register(donor[0].tolist(), donor_cache, cache_len)
+    p, warm = pc.lookup(query[0].tolist(), cache_len, slot=0,
+                        chunk_size=chunk_size)
+    if p != donor.shape[1]:
+        problems.append(f"adopted {p}/{donor.shape[1]} donor tokens")
+
+    # (1) Assembled-cache avals == cold-cache avals => the decode step
+    # lowers and compiles to byte-identical HLO on either.
+    cold = lm.make_decode_cache(engine.cfg, 1, cache_len, jnp.float32,
+                                start_pos=p)
+    shape_of = jax.eval_shape
+    if shape_of(lambda: warm) != shape_of(lambda: cold):
+        problems.append("assembled prefix cache avals differ from cold")
+    tok = jnp.zeros((1, 1), jnp.int32)
+    text_warm = _compiled_text(
+        jax.jit(engine._decode_impl).lower(engine.params, tok, warm))
+    text_cold = _compiled_text(
+        jax.jit(engine._decode_impl).lower(engine.params, tok, cold))
+    hlo_identical = text_warm == text_cold
+    if not hlo_identical:
+        problems.append(f"decode HLO differs warm vs cold "
+                        f"({len(text_warm)} vs {len(text_cold)} bytes)")
+
+    # (2) Suffix-only prefill: same compiled ladder as a cold admission of
+    # the same prompt, and per-chunk donation still >= 90%.
+    engine.prefill_chunked(query, cache_len=cache_len,
+                           chunk_size=chunk_size)       # the cold ladder
+    before = set(engine.prefill_shape_keys)
+    cp = engine.begin_chunked_prefill(query, cache_len=cache_len,
+                                      chunk_size=chunk_size,
+                                      initial_cache=warm, start_offset=p)
+    while not cp.done:
+        cp.advance()
+    new_keys = sorted(set(engine.prefill_shape_keys) - before)
+    if new_keys:
+        problems.append(f"adopted admission compiled new prefill "
+                        f"signature(s): {new_keys}")
+    fractions = {}
+    for c in sorted(set(cp.schedule)):
+        r = audit_donation(arch, chunk=c, cache_len=cache_len, engine=engine)
+        fractions[c] = r.metrics["fraction"]
+        if not r.ok:
+            problems.append(f"suffix chunk {c}: only "
+                            f"{r.metrics['fraction']:.1%} cache bytes donated")
+
+    # (3) A warm scheduler drain hits the index end to end.
+    sched = RequestScheduler(engine, n_slots=2, cache_len=2 * cache_len,
+                             gen=GenerationConfig(max_new_tokens=4),
+                             chunk_size=chunk_size, prefix_cache=True)
+    sched.submit(Request(uid=0, prompt=donor[0].tolist()))
+    sched.submit(Request(uid=1, prompt=query[0].tolist()))
+    sched.run()
+    st = sched.pool.prefix.stats
+    if st["prefix_hits"] < 1:
+        problems.append("warm scheduler drain never hit the prefix index")
+
+    ok = not problems
+    return AuditResult(
+        "prefix-reuse", ok,
+        f"adopted {p} tokens: decode HLO byte-identical, suffix chunks "
+        f"{sorted(set(cp.schedule))} reuse the cold ladder with "
+        f"{min(fractions.values()):.1%}+ cache bytes donated, "
+        f"{st['prefix_hit_tokens']} tokens skipped in a scheduler drain"
+        if ok else "; ".join(problems),
+        {"arch": arch, "adopted_tokens": int(p),
+         "hlo_identical": hlo_identical, "new_prefill_keys": new_keys,
+         "suffix_donation": fractions,
+         "sched_hits": st["prefix_hits"],
+         "sched_hit_tokens": st["prefix_hit_tokens"]})
+
+
 # -- driver ------------------------------------------------------------------
 
 def run_audits(arch: str = DEFAULT_ARCH, *, mesh_spec: str = "2,2",
@@ -516,5 +630,8 @@ def run_audits(arch: str = DEFAULT_ARCH, *, mesh_spec: str = "2,2",
         audit_sharding(arch, mesh_spec=mesh_spec),
         audit_decode_kernel(),
         audit_observability(arch),
+        # Prefix adoption needs a *pageable* (dense-attention) cache;
+        # DEFAULT_ARCH (retnet) takes the snapshot path instead.
+        audit_prefix_reuse(KERNEL_ARCH),
     ]
     return AuditReport(results)

@@ -99,15 +99,17 @@ RULE_IDS = tuple(r.id for r in ALL_RULES)
 
 # Functions allowed to synchronize with the host: the scheduler's batched
 # post-step drain (token blocks leave the device exactly once per sequencer
-# cycle, in one gather), the host-spill tier itself, whose entire point is a
-# device->host transfer, and the tracer's explicit flush — the ONE place the
-# observability layer may gather its deferred device-array span args (record
-# sites store arrays as-is; `Tracer.flush` resolves them at export time).
-# Key: "<path>::<Qualified.name>".
+# cycle, in one gather), the host-spill tiers themselves — the pool's slot
+# spill and the prefix cache's cold-page migration, whose entire point is a
+# device->host transfer — and the tracer's explicit flush — the ONE place
+# the observability layer may gather its deferred device-array span args
+# (record sites store arrays as-is; `Tracer.flush` resolves them at export
+# time).  Key: "<path>::<Qualified.name>".
 HOST_SYNC_ALLOW = frozenset({
     "serving/scheduler.py::RequestScheduler.step",
     "serving/scheduler.py::RequestScheduler._preempt",
     "serving/scheduler.py::CachePool.spill",
+    "serving/paging.py::PrefixCache._spill",
     "obs/trace.py::Tracer.flush",
 })
 

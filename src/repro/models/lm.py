@@ -966,3 +966,85 @@ def cache_axes(cfg: ModelConfig) -> Params:
             continue
         axes[gname] = one(kind)
     return axes
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix cache reuse (serving/paging.py builds on these).
+# ---------------------------------------------------------------------------
+
+# Cache kinds whose per-position rows are position-addressable: every leaf
+# carries the cache axis at position 2 and row j is a pure function of
+# (token_j, position j, params) — the property that makes token-prefix pages
+# reusable across requests.  Ring buffers (sliding_window) alias positions
+# mod window and recurrent state (retnet S, mamba h/conv) folds the whole
+# history into O(1) slots, so neither can share *pages*; they snapshot whole
+# cache states instead (`prefix_sharing_mode` returns 'snapshot').
+_PAGEABLE_KINDS = frozenset({"dense", "moe"})
+
+
+def prefix_sharing_mode(cfg: ModelConfig) -> str | None:
+    """How this architecture can reuse a cached token prefix.
+
+    'paged'    — every decode-cache group is position-addressable linear
+                 attention (dense/moe GQA or MLA, no sliding window): token
+                 prefixes map to immutable page runs sliceable on the cache
+                 axis, adoptable at any boundary.
+    'snapshot' — at least one group is a ring or recurrent state: pages
+                 cannot represent it, but the *whole cache pytree* at a
+                 finished prompt is a valid prefix state, adoptable at that
+                 exact token boundary (the PR 3 verify-snapshot insight).
+    None       — chunked prefill itself is unsupported (encoder-decoder /
+                 frontend prompts prefill monolithically), so there is no
+                 admission seam to adopt a prefix through.
+    """
+    if cfg.is_encdec or cfg.frontend:
+        return None
+    kinds = {kind for _, _, kind in layer_groups(cfg)}
+    if kinds <= _PAGEABLE_KINDS and not cfg.sliding_window:
+        return "paged"
+    return "snapshot"
+
+
+def prefix_page_groups(cfg: ModelConfig) -> list[str]:
+    """Cache groups a page row covers (every group except pos/rope) — only
+    meaningful when `prefix_sharing_mode(cfg) == 'paged'`."""
+    if prefix_sharing_mode(cfg) != "paged":
+        raise ValueError(f"{cfg.name}: cache is not pageable "
+                         f"(mode={prefix_sharing_mode(cfg)!r})")
+    return [gname for gname, _, kind in layer_groups(cfg) if kind != "enc"]
+
+
+def slice_cache_rows(cache: Params, cfg: ModelConfig, start: int,
+                     stop: int) -> Params:
+    """Extract cache rows [start, stop) of every pageable group.
+
+    Returns ``{gname: subtree}`` with each leaf sliced on the cache axis
+    (axis 2 under the stacked-layer layout).  Quantized residency slices the
+    encoded dict leaves identically — `core.kvq` formats encode along the
+    *last* axis only, so a cache-axis slice of the ``q``/``s`` (or
+    ``m``/``e``) planes is exactly the encoding of the sliced rows.
+    """
+    return {g: jax.tree.map(lambda x: x[:, :, start:stop], cache[g])
+            for g in prefix_page_groups(cfg)}
+
+
+def assemble_prefix_cache(cfg: ModelConfig, rows: Params, n_tokens: int,
+                          cache_len: int, dtype) -> Params:
+    """Build the warm batch-1 decode cache an adopted prefix resumes from.
+
+    ``rows`` is `slice_cache_rows` output (possibly concatenated across
+    pages) covering positions [0, n_tokens).  The scaffold comes from
+    `make_decode_cache(start_pos=n_tokens)` — which sets ``pos`` and the
+    online-RoPE angle state to exactly what a chunked prefill of those
+    n_tokens leaves behind (`_chunk_stack` rebuilds rope functionally from
+    ``pos`` each chunk) — and the page rows are scattered under it.  The
+    result has the same pytree structure, shapes, and dtypes as a cold
+    chunked-prefill cache, so the suffix chunks and the decode loop reuse
+    the already-compiled executables (audit A8 pins this).
+    """
+    cache = make_decode_cache(cfg, 1, cache_len, dtype, start_pos=n_tokens)
+    for g in prefix_page_groups(cfg):
+        cache[g] = jax.tree.map(
+            lambda full, r: full.at[:, :, :n_tokens].set(
+                r.astype(full.dtype)), cache[g], rows[g])
+    return cache

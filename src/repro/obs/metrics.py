@@ -118,6 +118,17 @@ class Histogram:
             self._samples = self._samples[::2]
             self._stride *= 2
 
+    def reset(self) -> None:
+        """Forget every observation (keeps name/max_samples; see
+        `MetricsRegistry.reset`)."""
+        self.count = 0
+        self.total = 0.0
+        self.min = None
+        self.max = None
+        self._samples = []
+        self._stride = 1
+        self._skip = 0
+
     @property
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
@@ -238,6 +249,20 @@ class MetricsRegistry:
 
     def counter_view(self, prefix: str, keys: Iterable[str]) -> CounterView:
         return CounterView(self, prefix, keys)
+
+    def reset(self) -> None:
+        """Zero every registered metric *in place* — counters to 0, gauges to
+        unset, histograms emptied — while keeping the metric objects (and
+        every live `CounterView` over them) attached.  The warm-vs-measured
+        seam: a bench drives a warmup pass through a scheduler to pay its
+        trace/compile costs, resets, then measures a clean run on the same
+        instance (`bench_serving.run_prefix_reuse`)."""
+        for c in self._counters.values():
+            c.value = 0
+        for g in self._gauges.values():
+            g.value = g.min = g.max = None
+        for h in self._histograms.values():
+            h.reset()
 
     def snapshot(self) -> dict:
         """JSON-ready dump: counters as ints, gauges as value/min/max,

@@ -18,6 +18,12 @@ One import gives the whole serving surface:
     spill tier (`host_spill=True`) that preempts low-priority lanes to CPU
     DRAM and resumes them bit-exactly — oversubscription instead of a hard
     admission failure (scheduler.py).
+  * `PrefixCache` / `RadixPageIndex` / `SnapshotPrefixIndex` — shared-prefix
+    reuse (`prefix_cache=True` on the scheduler/pool): refcounted immutable
+    cache pages under a radix index (whole-cache snapshots on recurrent
+    archs), adopted at admission so shared prompt prefixes skip their
+    prefill, with COW tail-page copies, LRU eviction, and a host tier for
+    cold pages (paging.py).
   * `ChunkedPrefill` / `bucket_length` / `chunk_schedule` — the ladder-
     bucketed, chunked prompt-admission machinery (engine.py).
   * `ServeCell` / `build_serve` — typed sharding/shape plan for multi-chip
@@ -35,6 +41,8 @@ from repro.serving.engine import (CacheCapacityError, ChunkedPrefill,
                                   EngineSpec, GenerationResult,
                                   InferenceEngine, bucket_length,
                                   chunk_schedule, pytree_nbytes)
+from repro.serving.paging import (PageLeaseError, PrefixCache,
+                                  RadixPageIndex, SnapshotPrefixIndex)
 from repro.serving.sampling import (GREEDY, GenerationConfig, SamplingParams,
                                     SpeculativeConfig, sample)
 from repro.serving.scheduler import (CachePool, FinishedRequest, Request,
@@ -46,8 +54,10 @@ __all__ = [
     "CacheCapacityError", "CachePool", "ChunkedPrefill", "Drafter",
     "EngineSpec",
     "FinishedRequest", "GenerationConfig", "GenerationResult", "GREEDY",
-    "InferenceEngine", "MTPDrafter", "NgramDrafter", "Request",
-    "RequestScheduler", "SamplingParams", "ServeCell", "SpeculativeConfig",
+    "InferenceEngine", "MTPDrafter", "NgramDrafter", "PageLeaseError",
+    "PrefixCache", "RadixPageIndex", "Request",
+    "RequestScheduler", "SamplingParams", "ServeCell", "SnapshotPrefixIndex",
+    "SpeculativeConfig",
     "bucket_length", "build_serve", "chunk_schedule", "make_drafter",
     "ngram_propose", "prefill_chunk_step_fn", "pytree_nbytes", "sample",
     "serving_engine", "verify_chunk_step_fn",

@@ -189,10 +189,21 @@ class ChunkedPrefill:
     steps instead of blocking them.  After the final chunk, `logits` holds
     the last-token logits and `cache` the warm decode cache (identical — up
     to fp summation order — to a monolithic `prefill` of the same prompt).
+
+    Shared-prefix adoption: with ``start_offset=p`` and an ``initial_cache``
+    already warm over positions [0, p) (assembled by the pool's
+    `PrefixCache` from shared pages or a snapshot), only the suffix
+    ``tokens[:, p:]`` is scheduled — the first p tokens of prefill are
+    skipped outright.  The chunk step reads its start position from the
+    traced ``cache["pos"]``, so a nonzero offset reuses the same compiled
+    ladder as a cold admission.  ``initial_cache`` is consumed (the chunk
+    jit donates its cache argument): callers must hand in a private copy,
+    never a shared/registered pytree.
     """
 
     def __init__(self, engine: "InferenceEngine", tokens: jax.Array,
-                 cache_len: int, chunk_size: int, cache_dtype=jnp.float32):
+                 cache_len: int, chunk_size: int, cache_dtype=jnp.float32,
+                 *, initial_cache=None, start_offset: int = 0):
         tokens = jnp.asarray(tokens, jnp.int32)
         if tokens.ndim != 2:
             raise ValueError(f"tokens must be [B, S], got {tokens.shape}")
@@ -202,18 +213,27 @@ class ChunkedPrefill:
         if s > cache_len:
             raise CacheCapacityError(
                 f"prompt ({s}) exceeds cache_len ({cache_len})")
+        if not 0 <= start_offset < s:
+            raise ValueError(f"start_offset ({start_offset}) must be in "
+                             f"[0, prompt length {s})")
+        if start_offset and initial_cache is None:
+            raise ValueError("start_offset > 0 requires an initial_cache "
+                             "warm over the adopted prefix")
         w = engine.cfg.sliding_window
         if w:
             chunk_size = min(chunk_size, w)   # ring scatter: chunk <= window
         self.engine = engine
         self.tokens = tokens
-        self.schedule = chunk_schedule(s, chunk_size)
-        self.cache = engine.shard_cache(
-            lm.make_decode_cache(engine.cfg, tokens.shape[0], cache_len,
-                                 cache_dtype, start_pos=0))
+        self.schedule = chunk_schedule(s - start_offset, chunk_size)
+        if initial_cache is None:
+            initial_cache = lm.make_decode_cache(
+                engine.cfg, tokens.shape[0], cache_len, cache_dtype,
+                start_pos=0)
+        self.cache = engine.shard_cache(initial_cache)
         self.cache_len = cache_len
+        self.start_offset = start_offset
         self.logits: jax.Array | None = None
-        self._off = 0
+        self._off = start_offset
         self._next = 0
 
     @property
@@ -749,10 +769,17 @@ class InferenceEngine:
             return fn(self.params, tokens, cache)
 
     def begin_chunked_prefill(self, tokens: jax.Array, *, cache_len: int,
-                              chunk_size: int = 32,
-                              cache_dtype=jnp.float32) -> ChunkedPrefill:
-        """Start a chunk-granular admission; the caller paces `advance()`."""
-        return ChunkedPrefill(self, tokens, cache_len, chunk_size, cache_dtype)
+                              chunk_size: int = 32, cache_dtype=jnp.float32,
+                              initial_cache=None,
+                              start_offset: int = 0) -> ChunkedPrefill:
+        """Start a chunk-granular admission; the caller paces `advance()`.
+
+        ``initial_cache``/``start_offset`` adopt an already-warm prefix:
+        only ``tokens[:, start_offset:]`` is prefilled (see ChunkedPrefill).
+        """
+        return ChunkedPrefill(self, tokens, cache_len, chunk_size, cache_dtype,
+                              initial_cache=initial_cache,
+                              start_offset=start_offset)
 
     def prefill_chunked(self, tokens: jax.Array, *, cache_len: int,
                         chunk_size: int = 32, cache_dtype=jnp.float32

@@ -109,13 +109,25 @@ class CachePool:
     free lane again and restores the cache bit-exactly.  ``residency(slot)``
     reports which tier a slot lives in; ``spill_stats`` counts spills,
     fetches, and bytes moved each way.
+
+    With ``prefix_cache=True`` the pool also owns a `PrefixCache`
+    (serving/paging.py): a refcounted-page radix index (or whole-cache
+    snapshot index on recurrent archs) over finished prompt prefixes.
+    ``prefix_lookup`` at admission returns an adopted-prefix length plus an
+    assembled warm cache; ``prefix_register`` indexes a finished prefill;
+    page leases are tied to slot ids and dropped in ``release``;
+    ``prefix_maintain`` runs the LRU/host-migration cycle once per
+    scheduler step.
     """
 
     def __init__(self, cfg, n_slots: int | None = None,
                  cache_len: int | None = None, *,
                  classes: Sequence[tuple[int, int]] | None = None,
                  dtype=jnp.float32, mesh=None, policy=None,
-                 obs: Observability | None = None):
+                 obs: Observability | None = None,
+                 prefix_cache: bool = False, prefix_page_size: int = 16,
+                 max_prefix_pages: int | None = None,
+                 device_prefix_pages: int | None = None):
         if classes is None:
             classes = [(n_slots if n_slots is not None else 4,
                         cache_len if cache_len is not None else 128)]
@@ -186,6 +198,14 @@ class CachePool:
         for n, clen in self.classes:
             g = self.obs.metrics.gauge(f"pool.device_bytes[{clen}]")
             g.set(pytree_nbytes(self._stores[clen]))
+        # Shared-prefix tier (opt-in): refcounted pages / snapshots indexed
+        # by token prefix, leased per slot, maintained once per step.
+        from repro.serving.paging import PrefixCache
+        self.prefix = PrefixCache(cfg, self.dtype, enabled=prefix_cache,
+                                  page_size=prefix_page_size,
+                                  max_pages=max_prefix_pages,
+                                  device_pages=device_prefix_pages,
+                                  obs=self.obs)
 
     # -- slot accounting ----------------------------------------------------
 
@@ -280,7 +300,10 @@ class CachePool:
         return None
 
     def release(self, slot: int) -> None:
-        """Retire a slot: free its device lane, or drop its host copy."""
+        """Retire a slot: free its device lane, or drop its host copy.
+        Any prefix-page leases the slot holds are dropped with it (this is
+        the single refcount-decrement path — retire, cancel, and preempted
+        cancel all route through here)."""
         if slot in self._lane_of:
             clen, lane = self._lane_of.pop(slot)
             self._lanes[clen].append(lane)
@@ -291,6 +314,26 @@ class CachePool:
         else:
             raise ValueError(f"release of unknown slot id {slot}")
         del self._class_of[slot]
+        self.prefix.release(slot)
+
+    # -- shared-prefix tier --------------------------------------------------
+
+    def prefix_lookup(self, prompt, slot: int, *, chunk_size: int = 1
+                      ) -> tuple[int, Params | None]:
+        """Longest adoptable cached prefix of ``prompt`` for ``slot``:
+        ``(n_tokens, warm_batch1_cache)`` or ``(0, None)``.  Leases the
+        backing pages under the slot until `release`."""
+        return self.prefix.lookup(prompt, self.slot_len(slot), slot,
+                                  chunk_size=chunk_size)
+
+    def prefix_register(self, prompt, cache: Params, slot: int) -> int:
+        """Index a finished prefill's prefix for future adopters."""
+        return self.prefix.register(prompt, cache, self.slot_len(slot))
+
+    def prefix_maintain(self) -> None:
+        """One prefix-tier bookkeeping cycle (LRU eviction, proactive host
+        migration of cold unreferenced pages, gauge refresh)."""
+        self.prefix.maintain()
 
     # -- host spill tier ----------------------------------------------------
 
@@ -447,7 +490,10 @@ class RequestScheduler:
                  host_spill: bool = False,
                  cache_dtype=None,
                  on_token: Callable[[int, int], None] | None = None,
-                 obs: Observability | None = None):
+                 obs: Observability | None = None,
+                 prefix_cache: bool = False, prefix_page_size: int = 16,
+                 max_prefix_pages: int | None = None,
+                 device_prefix_pages: int | None = None):
         self.engine = engine
         self.gen = gen
         # Each scheduler defaults to its OWN bundle (schedulers built over a
@@ -468,7 +514,11 @@ class RequestScheduler:
                               dtype=cache_dtype,
                               mesh=getattr(engine, "mesh", None),
                               policy=getattr(engine, "policy", None),
-                              obs=self.obs)
+                              obs=self.obs,
+                              prefix_cache=prefix_cache,
+                              prefix_page_size=prefix_page_size,
+                              max_prefix_pages=max_prefix_pages,
+                              device_prefix_pages=device_prefix_pages)
         self.base_key = key if key is not None else jax.random.key(0)
         self.chunk_size = chunk_size
         self.host_spill = host_spill
@@ -717,17 +767,27 @@ class RequestScheduler:
                     time.perf_counter() - t_sub)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             try:
+                # Shared-prefix adoption: walk the pool's prefix index and
+                # start the chunked prefill at the longest cached prefix —
+                # those tokens are never prefilled.  The assembled warm
+                # cache is private to this slot (pages are copied in), so
+                # handing it to the donating chunk step is safe; the pages
+                # themselves stay leased until the slot releases.
+                hit, warm = self.pool.prefix_lookup(
+                    req.prompt, slot, chunk_size=self.chunk_size)
                 prefill = self.engine.begin_chunked_prefill(
                     prompt, cache_len=self.pool.slot_len(slot),
                     chunk_size=self.chunk_size,
-                    cache_dtype=self.pool.dtype)
+                    cache_dtype=self.pool.dtype,
+                    initial_cache=warm, start_offset=hit)
             except Exception:
                 self.pool.release(slot)
                 raise
             rt = request_track(req.uid)
             self._tr.end("queued", rt)
             self._tr.begin("admit", rt,
-                           cache_len=self.pool.slot_len(slot))
+                           cache_len=self.pool.slot_len(slot),
+                           prefix_hit=hit)
             self._admitting = {"req": req, "slot": slot, "prefill": prefill,
                                "budget": budget}
             return
@@ -852,6 +912,10 @@ class RequestScheduler:
             return
         req, slot = adm["req"], adm["slot"]
         self.pool.write(slot, adm["prefill"].cache)
+        # The finished prompt's warm cache covers [0, len(prompt)) — index
+        # it so later admissions sharing this prefix skip their prefill.
+        # (`write` does not donate, so the cache is still whole here.)
+        self.pool.prefix_register(req.prompt, adm["prefill"].cache, slot)
         key = jax.random.fold_in(self.base_key, req.uid)
         key, sub = jax.random.split(key)
         tok = sample(logits[0], self.gen.sampling, sub)
@@ -898,6 +962,7 @@ class RequestScheduler:
     def step(self) -> int:
         """One admit+decode cycle; returns the number of tokens emitted."""
         self._admit()
+        self.pool.prefix_maintain()
         self.stats["steps"] += 1
         # Occupancy gauges + trace counter series, sampled once per cycle at
         # the step boundary (no device access: queue/active/preempted are

@@ -1,0 +1,236 @@
+"""Property tests for the shared-prefix page index (serving/paging.py):
+radix insert/match/evict correctness and page-refcount invariants — refs
+never negative, leases never leaked, leased pages never evicted, shared
+page rows never mutated by matching/COW, host-spilled pages stay
+matchable.  Pure bookkeeping (fake numpy rows, no engine), so hundreds of
+examples run in milliseconds.  Skips without hypothesis
+(pip install -e .[test])."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: property tests skip without it
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paging import (PageLeaseError, RadixPageIndex,
+                                  SnapshotPrefixIndex)
+
+SETTINGS = dict(max_examples=60, deadline=None)
+
+# Small alphabet + short keys => heavy prefix collision, which is the
+# interesting regime for a radix tree.
+_KEY = st.lists(st.integers(min_value=0, max_value=3), min_size=1,
+                max_size=12).map(tuple)
+_KEYS = st.lists(_KEY, min_size=1, max_size=8)
+
+
+def _rows_of(key):
+    """Fake page rows: the token ids themselves, so row content encodes
+    exactly which positions a page claims to hold."""
+    return lambda a, b: {"rows": np.asarray(key[a:b], np.int64)}
+
+
+def _nbytes(rows) -> int:
+    return int(rows["rows"].nbytes)
+
+
+def _insert(ix, key):
+    return ix.insert(key, _rows_of(key), nbytes_of=_nbytes)
+
+
+def _matched_tokens(matched):
+    out = []
+    for node, m in matched:
+        out.extend(node.tokens[:m])
+    return tuple(out)
+
+
+def _matched_rows(ix, matched):
+    out = []
+    for node, m in matched:
+        rows = node.rows if node.rows is not None else node.host_rows
+        out.extend(rows["rows"][:m].tolist())
+    return tuple(out)
+
+
+# -- radix insert/match ------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(keys=_KEYS, page_size=st.integers(min_value=1, max_value=5),
+       probe=_KEY)
+def test_match_is_true_prefix_with_matching_rows(keys, page_size, probe):
+    """For ANY insert sequence and ANY probe: the matched page run spells a
+    true prefix of the probe, and the rows those pages carry are exactly
+    the tokens they claim (no page ever serves another prefix's rows)."""
+    ix = RadixPageIndex(page_size)
+    for k in keys:
+        _insert(ix, k)
+    matched = ix.match(probe)
+    toks = _matched_tokens(matched)
+    assert toks == probe[:len(toks)]
+    assert _matched_rows(ix, matched) == toks
+    # Every matched page but the last is fully used (maximality of the walk).
+    for node, m in matched[:-1]:
+        assert m == len(node.tokens)
+
+
+@settings(**SETTINGS)
+@given(keys=_KEYS, page_size=st.integers(min_value=1, max_value=5))
+def test_insert_then_match_covers_whole_key(keys, page_size):
+    """After inserting a key, matching it back covers every token, and
+    re-inserting creates nothing new (full dedup of registered prefixes)."""
+    ix = RadixPageIndex(page_size)
+    for k in keys:
+        _insert(ix, k)
+    for k in keys:
+        assert _matched_tokens(ix.match(k)) == k
+        assert _insert(ix, k) == []
+
+
+@settings(**SETTINGS)
+@given(keys=_KEYS, page_size=st.integers(min_value=1, max_value=5))
+def test_pages_are_never_mutated(keys, page_size):
+    """Registered page rows are immutable through any later inserts and
+    matches — divergence creates siblings, never rewrites (the COW
+    contract's index half)."""
+    ix = RadixPageIndex(page_size)
+    snapshots = []
+    for k in keys:
+        for node in _insert(ix, k):
+            snapshots.append((node, node.tokens,
+                              node.rows["rows"].copy()))
+        for probe in keys:
+            ix.match(probe)
+    for node, toks, rows in snapshots:
+        assert node.tokens == toks
+        np.testing.assert_array_equal(node.rows["rows"], rows)
+
+
+# -- refcount invariants -----------------------------------------------------
+
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["insert", "lease", "release", "evict",
+                               "spill"]),
+              _KEY),
+    min_size=1, max_size=30)
+
+
+@settings(**SETTINGS)
+@given(ops=_OPS, page_size=st.integers(min_value=1, max_value=4))
+def test_refcounts_never_negative_never_leaked(ops, page_size):
+    """Random insert/lease/release/evict/spill interleavings: refcounts
+    match a model exactly, leased pages are never evicted or spilled, and
+    releasing every outstanding lease returns every page to refs == 0 (no
+    leaked or lost references)."""
+    ix = RadixPageIndex(page_size)
+    outstanding: list[list] = []            # model: one entry per live lease
+
+    def spill(rows):
+        return rows                          # host tier: same fake pytree
+
+    for kind, key in ops:
+        if kind == "insert":
+            _insert(ix, key)
+        elif kind == "lease":
+            matched = ix.match(key)
+            nodes = [n for n, _ in matched]
+            ix.lease(nodes)
+            outstanding.append(nodes)
+        elif kind == "release" and outstanding:
+            ix.release(outstanding.pop())
+        elif kind == "evict":
+            victim = ix.evict_lru()
+            if victim is not None:
+                assert victim.refs == 0 and not victim.children
+        elif kind == "spill":
+            victim = ix.spill_lru(spill)
+            if victim is not None:
+                assert victim.refs == 0
+                assert not victim.on_device and victim.host_rows is not None
+        # Global invariant after every op:
+        model = {}
+        for nodes in outstanding:
+            for n in nodes:
+                model[id(n)] = model.get(id(n), 0) + 1
+        for n in ix.nodes():
+            assert n.refs == model.get(id(n), 0) >= 0
+
+    for nodes in outstanding:
+        ix.release(nodes)
+    assert all(n.refs == 0 for n in ix.nodes())
+    # One extra release must raise, not underflow.
+    leased = [n for n in ix.nodes()]
+    if leased:
+        with pytest.raises(PageLeaseError):
+            ix.release([leased[0]])
+
+
+@settings(**SETTINGS)
+@given(keys=_KEYS, page_size=st.integers(min_value=1, max_value=4))
+def test_evict_drains_everything_unreferenced(keys, page_size):
+    """With no leases, repeated LRU eviction drains the whole tree (leaves
+    first — an interior page is only evictable once its children went)."""
+    ix = RadixPageIndex(page_size)
+    for k in keys:
+        _insert(ix, k)
+    evicted = 0
+    while ix.evict_lru() is not None:
+        evicted += 1
+    assert ix.n_pages == 0
+    assert evicted >= len(set(keys)) > 0 or ix.n_pages == 0
+
+
+@settings(**SETTINGS)
+@given(keys=_KEYS, page_size=st.integers(min_value=1, max_value=4))
+def test_spilled_pages_stay_matchable(keys, page_size):
+    """Host-migrating every unreferenced page changes no match result."""
+    ix = RadixPageIndex(page_size)
+    for k in keys:
+        _insert(ix, k)
+    want = {k: _matched_tokens(ix.match(k)) for k in keys}
+    while ix.spill_lru(lambda rows: rows) is not None:
+        pass
+    assert all(not n.on_device for n in ix.nodes())
+    for k in keys:
+        assert _matched_tokens(ix.match(k)) == want[k]
+
+
+# -- snapshot tier -----------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(keys=_KEYS, probe=_KEY)
+def test_snapshot_match_is_longest_strict_prefix(keys, probe):
+    """The snapshot index returns the longest registered key that strictly
+    prefixes the probe in the same cache class — or nothing."""
+    ix = SnapshotPrefixIndex()
+    for k in keys:
+        ix.insert(k, 32, {"cache": np.asarray(k, np.int64)})
+        ix.insert(k, 64, {"cache": np.asarray(k, np.int64)})
+    got = ix.match(probe, 32)
+    want = [k for k in set(keys)
+            if len(k) < len(probe) and probe[:len(k)] == k]
+    if not want:
+        assert got is None
+    else:
+        assert got.key == max(want, key=len)
+        assert got.cache_len == 32
+
+
+@settings(**SETTINGS)
+@given(keys=_KEYS)
+def test_snapshot_refcounts_and_eviction(keys):
+    ix = SnapshotPrefixIndex()
+    for k in keys:
+        ix.insert(k, 16, {"cache": np.asarray(k, np.int64)})
+    snaps = ix.nodes()
+    ix.lease(snaps)
+    assert ix.evict_lru() is None            # everything pinned
+    ix.release(snaps)
+    with pytest.raises(PageLeaseError):
+        ix.release([snaps[0]])
+    while ix.evict_lru() is not None:
+        pass
+    assert ix.n_pages == 0

@@ -1,0 +1,381 @@
+"""Shared-prefix cache reuse (serving/paging.py): greedy warm-vs-cold
+token-identity per cache architecture across admission modes (chunked
+scheduler, engine-level adoption, speculative, preempt/resume), COW and MoE
+chunk-alignment semantics, page budgets (LRU eviction + proactive host
+migration), lease hygiene, and quantized-page residency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import (CHUNKED_ARCHS, assert_tokens_identical, fp_engine,
+                      greedy_continue, prompt_ids,
+                      prompt_list as _prompt_list)
+
+from repro.models import lm
+from repro.serving import (GenerationConfig, PrefixCache, Request,
+                           RequestScheduler, SpeculativeConfig)
+from repro.serving.paging import PageLeaseError, RadixPageIndex, token_key
+
+
+def _run_sched(arch, prompts, *, prefix_cache, gen=None, chunk_size=8,
+               n_slots=2, cache_len=48, **kw):
+    """Drain ``prompts`` through a fresh scheduler; {uid: tokens} + sched."""
+    engine = fp_engine(arch)
+    gen = gen or GenerationConfig(max_new_tokens=6)
+    sched = RequestScheduler(engine, n_slots=n_slots, cache_len=cache_len,
+                             gen=gen, chunk_size=chunk_size,
+                             prefix_cache=prefix_cache, **kw)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=i, prompt=p))
+    out = sched.run()
+    return {u: f.tokens for u, f in out.items()}, sched
+
+
+def _shared_prompts(arch, n_ext=3, shared=16, ext=8):
+    """The repeated-system-prompt shape: the shared prefix alone (so the
+    snapshot tier has an exact boundary to register), then extensions."""
+    engine = fp_engine(arch)
+    base = _prompt_list(engine, shared, seed=3)
+    return [base] + [base + _prompt_list(engine, ext, seed=10 + i)
+                     for i in range(n_ext)]
+
+
+# -- warm vs cold greedy identity, per cache arch ----------------------------
+
+
+def test_warm_vs_cold_identity_chunked(cache_arch):
+    """THE contract: prefix adoption changes nothing the user can see.
+    Every cache arch — paged (dense/MoE) or snapshot (ring/recurrent) —
+    yields greedy tokens identical to a cold-start scheduler, while
+    actually hitting the prefix index."""
+    prompts = _shared_prompts(cache_arch)
+    cold, _ = _run_sched(cache_arch, prompts, prefix_cache=False)
+    warm, sched = _run_sched(cache_arch, prompts, prefix_cache=True)
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid],
+                                f"{cache_arch} uid {uid} warm != cold")
+    st = sched.pool.prefix.stats
+    assert st["prefix_hits"] >= 2
+    assert st["prefix_hit_tokens"] >= 2 * 8
+    assert sched.pool.prefix.leased_slots == 0       # all leases dropped
+
+
+def test_warm_vs_cold_identity_speculative(cache_arch):
+    """Adoption composes with the scheduler's speculative decode path
+    (ngram drafter, per-lane verify + exact rollback)."""
+    gen = GenerationConfig(max_new_tokens=6,
+                           speculative=SpeculativeConfig(k=2))
+    prompts = _shared_prompts(cache_arch)
+    cold, _ = _run_sched(cache_arch, prompts, prefix_cache=False, gen=gen)
+    warm, sched = _run_sched(cache_arch, prompts, prefix_cache=True, gen=gen)
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid],
+                                f"{cache_arch} uid {uid} spec warm != cold")
+    assert sched.pool.prefix.stats["prefix_hits"] >= 2
+
+
+def test_warm_vs_cold_identity_preempt_resume(cache_arch):
+    """Adoption composes with host-spill preemption: a high-priority burst
+    bumps residents to the host tier mid-decode; outputs still match the
+    cold (also-preempting) run, and cancelled/retired leases never leak."""
+    prompts = _shared_prompts(cache_arch, n_ext=3)
+
+    def run(prefix_cache):
+        engine = fp_engine(cache_arch)
+        sched = RequestScheduler(engine, n_slots=2, cache_len=48,
+                                 gen=GenerationConfig(max_new_tokens=6),
+                                 chunk_size=8, host_spill=True,
+                                 prefix_cache=prefix_cache)
+        sched.submit(Request(uid=0, prompt=prompts[0]))
+        sched.submit(Request(uid=1, prompt=prompts[1]))
+        sched.submit(Request(uid=2, prompt=prompts[2]))
+        for _ in range(6):
+            sched.step()
+        sched.submit(Request(uid=3, prompt=prompts[3]), priority=5)
+        out = sched.run()
+        return {u: f.tokens for u, f in out.items()}, sched
+
+    cold, _ = run(False)
+    warm, sched = run(True)
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid],
+                                f"{cache_arch} uid {uid} preempt warm != cold")
+    assert sched.stats["preempted"] >= 1
+    assert sched.pool.prefix.leased_slots == 0
+
+
+# -- engine-level adoption (no scheduler) ------------------------------------
+
+
+@pytest.mark.parametrize("arch", CHUNKED_ARCHS)
+def test_engine_adopted_prefill_matches_cold(arch):
+    """`ChunkedPrefill(start_offset=p, initial_cache=...)` over a
+    `PrefixCache`-assembled warm prefix continues exactly where a cold
+    chunked prefill of the same prompt would be (greedy continuation
+    identical) — the engine-level seam, isolated from scheduler policy."""
+    engine = fp_engine(arch)
+    clen = 48
+    donor = _prompt_list(engine, 16, seed=3)
+    query = donor + _prompt_list(engine, 9, seed=11)
+
+    _, donor_cache = engine.prefill_chunked(
+        jnp.asarray([donor], jnp.int32), cache_len=clen, chunk_size=8)
+    pc = PrefixCache(engine.cfg, jnp.float32, enabled=True, page_size=4)
+    pc.register(donor, donor_cache, clen)
+
+    p, warm = pc.lookup(query, clen, slot=0, chunk_size=8)
+    assert p == len(donor)
+    cp = engine.begin_chunked_prefill(
+        jnp.asarray([query], jnp.int32), cache_len=clen, chunk_size=8,
+        initial_cache=warm, start_offset=p)
+    assert sum(cp.schedule) == len(query) - p
+    while not cp.done:
+        cp.advance()
+
+    logits_cold, cache_cold = engine.prefill_chunked(
+        jnp.asarray([query], jnp.int32), cache_len=clen, chunk_size=8)
+    assert_tokens_identical(
+        greedy_continue(engine, cp.logits, cp.cache, 6),
+        greedy_continue(engine, logits_cold, cache_cold, 6),
+        f"{arch}: adopted prefill diverged from cold")
+
+
+def test_chunked_prefill_offset_validation():
+    engine = fp_engine("qwen3-8b")
+    toks = prompt_ids(engine, 8)
+    with pytest.raises(ValueError, match="start_offset"):
+        engine.begin_chunked_prefill(toks, cache_len=16, start_offset=8)
+    with pytest.raises(ValueError, match="initial_cache"):
+        engine.begin_chunked_prefill(toks, cache_len=16, start_offset=4)
+
+
+# -- COW / alignment semantics ----------------------------------------------
+
+
+def test_unaligned_adoption_cow_never_mutates_shared_pages():
+    """An adoption boundary inside a page slices (copies) the tail page —
+    the COW event — and the donor's registered pages are bit-identical
+    afterwards; the adopter's output still matches a cold run."""
+    arch = "qwen3-8b"
+    engine = fp_engine(arch)
+    donor = _prompt_list(engine, 16, seed=3)
+    # Diverge 2 tokens into the donor's last page (page_size=4 below).
+    query = donor[:14] + _prompt_list(engine, 10, seed=12)
+    cold, _ = _run_sched(arch, [donor, query], prefix_cache=False)
+    warm, sched = _run_sched(arch, [donor, query], prefix_cache=True,
+                             prefix_page_size=4)
+
+    pc = sched.pool.prefix
+    st = pc.stats
+    assert st["cow_copies"] >= 1
+    assert st["prefix_hit_tokens"] == 14
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid], f"uid {uid}")
+    # The shared pages survived the COW un-mutated: a fresh lookup of the
+    # donor's own prompt still reconstructs the same rows the donor's
+    # prefill produced.
+    p, again = pc.lookup(donor, 48, slot=999, chunk_size=1)
+    assert p == len(donor) - 1
+    _, donor_cache = engine.prefill_chunked(
+        jnp.asarray([donor], jnp.int32), cache_len=48, chunk_size=8)
+    for g in lm.prefix_page_groups(engine.cfg):
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a[:, :, :p]), np.asarray(b[:, :, :p])),
+            again[g], donor_cache[g])
+    pc.release(999)
+    assert pc.leased_slots == 0
+
+
+def test_moe_adoption_is_chunk_aligned():
+    """MoE expert-capacity routing is per-dispatch: adoption boundaries
+    must land on chunk boundaries so the suffix's dispatches are the ones
+    the cold run compiled.  A 13-token shared prefix under chunk_size=8
+    floors to 8 adopted tokens."""
+    arch = "olmoe-1b-7b"
+    engine = fp_engine(arch)
+    donor = _prompt_list(engine, 13, seed=3)
+    query = donor + _prompt_list(engine, 8, seed=11)
+    cold, _ = _run_sched(arch, [donor, query], prefix_cache=False)
+    warm, sched = _run_sched(arch, [donor, query], prefix_cache=True,
+                             prefix_page_size=4)
+    st = sched.pool.prefix.stats
+    assert st["prefix_hits"] == 1 and st["prefix_hit_tokens"] == 8
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid], f"uid {uid}")
+
+
+def test_full_prompt_repeat_capped_at_last_token():
+    """An exact repeat adopts len-1 tokens (one suffix token must still run
+    so admission produces last-token logits) and stays identical.  page_size
+    8 so the 15-token hit clears the one-full-page adoption floor."""
+    arch = "qwen3-8b"
+    prompt = _prompt_list(fp_engine(arch), 16, seed=3)
+    cold, _ = _run_sched(arch, [prompt, prompt], prefix_cache=False)
+    warm, sched = _run_sched(arch, [prompt, prompt], prefix_cache=True,
+                             prefix_page_size=8)
+    assert sched.pool.prefix.stats["prefix_hit_tokens"] == len(prompt) - 1
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid], f"uid {uid}")
+
+
+def test_sub_page_hit_is_a_miss():
+    """An overlap shorter than one full page is not adopted: a tiny
+    adoption's assembly copy plus its odd-offset suffix ladder entry cost
+    more than the prefill it skips, so a chance few-token overlap between
+    unrelated prompts must stay a plain cold admission (no lease, no hit)."""
+    engine = fp_engine("qwen3-8b")
+    donor = _prompt_list(engine, 12, seed=3)
+    _, cache = engine.prefill_chunked(jnp.asarray([donor], jnp.int32),
+                                      cache_len=24, chunk_size=8)
+    pc = PrefixCache(engine.cfg, jnp.float32, enabled=True, page_size=8)
+    pc.register(donor, cache, 24)
+    query = donor[:4] + _prompt_list(engine, 8, seed=9)
+    p, warm = pc.lookup(query, 24, slot=0, chunk_size=1)
+    assert (p, warm) == (0, None)
+    assert pc.leased_slots == 0
+    assert pc.stats["prefix_lookups"] == 1 and pc.stats["prefix_hits"] == 0
+
+
+def test_divergent_prompts_build_siblings_and_stay_exact():
+    """Prompts diverging mid-page register sibling pages (no edge split);
+    each prompt's own lookup still reconstructs only its own rows."""
+    arch = "qwen3-8b"
+    engine = fp_engine(arch)
+    base = _prompt_list(engine, 10, seed=3)
+    a = base + _prompt_list(engine, 6, seed=21)
+    b = base + _prompt_list(engine, 6, seed=22)
+    cold, _ = _run_sched(arch, [a, b, a, b], prefix_cache=False)
+    warm, sched = _run_sched(arch, [a, b, a, b], prefix_cache=True,
+                             prefix_page_size=4)
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid], f"uid {uid}")
+    st = sched.pool.prefix.stats
+    assert st["prefix_hits"] >= 2       # the repeats hit their own prefixes
+
+
+# -- quantized page residency ------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["int8_tok", "mxint4_blk"])
+def test_quantized_pages_share_like_fp(fmt):
+    """Quantized cache residency pages share identically: encoded planes
+    slice on the cache axis like fp leaves, and warm greedy output matches
+    the cold quantized run token-for-token."""
+    arch = "qwen3-8b"
+    gen = GenerationConfig(max_new_tokens=6, cache_format=fmt)
+    prompts = _shared_prompts(arch, n_ext=2)
+    cold, _ = _run_sched(arch, prompts, prefix_cache=False, gen=gen)
+    warm, sched = _run_sched(arch, prompts, prefix_cache=True, gen=gen)
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid], f"{fmt} uid {uid}")
+    assert sched.pool.prefix.stats["prefix_hits"] >= 2
+
+
+# -- budgets: LRU eviction + proactive host migration ------------------------
+
+
+def test_page_budget_evicts_lru_unreferenced_only():
+    """`max_prefix_pages` bounds the index; eviction is LRU over
+    unreferenced leaves, and a fresh prompt still registers and hits."""
+    arch = "qwen3-8b"
+    engine = fp_engine(arch)
+    prompts = [_prompt_list(engine, 16, seed=s) for s in range(3, 8)]
+    _, sched = _run_sched(arch, prompts, prefix_cache=True,
+                          max_prefix_pages=2)
+    pc = sched.pool.prefix
+    assert pc.n_pages <= 2
+    assert pc.stats["page_evictions"] >= 1
+    assert all(n.refs == 0 for n in pc._index.nodes())
+
+
+def test_cold_pages_migrate_to_host_and_fetch_back():
+    """`device_prefix_pages` proactively spills cold unreferenced pages to
+    host DRAM (before capacity pressure); adoption fetches them back and
+    stays token-identical."""
+    arch = "qwen3-8b"
+    prompts = _shared_prompts(arch, n_ext=2)
+    cold, _ = _run_sched(arch, prompts, prefix_cache=False)
+    warm, sched = _run_sched(arch, prompts, prefix_cache=True,
+                             prefix_page_size=4, device_prefix_pages=0)
+    pc = sched.pool.prefix
+    st = pc.stats
+    assert st["page_spills"] >= 1 and st["page_fetches"] >= 1
+    assert st["prefix_hits"] >= 2
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid], f"uid {uid}")
+    sched.pool.prefix_maintain()
+    assert pc.device_resident_pages == 0
+    assert pc.host_pages == pc.n_pages
+
+
+def test_snapshot_tier_budgets():
+    """Budgets work on the snapshot tier too: eviction and host migration
+    count snapshots, and adoption after migration stays exact."""
+    arch = "retnet-1.3b"
+    prompts = _shared_prompts(arch, n_ext=2)
+    cold, _ = _run_sched(arch, prompts, prefix_cache=False)
+    warm, sched = _run_sched(arch, prompts, prefix_cache=True,
+                             device_prefix_pages=0)
+    st = sched.pool.prefix.stats
+    assert st["page_spills"] >= 1 and st["prefix_hits"] >= 2
+    for uid in cold:
+        assert_tokens_identical(warm[uid], cold[uid], f"uid {uid}")
+
+
+# -- observability / hygiene -------------------------------------------------
+
+
+def test_prefix_metrics_and_gauges_surface():
+    arch = "qwen3-8b"
+    prompts = _shared_prompts(arch, n_ext=2)
+    _, sched = _run_sched(arch, prompts, prefix_cache=True)
+    snap = sched.obs.metrics.snapshot()
+    assert snap["counters"]["pool.prefix_lookups"] == len(prompts)
+    assert snap["counters"]["pool.prefix_hits"] >= 2
+    assert (snap["gauges"]["pool.pages_free"]["value"]
+            == sched.pool.prefix.n_pages)
+    assert snap["gauges"]["pool.prefix_bytes"]["value"] > 0
+
+
+def test_prefix_cache_default_off():
+    """Opt-in: a scheduler built without ``prefix_cache`` never touches the
+    index (lookups included — the disabled facade is inert)."""
+    arch = "qwen3-8b"
+    prompts = _shared_prompts(arch, n_ext=1)
+    _, sched = _run_sched(arch, prompts, prefix_cache=False)
+    pc = sched.pool.prefix
+    assert not pc.enabled and pc.n_pages == 0
+    assert pc.stats["prefix_lookups"] == 0
+
+
+def test_cancel_mid_admission_releases_leases():
+    """Cancelling the in-flight admission drops its page leases (the pool
+    release path), so the pages stay evictable."""
+    arch = "qwen3-8b"
+    engine = fp_engine(arch)
+    donor = _prompt_list(engine, 16, seed=3)
+    query = donor + _prompt_list(engine, 8, seed=11)
+    sched = RequestScheduler(engine, n_slots=2, cache_len=48,
+                             gen=GenerationConfig(max_new_tokens=4),
+                             chunk_size=8, prefix_cache=True)
+    sched.submit(Request(uid=0, prompt=donor))
+    out = sched.run()
+    assert 0 in out
+    sched.submit(Request(uid=1, prompt=query))
+    sched.step()                       # admission in flight, lease held
+    assert sched.pool.prefix.leased_slots == 1
+    sched.cancel(1)
+    assert sched.pool.prefix.leased_slots == 0
+    assert all(n.refs == 0 for n in sched.pool.prefix._index.nodes())
+
+
+def test_lease_release_misuse_raises():
+    ix = RadixPageIndex(page_size=2)
+    created = ix.insert(token_key([1, 2, 3]), lambda a, b: {"x": None},
+                        nbytes_of=lambda r: 0)
+    ix.lease(created)
+    ix.release(created)
+    with pytest.raises(PageLeaseError):
+        ix.release(created)
