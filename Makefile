@@ -4,8 +4,8 @@
 PY ?= python
 
 .PHONY: test test-fast install serve-demo smoke-host-spill smoke-prefix \
-	smoke-sharded trace-demo bench-serving bench-kernels lint-invariants \
-	audit-program
+	smoke-frontend smoke-sharded trace-demo bench-serving bench-kernels \
+	lint-invariants audit-program
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -35,6 +35,16 @@ smoke-prefix:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
 		--arch qwen3-8b --reduced --scenario LISO --scale 0.08 \
 		--requests 5 --slots 2 --chunk-size 8 --prefix-cache
+
+# Open-loop front-end smoke on the deterministic virtual clock: 8 bursty
+# arrivals through the asyncio frontend's SLO-aware admission — wall-clock
+# free, and `serve.py` itself asserts the contract (nonzero goodput, zero
+# unexplained sheds) before exiting 0 (CI smoke leg).
+smoke-frontend:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve \
+		--arch retnet-1.3b --reduced --scenario SILO --scale 0.02 \
+		--frontend --virtual-clock --requests 8 --rate 40 --slots 2 \
+		--chunk-size 8 --arrival bursty
 
 # Tiny multi-chip smoke: a 2x2 virtual-device (data, model) mesh serving
 # 3 requests through one device lane with the host-spill tier — a sharded

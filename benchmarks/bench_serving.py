@@ -44,6 +44,16 @@ successive PRs accumulate a perf trajectory instead of overwriting it:
                           TTFT; the 100% leg also replays cold
                           (prefix_cache=False) to record the TTFT delta and
                           assert greedy outputs stay token-identical
+    goodput_under_load.*  the open-loop front-end leg: seeded Poisson
+                          arrivals through `ServingFrontend`'s SLO-aware
+                          admission at >= 3 offered rates (multiples of a
+                          calibrated closed-loop service rate, so the sweep
+                          spans under- to over-load on any host) — per rate
+                          the goodput (requests meeting the TTFT SLO per
+                          second), shed rate, unexplained-shed count, and
+                          the standard `latency` block; plus a greedy
+                          token-identity check of the front end vs a direct
+                          `RequestScheduler.run()` on the same request set
     latency.*             per-leg SLO block from the `repro.obs` registry:
                           p50/p95/p99 TTFT and inter-token latency, plus
                           queue-depth / cache-occupancy gauge summaries on
@@ -68,8 +78,11 @@ import jax.numpy as jnp
 
 from benchmarks.roofline import decode_step_model
 from repro.obs import Observability
-from repro.serving import (EngineSpec, GenerationConfig, InferenceEngine,
-                           Request, RequestScheduler, SpeculativeConfig)
+from repro.serving import (EngineSpec, FrontendConfig, GenerationConfig,
+                           InferenceEngine, LengthMix, MonotonicClock,
+                           PoissonArrivals, Request, RequestScheduler,
+                           ServingFrontend, SpeculativeConfig, Workload,
+                           run_open_loop)
 
 N_REQUESTS = 12
 PROMPT_LENGTHS = [6, 11, 23, 37, 48, 75]     # mixed LISO/SILO-ish, 6 distinct
@@ -443,6 +456,154 @@ def run_prefix_reuse() -> dict:
     return legs
 
 
+# Goodput-under-load leg: the open-loop front end on the REAL clock (wall
+# time is the point of this leg; the virtual clock belongs to tests and the
+# CI smoke).  Offered rates are multiples of a calibrated closed-loop
+# service rate, so the sweep spans under- to over-load regardless of how
+# fast the host is.
+GOODPUT_ARCH = "retnet-1.3b"
+GOODPUT_REQUESTS = 8
+GOODPUT_PROMPT_MIN = 6
+GOODPUT_PROMPT_MAX = 24
+GOODPUT_NEW = 8
+GOODPUT_LANES = 2
+GOODPUT_CHUNK = 8
+GOODPUT_RATE_MULTS = (0.5, 1.5, 4.0)
+
+
+def run_goodput_under_load() -> dict:
+    """Open-loop goodput sweep through `ServingFrontend`.
+
+    Calibrates a closed-loop drain first (also the compile warmup shape),
+    derives the TTFT SLO target and the base offered rate from it, then
+    sweeps `GOODPUT_RATE_MULTS` x base with seeded Poisson arrivals — each
+    leg on a fresh scheduler warmed and registry-reset before measurement.
+    A final check drives the same request set through the front end and a
+    direct ``RequestScheduler.run()`` and records greedy token identity.
+    """
+    engine = InferenceEngine.from_config(GOODPUT_ARCH, EngineSpec(reduced=True))
+    gen = GenerationConfig(max_new_tokens=GOODPUT_NEW)
+    mix = LengthMix(prompt_min=GOODPUT_PROMPT_MIN,
+                    prompt_max=GOODPUT_PROMPT_MAX,
+                    new_min=GOODPUT_NEW, new_max=GOODPUT_NEW)
+    clen = GOODPUT_PROMPT_MAX + GOODPUT_NEW
+    # One request-set shape for everything: calibration, warmups, the sweep
+    # (per-leg arrival times differ; sizes/prompts are re-derived per seed).
+    warm_wl = Workload(arrivals=PoissonArrivals(1.0), lengths=mix,
+                       n_requests=GOODPUT_REQUESTS,
+                       vocab_size=engine.cfg.vocab_size, seed=29)
+
+    def make_sched(obs, clock):
+        return RequestScheduler(engine, classes=[(GOODPUT_LANES, clen)],
+                                gen=gen, chunk_size=GOODPUT_CHUNK,
+                                key=jax.random.key(0), obs=obs,
+                                clock=clock.now)
+
+    def closed_drain(sched, uid_base=5000):
+        for i, r in enumerate(warm_wl.requests()):
+            sched.submit(Request(uid=uid_base + i, prompt=list(r.prompt),
+                                 max_new_tokens=r.max_new_tokens))
+        return sched.run()
+
+    # Calibration: a warmed closed-loop drain of the request-set shape.
+    obs = Observability()
+    clock = MonotonicClock()
+    sched = make_sched(obs, clock)
+    closed_drain(sched, uid_base=5000)            # trace/compile warmup
+    obs.metrics.reset()
+    t0 = time.perf_counter()
+    closed_drain(sched, uid_base=6000)
+    calib_wall = max(time.perf_counter() - t0, 1e-6)
+    base_rate = GOODPUT_REQUESTS / calib_wall
+    calib = latency_summary(obs, "sched")
+    # SLO target: 2x the calibrated closed-loop p50 TTFT (which already
+    # includes queueing GOODPUT_REQUESTS over GOODPUT_LANES lanes) — met
+    # comfortably under-load, breached under hard overload.
+    slo_s = max(2.0 * calib["ttft_s"].get("p50", 0.05), 0.02)
+
+    cfg = FrontendConfig(ttft_slo_s=slo_s, slo_window_s=max(4 * calib_wall,
+                                                            1.0),
+                         min_slo_samples=4, guaranteed_admit=GOODPUT_LANES)
+    rates = []
+    for mult in GOODPUT_RATE_MULTS:
+        rate = base_rate * mult
+        leg_obs = Observability()
+        leg_clock = MonotonicClock()
+        leg_sched = make_sched(leg_obs, leg_clock)
+        closed_drain(leg_sched, uid_base=7000)    # warm this instance's jits
+        leg_obs.metrics.reset()
+        frontend = ServingFrontend(leg_sched, config=cfg, clock=leg_clock)
+        workload = Workload(arrivals=PoissonArrivals(rate), lengths=mix,
+                            n_requests=GOODPUT_REQUESTS,
+                            vocab_size=engine.cfg.vocab_size, seed=13)
+
+        async def drive():
+            async with frontend:
+                return await run_open_loop(frontend, workload)
+
+        report = leg_clock.run(drive())
+        rates.append({
+            "rate_mult": mult,
+            **{k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in report.to_dict().items()},
+            "latency": latency_summary(leg_obs, "sched"),
+        })
+
+    # Greedy token identity: the same request set through the front end
+    # (admission policy off — identity needs every request admitted,
+    # arrivals paced open-loop so the interleaving differs from closed
+    # loop) vs a direct `RequestScheduler.run()` with the same key.
+    import asyncio
+
+    fe_sched = make_sched(Observability(), MonotonicClock())
+    fe_clock = MonotonicClock(fe_sched._now)
+    frontend = ServingFrontend(
+        fe_sched, config=FrontendConfig(ttft_slo_s=slo_s, shed_action="off"),
+        clock=fe_clock)
+    id_wl = Workload(arrivals=PoissonArrivals(base_rate), lengths=mix,
+                     n_requests=GOODPUT_REQUESTS,
+                     vocab_size=engine.cfg.vocab_size, seed=17)
+    id_requests = id_wl.requests()
+
+    async def drive_identity() -> dict[int, list[int]]:
+        tokens: dict[int, list[int]] = {}
+
+        async def consume(stream):
+            tokens[stream.uid] = [tok async for tok in stream]
+
+        async with frontend:
+            tasks = []
+            t0 = fe_clock.now()
+            for r in id_requests:
+                await fe_clock.sleep(t0 + r.at_s - fe_clock.now())
+                stream = frontend.submit(r.prompt, uid=r.uid,
+                                         max_new_tokens=r.max_new_tokens)
+                tasks.append(asyncio.ensure_future(consume(stream)))
+            await asyncio.gather(*tasks)
+        return tokens
+
+    fe_tokens = fe_clock.run(drive_identity())
+    direct = make_sched(Observability(), MonotonicClock())
+    for r in id_requests:
+        direct.submit(Request(uid=r.uid, prompt=list(r.prompt),
+                              max_new_tokens=r.max_new_tokens))
+    direct_results = direct.run()
+    identical = (set(fe_tokens) == set(direct_results) and all(
+        fe_tokens[uid] == direct_results[uid].tokens
+        for uid in direct_results))
+
+    return {
+        "arch": engine.cfg.name,
+        "n_requests": GOODPUT_REQUESTS,
+        "device_lanes": GOODPUT_LANES,
+        "arrival": "poisson",
+        "calibrated_service_rps": round(base_rate, 3),
+        "ttft_slo_s": round(slo_s, 5),
+        "token_identical_vs_run": identical,
+        "rates": rates,
+    }
+
+
 SHARDED_MESH = "2,2"
 SHARDED_DEVICES = 4
 SHARDED_PROMPT = 16
@@ -521,6 +682,7 @@ def run(out_path: str = "BENCH_serving.json") -> dict:
     record["quantized_decode"] = run_quantized_decode()
     record["sharded"] = run_sharded()
     record["prefix_reuse"] = run_prefix_reuse()
+    record["goodput_under_load"] = run_goodput_under_load()
 
     # Append to the trajectory (older single-record files become entry 0).
     history: list = []

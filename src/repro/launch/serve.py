@@ -25,6 +25,13 @@ the repeated-system-prompt workload it targets: every request opens with one
 shared prefix, later admissions adopt it from the page index and prefill
 only their unique tail (hit stats printed at the end).
 
+`--frontend` switches to the open-loop asyncio front end: seeded Poisson or
+bursty arrivals (`--rate`, `--arrival`) submitted through SLO-aware
+admission (`--ttft-slo`), goodput and shed rate reported at the end.
+`--virtual-clock` runs it on deterministic virtual time — wall-clock-free —
+and asserts the CI smoke contract (`make smoke-frontend`): nonzero goodput,
+zero unexplained sheds.
+
 `--trace FILE` records the full request lifecycle (submit → admit → prefill
 chunks → first token → decode → preempt/resume → finish) through `repro.obs`
 and writes Chrome-trace-event JSON loadable in Perfetto; `--metrics FILE`
@@ -170,6 +177,69 @@ def _run_scheduler_demo(engine: InferenceEngine, args,
           f"{total / dt:.2f}")
 
 
+def _run_frontend_demo(engine: InferenceEngine, args,
+                       n_in: int, n_out: int) -> None:
+    """Open-loop front-end demo: seeded arrivals (`--rate`, `--arrival`)
+    submitted through the asyncio `ServingFrontend` with SLO-aware admission
+    (`--ttft-slo`), reporting goodput / shed rate.  With `--virtual-clock`
+    the run is wall-clock-free and deterministic, and doubles as the CI
+    smoke contract: nonzero goodput, zero unexplained sheds."""
+    from repro.serving import (BurstyArrivals, FrontendConfig, LengthMix,
+                               MonotonicClock, PoissonArrivals,
+                               ServingFrontend, VirtualClock, Workload,
+                               run_open_loop)
+
+    cfg = engine.cfg
+    n_req = args.requests if args.requests > 0 else 8
+    clock = VirtualClock() if args.virtual_clock else MonotonicClock()
+    gen = GenerationConfig(
+        max_new_tokens=n_out,
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p))
+    mix = LengthMix(prompt_min=max(2, n_in // 4), prompt_max=n_in,
+                    new_min=max(2, n_out // 2), new_max=n_out)
+    sched = RequestScheduler(engine, classes=[(args.slots, n_in + n_out)],
+                             gen=gen, chunk_size=args.chunk_size,
+                             prefix_cache=args.prefix_cache,
+                             key=jax.random.key(2), obs=engine.obs,
+                             clock=clock.now)
+    frontend = ServingFrontend(
+        sched, config=FrontendConfig(ttft_slo_s=args.ttft_slo, journal=True),
+        clock=clock)
+    arrivals = (BurstyArrivals(args.rate) if args.arrival == "bursty"
+                else PoissonArrivals(args.rate))
+    workload = Workload(arrivals=arrivals, lengths=mix, n_requests=n_req,
+                        vocab_size=cfg.vocab_size, seed=4)
+
+    async def drive():
+        async with frontend:
+            return await run_open_loop(frontend, workload)
+
+    print(f"[serve] frontend: {n_req} open-loop requests, {args.arrival} "
+          f"arrivals at {args.rate:.1f} req/s, TTFT SLO {args.ttft_slo:.2f}s, "
+          f"{'virtual' if args.virtual_clock else 'monotonic'} clock")
+    report = clock.run(drive())
+    print(f"[serve] elapsed {report.elapsed_s:.3f}s"
+          f"{' (virtual)' if args.virtual_clock else ''}: "
+          f"{report.completed}/{report.n_requests} completed, "
+          f"{report.met_slo} met SLO -> goodput {report.goodput_rps:.2f} "
+          f"req/s, shed rate {report.shed_rate:.2f}")
+    ttft = report.to_dict().get("ttft")
+    if ttft:
+        print(f"[serve] TTFT p50/p95/p99: {ttft['p50']:.4f}/"
+              f"{ttft['p95']:.4f}/{ttft['p99']:.4f} s")
+    if args.virtual_clock:
+        # The smoke contract `make smoke-frontend` relies on.
+        if report.goodput_rps <= 0:
+            raise SystemExit("[serve] frontend smoke FAILED: zero goodput")
+        if report.sheds_unexplained:
+            raise SystemExit(f"[serve] frontend smoke FAILED: "
+                             f"{report.sheds_unexplained} unexplained sheds")
+        print(f"[serve] frontend smoke OK: goodput {report.goodput_rps:.2f} "
+              f"req/s, 0 unexplained sheds, {len(frontend.journal)} journal "
+              f"events")
+
+
 def _export_obs(obs: Observability, args) -> None:
     """Write the run's trace / metrics artifacts, when asked for."""
     if args.trace:
@@ -222,6 +292,24 @@ def main() -> None:
                          "later admissions adopt its cached pages and "
                          "prefill only their unique tail (hit stats "
                          "printed at the end)")
+    ap.add_argument("--frontend", action="store_true",
+                    help="open-loop asyncio front-end demo: seeded arrivals "
+                         "(--rate/--arrival) through SLO-aware admission "
+                         "(--ttft-slo), goodput + shed rate printed at the "
+                         "end; --requests sets the request count (default 8)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="frontend mode: offered load, requests/second")
+    ap.add_argument("--arrival", choices=["poisson", "bursty"],
+                    default="poisson",
+                    help="frontend mode: arrival process (bursty = 2-state "
+                         "Markov-modulated Poisson at the same mean rate)")
+    ap.add_argument("--ttft-slo", type=float, default=2.0,
+                    help="frontend mode: TTFT SLO target in seconds — the "
+                         "admission policy sheds while the windowed p99 "
+                         "breaches it")
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="frontend mode: run on deterministic virtual time "
+                         "(wall-clock-free; the CI smoke contract)")
     ap.add_argument("--oversubscribe", type=float, default=0.0,
                     help="scheduler mode: request-to-lane ratio — shrinks "
                          "the pool to ~requests/R device lanes so demand "
@@ -269,6 +357,9 @@ def main() -> None:
         obs.tracer = Tracer()
     engine = InferenceEngine.from_config(args.arch, spec, mesh=mesh, obs=obs)
     cfg = engine.cfg
+    if args.frontend:
+        _run_frontend_demo(engine, args, n_in, n_out)
+        return _export_obs(obs, args)
     if args.requests > 0:
         _run_scheduler_demo(engine, args, n_in, n_out)
         return _export_obs(obs, args)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Iterable, Iterator, MutableMapping, Sequence
 
 __all__ = ["Counter", "Gauge", "Histogram", "CounterView", "MetricsRegistry",
@@ -88,6 +89,12 @@ class Histogram:
     is *decimated*: every other retained sample is dropped and the keep-rate
     halves, so long runs degrade to a uniform subsample instead of
     unbounded memory.  count/sum/min/max stay exact regardless.
+
+    Every retained sample carries a timestamp (caller-supplied via
+    ``record(v, t=...)``, else ``time.monotonic()``), so consumers that need
+    *recent* tail behavior — the front end's SLO admission policy reads the
+    p99 of the last N seconds of TTFT, not the lifetime p99 — can ask for
+    ``percentile(q, window_s=..., now=...)`` over the windowed slice.
     """
 
     def __init__(self, name: str, max_samples: int = 65536):
@@ -100,10 +107,11 @@ class Histogram:
         self.min: float | None = None
         self.max: float | None = None
         self._samples: list[float] = []
+        self._times: list[float] = []   # kept in lockstep with _samples
         self._stride = 1          # record every _stride-th observation
         self._skip = 0
 
-    def record(self, v: float) -> None:
+    def record(self, v: float, t: float | None = None) -> None:
         v = float(v)
         self.count += 1
         self.total += v
@@ -114,8 +122,10 @@ class Histogram:
             return
         self._skip = self._stride - 1
         self._samples.append(v)
+        self._times.append(time.monotonic() if t is None else float(t))
         if len(self._samples) >= self.max_samples:
             self._samples = self._samples[::2]
+            self._times = self._times[::2]
             self._stride *= 2
 
     def reset(self) -> None:
@@ -126,6 +136,7 @@ class Histogram:
         self.min = None
         self.max = None
         self._samples = []
+        self._times = []
         self._stride = 1
         self._skip = 0
 
@@ -138,8 +149,32 @@ class Histogram:
         """The retained sample vector (exact until decimation kicks in)."""
         return list(self._samples)
 
-    def percentile(self, q: float) -> float:
-        return percentile(self._samples, q)
+    def window_samples(self, window_s: float, now: float) -> list[float]:
+        """Retained samples recorded at ``t >= now - window_s``.
+
+        ``now`` must come from the same timebase the samples were recorded
+        against (the scheduler's injected clock, or ``time.monotonic()`` for
+        untimed records) — mixing timebases silently empties or floods the
+        window, which is why `percentile` refuses a window without an
+        explicit ``now``.
+        """
+        if window_s <= 0.0:
+            raise ValueError(f"window_s must be > 0, got {window_s}")
+        cutoff = now - window_s
+        return [v for t, v in zip(self._times, self._samples) if t >= cutoff]
+
+    def percentile(self, q: float, *, window_s: float | None = None,
+                   now: float | None = None) -> float:
+        """Lifetime percentile, or — with ``window_s`` — the percentile over
+        samples recorded in the trailing window ending at ``now``.  Same
+        numpy-linear estimator either way; raises ``ValueError`` when the
+        window holds no samples (callers decide the no-evidence policy)."""
+        if window_s is None:
+            return percentile(self._samples, q)
+        if now is None:
+            raise ValueError("windowed percentile needs an explicit `now` "
+                             "from the recording timebase")
+        return percentile(self.window_samples(window_s, now), q)
 
     def summary(self) -> dict:
         """The block `bench_serving` embeds per metric: count, mean, and the

@@ -26,6 +26,15 @@ One import gives the whole serving surface:
     cold pages (paging.py).
   * `ChunkedPrefill` / `bucket_length` / `chunk_schedule` — the ladder-
     bucketed, chunked prompt-admission machinery (engine.py).
+  * `ServingFrontend` / `FrontendConfig` / `TokenStream` — the asyncio
+    open-loop front end: non-blocking `submit` -> per-request async token
+    stream, a stepper task owning the sequencer cycle, SLO-aware admission
+    (shed/deprioritize on windowed TTFT p99 breach) — all on an injectable
+    `Clock` (`MonotonicClock` live, `VirtualClock` for wall-clock-free
+    deterministic tests) (frontend.py, clock.py).
+  * `Workload` / `PoissonArrivals` / `BurstyArrivals` / `LengthMix` /
+    `run_open_loop` — seeded open-loop load generation and the
+    goodput-under-load driver (loadgen.py).
   * `ServeCell` / `build_serve` — typed sharding/shape plan for multi-chip
     deployments (cell.py; `runtime.serve_step` re-exports it).
     `InferenceEngine.from_config(mesh=...)` *executes* the plan: params
@@ -37,10 +46,16 @@ One import gives the whole serving surface:
 from repro.serving.cell import (ServeCell, build_serve,
                                 prefill_chunk_step_fn, serving_engine,
                                 verify_chunk_step_fn)
+from repro.serving.clock import Clock, MonotonicClock, VirtualClock
 from repro.serving.engine import (CacheCapacityError, ChunkedPrefill,
                                   EngineSpec, GenerationResult,
                                   InferenceEngine, bucket_length,
                                   chunk_schedule, pytree_nbytes)
+from repro.serving.frontend import (FrontendConfig, RequestShed,
+                                    SLOAdmissionPolicy, ServingFrontend,
+                                    TokenStream)
+from repro.serving.loadgen import (BurstyArrivals, GoodputReport, LengthMix,
+                                   PoissonArrivals, Workload, run_open_loop)
 from repro.serving.paging import (PageLeaseError, PrefixCache,
                                   RadixPageIndex, SnapshotPrefixIndex)
 from repro.serving.sampling import (GREEDY, GenerationConfig, SamplingParams,
@@ -51,14 +66,19 @@ from repro.serving.speculative import (Drafter, MTPDrafter, NgramDrafter,
                                        make_drafter, ngram_propose)
 
 __all__ = [
-    "CacheCapacityError", "CachePool", "ChunkedPrefill", "Drafter",
+    "BurstyArrivals",
+    "CacheCapacityError", "CachePool", "ChunkedPrefill", "Clock", "Drafter",
     "EngineSpec",
-    "FinishedRequest", "GenerationConfig", "GenerationResult", "GREEDY",
-    "InferenceEngine", "MTPDrafter", "NgramDrafter", "PageLeaseError",
-    "PrefixCache", "RadixPageIndex", "Request",
-    "RequestScheduler", "SamplingParams", "ServeCell", "SnapshotPrefixIndex",
-    "SpeculativeConfig",
+    "FinishedRequest", "FrontendConfig", "GenerationConfig",
+    "GenerationResult", "GoodputReport", "GREEDY",
+    "InferenceEngine", "LengthMix", "MonotonicClock", "MTPDrafter",
+    "NgramDrafter", "PageLeaseError",
+    "PoissonArrivals", "PrefixCache", "RadixPageIndex", "Request",
+    "RequestScheduler", "RequestShed", "SamplingParams", "ServeCell",
+    "ServingFrontend", "SLOAdmissionPolicy", "SnapshotPrefixIndex",
+    "SpeculativeConfig", "TokenStream", "VirtualClock", "Workload",
     "bucket_length", "build_serve", "chunk_schedule", "make_drafter",
-    "ngram_propose", "prefill_chunk_step_fn", "pytree_nbytes", "sample",
+    "ngram_propose", "prefill_chunk_step_fn", "pytree_nbytes",
+    "run_open_loop", "sample",
     "serving_engine", "verify_chunk_step_fn",
 ]

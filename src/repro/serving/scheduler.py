@@ -460,9 +460,12 @@ class RequestScheduler:
     a stop token or their token budget.  ``run()`` drains the queue.
 
     ``on_token(uid, token)`` streams tokens as they are emitted;
+    ``on_finish(finished)`` fires once per terminal `FinishedRequest`
+    (retire, in-flight cancel) — the async front end's completion hook;
     ``cancel(uid)`` drops a queued request, aborts an in-flight admission, or
     retires an active slot (its partial output is returned with
-    ``cancelled=True``).
+    ``cancelled=True``).  ``clock`` injects the timebase for every latency
+    stamp (virtual time in tests; monotonic by default).
 
     Admission order is FIFO with skip: a request whose smallest fitting class
     is momentarily full does not block later requests that fit elsewhere.
@@ -490,12 +493,20 @@ class RequestScheduler:
                  host_spill: bool = False,
                  cache_dtype=None,
                  on_token: Callable[[int, int], None] | None = None,
+                 on_finish: Callable[[FinishedRequest], None] | None = None,
                  obs: Observability | None = None,
+                 clock: Callable[[], float] | None = None,
                  prefix_cache: bool = False, prefix_page_size: int = 16,
                  max_prefix_pages: int | None = None,
                  device_prefix_pages: int | None = None):
         self.engine = engine
         self.gen = gen
+        # The timebase for every latency stamp (submit, queue-wait, TTFT,
+        # inter-token, request latency).  Injectable so the async front end
+        # can run the whole serving loop on a virtual clock in tests; real
+        # deployments keep the monotonic default.  Histogram records carry
+        # `t=self._now()` so windowed percentiles share this timebase.
+        self._now = clock if clock is not None else time.perf_counter
         # Each scheduler defaults to its OWN bundle (schedulers built over a
         # shared engine must not accumulate into one registry); pass the
         # engine's bundle explicitly (`obs=engine.obs`) to unify them, as
@@ -523,6 +534,7 @@ class RequestScheduler:
         self.chunk_size = chunk_size
         self.host_spill = host_spill
         self.on_token = on_token
+        self.on_finish = on_finish
         self._class_nbytes: dict[int, int] = {}   # clen -> lane bytes memo
 
         self._queue: list[Request] = []
@@ -657,7 +669,7 @@ class RequestScheduler:
         while i > 0 and self._queue[i - 1].priority < request.priority:
             i -= 1
         self._queue.insert(i, request)
-        self._t_submit[request.uid] = time.perf_counter()
+        self._t_submit[request.uid] = self._now()
         rt = request_track(request.uid)
         self._tr.begin("request", rt, prompt_len=len(request.prompt),
                        priority=request.priority)
@@ -693,14 +705,27 @@ class RequestScheduler:
                 self._tr.end("request", rt)
                 return True
         if self._admitting is not None and self._admitting["req"].uid == uid:
-            self.pool.release(self._admitting["slot"])
+            # Abort mid-chunked-prefill.  Clear `_admitting` *before* the
+            # release and record a FinishedRequest like every other in-flight
+            # cancel path: release drops the slot's lane and any prefix-page
+            # leases the partial prefill adopted, and `_finish`'s on_finish
+            # callback may re-enter the scheduler — it must observe the
+            # admission already gone, and a front end awaiting this uid needs
+            # the terminal record (previously this path recorded nothing and
+            # `run()` silently forgot the request).
+            adm = self._admitting
             self._admitting = None
+            clen = self.pool.slot_len(adm["slot"])
+            self.pool.release(adm["slot"])
             self.stats["cancelled"] += 1
             self._t_submit.pop(uid, None)
             rt = request_track(uid)
             self._tr.end("admit", rt)
             self._tr.instant("cancel", rt)
             self._tr.end("request", rt)
+            self._finish(FinishedRequest(
+                uid=uid, prompt_len=len(adm["req"].prompt), tokens=[],
+                slot=adm["slot"], cache_len=clen, cancelled=True))
             return True
         for slot, st in self._active.items():
             if st["req"].uid == uid:
@@ -712,17 +737,17 @@ class RequestScheduler:
                 self._preempted.remove(entry)
                 clen = self.pool.slot_len(entry["slot"])
                 self.pool.release(entry["slot"])   # drops the host copy
-                self._finished.append(FinishedRequest(
-                    uid=uid, prompt_len=len(entry["req"].prompt),
-                    tokens=entry["emitted"], slot=entry["slot"],
-                    cache_len=clen, cancelled=True,
-                    verify_steps=entry["verify_steps"],
-                    accepted_drafts=entry["accepted_drafts"]))
                 self.stats["cancelled"] += 1
                 rt = request_track(uid)
                 self._tr.end("preempted", rt)
                 self._tr.instant("cancel", rt)
                 self._tr.end("request", rt)
+                self._finish(FinishedRequest(
+                    uid=uid, prompt_len=len(entry["req"].prompt),
+                    tokens=entry["emitted"], slot=entry["slot"],
+                    cache_len=clen, cancelled=True,
+                    verify_steps=entry["verify_steps"],
+                    accepted_drafts=entry["accepted_drafts"]))
                 return True
         return False
 
@@ -763,8 +788,9 @@ class RequestScheduler:
             self._queue.pop(i)
             t_sub = self._t_submit.get(req.uid)
             if t_sub is not None:
+                t_adm = self._now()
                 self.obs.metrics.histogram("sched.queue_wait_s").record(
-                    time.perf_counter() - t_sub)
+                    t_adm - t_sub, t=t_adm)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
             try:
                 # Shared-prefix adoption: walk the pool's prefix index and
@@ -898,12 +924,13 @@ class RequestScheduler:
             return
         adm = self._admitting
         rt = request_track(adm["req"].uid)
-        now = time.perf_counter()
+        now = self._now()
         if "t_chunk" in adm:
             # Pacing: the gap between successive chunk dispatches is the
             # decode latency the admission is overlapping with.
             self.obs.metrics.histogram(
-                "sched.prefill_chunk_interval_s").record(now - adm["t_chunk"])
+                "sched.prefill_chunk_interval_s").record(
+                    now - adm["t_chunk"], t=now)
         adm["t_chunk"] = now
         with self._tr.span("prefill_chunk", rt):
             logits = adm["prefill"].advance()
@@ -940,24 +967,37 @@ class RequestScheduler:
         self._tr.end("admit", rt)
         self._tr.begin("decode", rt)
 
+    def _finish(self, fr: FinishedRequest) -> None:
+        """The single completion sink: every `FinishedRequest` — retired,
+        cancelled mid-admission, or cancelled while preempted — lands here,
+        so `on_finish` observers (the async front end resolving a request's
+        token stream) see every terminal state exactly once.  Scheduler
+        bookkeeping is already consistent when the callback fires: the
+        callback may re-enter `cancel`/`submit`/`pending` safely."""
+        self._finished.append(fr)
+        if self.on_finish is not None:
+            self.on_finish(fr)
+
     def _retire(self, slot: int, cancelled: bool = False) -> None:
         st = self._active.pop(slot)
-        self._finished.append(FinishedRequest(
-            uid=st["req"].uid, prompt_len=len(st["req"].prompt),
-            tokens=st["emitted"], slot=slot,
-            cache_len=self.pool.slot_len(slot), cancelled=cancelled,
-            verify_steps=st["verify_steps"],
-            accepted_drafts=st["accepted_drafts"]))
+        clen = self.pool.slot_len(slot)
         self.pool.release(slot)
         t_sub = st.get("t_submit")
         if t_sub is not None:
+            t_fin = self._now()
             self.obs.metrics.histogram("sched.request_latency_s").record(
-                time.perf_counter() - t_sub)
+                t_fin - t_sub, t=t_fin)
         rt = request_track(st["req"].uid)
         self._tr.end("decode", rt)
         self._tr.instant("finish", rt, tokens=len(st["emitted"]),
                          cancelled=cancelled)
         self._tr.end("request", rt)
+        self._finish(FinishedRequest(
+            uid=st["req"].uid, prompt_len=len(st["req"].prompt),
+            tokens=st["emitted"], slot=slot,
+            cache_len=clen, cancelled=cancelled,
+            verify_steps=st["verify_steps"],
+            accepted_drafts=st["accepted_drafts"]))
 
     def step(self) -> int:
         """One admit+decode cycle; returns the number of tokens emitted."""
@@ -1014,7 +1054,7 @@ class RequestScheduler:
                 self._tokens[clen] = nxt[:, None, None]
             self.pool.set_store(clen, new_store)
 
-        now = time.perf_counter()
+        now = self._now()
         for slot in list(self._active):
             st = self._active.get(slot)
             if st is None:           # retired by an on_token cancel mid-loop
@@ -1037,13 +1077,13 @@ class RequestScheduler:
                 if st.get("t_last") is None:
                     if st.get("t_submit") is not None:
                         m.histogram("sched.ttft_s").record(
-                            now - st["t_submit"])
+                            now - st["t_submit"], t=now)
                     self._tr.instant("first_token",
                                      request_track(st["req"].uid))
                 else:
                     dt = (now - st["t_last"]) / len(block)
                     for _ in block:
-                        m.histogram("sched.inter_token_s").record(dt)
+                        m.histogram("sched.inter_token_s").record(dt, t=now)
                 st["t_last"] = now
             for tok in block:
                 st["emitted"].append(tok)

@@ -58,6 +58,69 @@ class TestPercentile:
         assert 250.0 < h.percentile(50.0) < 750.0
 
 
+class TestWindowedPercentile:
+    """`Histogram.percentile(window_s=..., now=...)` — the live-SLO read
+    the frontend's admission policy is built on."""
+
+    def test_matches_numpy_on_window_slice(self):
+        h = Histogram("ttft")
+        rng = np.random.default_rng(2)
+        vals = rng.exponential(size=64).tolist()
+        for i, v in enumerate(vals):
+            h.record(v, t=float(i))          # one sample per "second"
+        now, window = 63.0, 20.0
+        in_window = vals[43:]                # t in [43, 63]
+        assert h.window_samples(window, now) == in_window
+        for q in (0.0, 50.0, 95.0, 99.0, 100.0):
+            assert h.percentile(q, window_s=window, now=now) == pytest.approx(
+                float(np.percentile(in_window, q)), rel=1e-12, abs=1e-12)
+
+    def test_full_window_equals_lifetime(self):
+        h = Histogram("ttft")
+        for i, v in enumerate((3.0, 1.0, 2.0, 5.0)):
+            h.record(v, t=float(i))
+        assert h.percentile(99.0, window_s=1e9, now=3.0) == h.percentile(99.0)
+
+    def test_empty_window_raises(self):
+        h = Histogram("ttft")
+        h.record(1.0, t=0.0)
+        with pytest.raises(ValueError):
+            h.percentile(50.0, window_s=0.5, now=100.0)   # sample aged out
+
+    def test_window_without_now_raises(self):
+        h = Histogram("ttft")
+        h.record(1.0, t=0.0)
+        with pytest.raises(ValueError, match="explicit `now`"):
+            h.percentile(50.0, window_s=1.0)
+
+    def test_nonpositive_window_raises(self):
+        h = Histogram("ttft")
+        h.record(1.0, t=0.0)
+        with pytest.raises(ValueError):
+            h.window_samples(0.0, now=1.0)
+
+    def test_untimed_records_stamp_monotonic(self):
+        import time
+
+        h = Histogram("ttft")
+        before = time.monotonic()
+        h.record(7.0)                        # no t= — stamps time.monotonic()
+        after = time.monotonic()
+        assert h.window_samples(1e9, now=after) == [7.0]
+        # ...and the stamp really is from the monotonic clock, not zero.
+        assert before <= h._times[0] <= after
+
+    def test_decimation_keeps_times_and_values_paired(self):
+        h = Histogram("ttft", max_samples=64)
+        for i in range(10_000):
+            h.record(float(i), t=float(i))   # value == timestamp
+        assert len(h._times) == len(h._samples)
+        # After heavy decimation a trailing window must return only samples
+        # actually recorded inside it — pairing drift would leak old values.
+        recent = h.window_samples(1000.0, now=9999.0)
+        assert recent and all(v >= 9000.0 - 1e-9 for v in recent)
+
+
 # -- registry + live counter views --------------------------------------------
 
 
